@@ -1,0 +1,75 @@
+"""Shared benchmark infrastructure: fitted-model cache, timing, CSV rows.
+
+Every benchmark module exposes ``run(emit)`` where ``emit(name, us_per_call,
+derived)`` appends one canonical CSV row; modules also print their
+human-readable table (the EXPERIMENTS.md source).
+"""
+
+from __future__ import annotations
+
+import time
+from functools import lru_cache
+
+import numpy as np
+
+from repro.core.decision import DecisionEngine
+from repro.core.fit import build_predictor, fit_app
+from repro.core.simulator import Simulation
+
+# Paper Sec. IV-C data sizes (1400 imgs / 3400 clips, 19 configs) are used in
+# full by default; REDUCED=True trims for quick runs (CI) without changing
+# any methodology.
+REDUCED = False
+
+
+def n_inputs_for(app: str) -> int | None:
+    if not REDUCED:
+        return None  # paper-faithful default (1400 / 3400)
+    return 250
+
+
+def n_tasks() -> int:
+    return 600 if not REDUCED else 200  # paper Sec. VI-A: 600 fresh inputs
+
+
+@lru_cache(maxsize=None)
+def fitted(app: str, seed: int = 0):
+    """(twin, FittedModels) for one paper application, cached per process."""
+    return fit_app(app, seed=seed, n_inputs=n_inputs_for(app))
+
+
+def simulate(app: str, policy_factory, configs, seed: int = 5,
+             quantile: float | None = None, n: int | None = None):
+    """One simulation run; returns (SimulationResult, decision_us)."""
+    twin, models = fitted(app)
+    tasks = twin.workload(n or n_tasks(), seed=seed)
+    pred = build_predictor(models, configs=tuple(configs), quantile=quantile)
+    eng = DecisionEngine(predictor=pred, policy=policy_factory())
+    sim = Simulation(twin, eng, seed=seed + 100)
+    t0 = time.perf_counter()
+    res = sim.run(tasks)
+    wall = time.perf_counter() - t0
+    return res, wall / max(len(tasks), 1) * 1e6
+
+
+class CsvSink:
+    def __init__(self):
+        self.rows: list[tuple[str, float, str]] = []
+
+    def __call__(self, name: str, us_per_call: float, derived):
+        self.rows.append((name, float(us_per_call), str(derived)))
+
+    def dump(self) -> str:
+        out = ["name,us_per_call,derived"]
+        out += [f"{n},{u:.2f},{d}" for n, u, d in self.rows]
+        return "\n".join(out)
+
+
+def fmt_pct(x: float) -> str:
+    return f"{x:.2f}%"
+
+
+def banner(title: str):
+    print("\n" + "=" * 78)
+    print(title)
+    print("=" * 78)

@@ -1,0 +1,51 @@
+"""Fig. 5: total execution cost and #edge executions vs. deadline δ.
+
+Paper claims validated qualitatively per app (best Table-III config set):
+- predicted total cost closely tracks actual cost across δ;
+- IR: edge executions roughly independent of δ (edge is fast for IR);
+- STT: edge executions increase with δ (slow arrivals leave the edge free).
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core.decision import MinCostPolicy
+from benchmarks.common import banner, simulate
+
+BEST = {
+    "IR": ((640, 1024, 1152), [1800, 2200, 2700, 3200, 3700]),
+    "FD": ((1280, 1408, 1664), [3500, 4000, 4500, 5000, 5500]),
+    "STT": ((768, 1152, 1280, 1664), [4500, 5000, 5500, 6000, 6500]),
+}
+
+
+def run(emit):
+    banner("Fig. 5 — total cost (pred vs actual) and edge executions vs δ")
+    for app, (configs, deltas) in BEST.items():
+        print(f"\n[{app}] configs={configs}")
+        print(f"{'δ (s)':>6} {'actual $':>12} {'pred $':>12} {'err%':>6} {'edge#':>6}")
+        errs, edge_counts = [], []
+        for d in deltas:
+            res, us = simulate(app, lambda dd=d: MinCostPolicy(dd), configs,
+                               seed=int(d) % 97)
+            err = res.cost_error_pct
+            errs.append(err)
+            edge_counts.append(res.n_edge)
+            print(f"{d/1e3:>6.1f} {res.total_actual_cost:>12.8f} "
+                  f"{res.total_predicted_cost:>12.8f} {err:>5.1f}% "
+                  f"{res.n_edge:>6d}")
+            emit(f"fig5/{app}/delta={d}", us,
+                 f"cost={res.total_actual_cost:.8f};edge={res.n_edge}")
+        print(f"  mean |cost err| across δ: {np.mean(errs):.2f}%")
+        if app == "STT":
+            assert edge_counts[-1] >= edge_counts[0], \
+                "STT: edge executions should grow with δ"
+
+
+if __name__ == "__main__":
+    from benchmarks.common import CsvSink
+
+    sink = CsvSink()
+    run(sink)
+    print(sink.dump())

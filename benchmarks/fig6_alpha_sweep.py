@@ -1,0 +1,52 @@
+"""Fig. 6: average end-to-end latency and remaining budget vs. α.
+
+Paper claims validated qualitatively (best Table-IV config set per app):
+- increasing α decreases average end-to-end latency (more surplus usable);
+- α = 0 collapses to (mostly) edge execution with queueing blow-up;
+- predicted average latency tracks actual.
+"""
+
+from __future__ import annotations
+
+from repro.core.decision import MinLatencyPolicy
+from benchmarks.common import banner, simulate
+
+BEST = {
+    "IR": ((1408, 1664, 2944), 5.33442e-06),
+    "FD": ((1536, 1664, 2048), 2.96997e-05),
+    "STT": ((1152, 1280, 1664), 3.0747e-05),
+}
+ALPHAS = [0.0, 0.01, 0.02, 0.03, 0.05]
+
+
+def run(emit):
+    banner("Fig. 6 — avg latency and % budget remaining vs α")
+    for app, (configs, c_max) in BEST.items():
+        print(f"\n[{app}] configs={configs} C_max=${c_max:.6g}")
+        print(f"{'α':>5} {'avg actual s':>13} {'avg pred s':>11} "
+              f"{'err%':>6} {'budget rem%':>12} {'edge#':>6}")
+        lats = []
+        for a in ALPHAS:
+            res, us = simulate(
+                app, lambda c=c_max, aa=a: MinLatencyPolicy(c, aa), configs,
+                seed=17)
+            rem = 100.0 - res.pct_budget_used
+            lats.append(res.avg_actual_latency_ms)
+            print(f"{a:>5.2f} {res.avg_actual_latency_ms/1e3:>13.4f} "
+                  f"{res.avg_predicted_latency_ms/1e3:>11.4f} "
+                  f"{res.latency_error_pct:>5.1f}% {rem:>11.1f}% "
+                  f"{res.n_edge:>6d}")
+            emit(f"fig6/{app}/alpha={a}", us,
+                 f"avg_ms={res.avg_actual_latency_ms:.1f};rem={rem:.1f}%")
+        assert lats[-1] <= lats[0] * 1.05, \
+            f"{app}: latency should not grow with α"
+        print(f"  α=0 → α={ALPHAS[-1]}: "
+              f"{lats[0]/1e3:.3f}s → {lats[-1]/1e3:.3f}s")
+
+
+if __name__ == "__main__":
+    from benchmarks.common import CsvSink
+
+    sink = CsvSink()
+    run(sink)
+    print(sink.dump())

@@ -1,0 +1,56 @@
+"""Table I: mean component latencies (ms) — twin calibration check.
+
+Paper Table I (ms):
+          warm   cold   store(cloud)  iotup  store(edge)
+    IR     162    741    549           n/a    579
+    FD     163   1500    584           25     583
+    STT    145   1404    533           27     579
+"""
+
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from repro.core.apps import APPS, AWSTwin
+from benchmarks.common import banner
+
+PAPER = {
+    "IR": dict(warm=162, cold=741, store_cloud=549, iotup=0, store_edge=579),
+    "FD": dict(warm=163, cold=1500, store_cloud=584, iotup=25, store_edge=583),
+    "STT": dict(warm=145, cold=1404, store_cloud=533, iotup=27, store_edge=579),
+}
+
+
+def run(emit):
+    banner("Table I — mean component latencies (ms): twin vs. paper")
+    print(f"{'app':<5} {'component':<12} {'paper':>8} {'twin':>8} {'err%':>7}")
+    n = 2000
+    for app, spec in APPS.items():
+        twin = AWSTwin(spec=spec, seed=1)
+        rng = np.random.default_rng(2)
+        t0 = time.perf_counter()
+        ours = {
+            "warm": np.mean([twin.start_ms(False, rng) for _ in range(n)]),
+            "cold": np.mean([twin.start_ms(True, rng) for _ in range(n)]),
+            "store_cloud": np.mean([twin.store_cloud_ms(rng) for _ in range(n)]),
+            "iotup": np.mean([twin.iotup_ms(rng) for _ in range(n)]),
+            "store_edge": np.mean([twin.store_edge_ms(rng) for _ in range(n)]),
+        }
+        us = (time.perf_counter() - t0) / (5 * n) * 1e6
+        worst = 0.0
+        for comp, ref in PAPER[app].items():
+            got = ours[comp]
+            err = abs(got - ref) / ref * 100 if ref else 0.0
+            worst = max(worst, err)
+            print(f"{app:<5} {comp:<12} {ref:>8.0f} {got:>8.1f} {err:>6.2f}%")
+        emit(f"table1/{app}", us, f"worst_component_err={worst:.2f}%")
+
+
+if __name__ == "__main__":
+    from benchmarks.common import CsvSink
+
+    sink = CsvSink()
+    run(sink)
+    print(sink.dump())

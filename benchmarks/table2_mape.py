@@ -1,0 +1,42 @@
+"""Table II: end-to-end latency MAPE of the fitted models (80:20 split).
+
+Paper Table II (%):   IR      FD      STT
+    Cloud (warm)      25.38   13.24   14.56
+    Edge               2.15    3.78   15.70
+
+The qualitative claims validated: errors land in the paper's band (< ~16% for
+most pipelines); IR-cloud is the hardest (highest variance, paper Fig. 3);
+edge pipelines are more predictable than cloud for the camera apps.
+"""
+
+from __future__ import annotations
+
+import time
+
+from benchmarks.common import banner, fitted
+
+PAPER = {"IR": (25.38, 2.15), "FD": (13.24, 3.78), "STT": (14.56, 15.70)}
+
+
+def run(emit):
+    banner("Table II — end-to-end latency MAPE (%), cloud(warm) / edge")
+    print(f"{'app':<5} {'cloud paper':>12} {'cloud ours':>11} "
+          f"{'edge paper':>11} {'edge ours':>10}")
+    for app in ("IR", "FD", "STT"):
+        t0 = time.perf_counter()
+        _, models = fitted(app)
+        fit_s = time.perf_counter() - t0
+        pc, pe = PAPER[app]
+        print(f"{app:<5} {pc:>11.2f}% {models.cloud_e2e_mape:>10.2f}% "
+              f"{pe:>10.2f}% {models.edge_e2e_mape:>9.2f}%")
+        emit(f"table2/{app}", fit_s * 1e6,
+             f"cloud_mape={models.cloud_e2e_mape:.2f}%"
+             f";edge_mape={models.edge_e2e_mape:.2f}%")
+
+
+if __name__ == "__main__":
+    from benchmarks.common import CsvSink
+
+    sink = CsvSink()
+    run(sink)
+    print(sink.dump())

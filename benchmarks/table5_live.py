@@ -1,0 +1,99 @@
+"""Table V: the live prototype — placement over REAL JAX executions.
+
+The TPU-fleet analog of the paper's AWS prototype run (Sec. VI-B): slice
+configs are real jit-compiled models (cold start = real XLA compile + init);
+the min-latency policy places a Poisson LLM request stream; every latency is
+a wall-clock measurement. Paper headline numbers for FD: 5.65% latency
+prediction error, 86% budget used, 1.33% budget violations, 0.83% warm/cold
+mismatches, and ~3 orders of magnitude vs. edge-only.
+
+Also reproduces the edge-only comparison: the same workload forced through
+the single-slot edge queue.
+"""
+
+from __future__ import annotations
+
+import time
+
+from repro.configs import smoke_config
+from repro.core.decision import MinLatencyPolicy
+from repro.serving.executors import SliceSpec
+from repro.serving.placement import (
+    LivePlacementServer,
+    calibrate_catalog,
+    llm_workload,
+)
+from benchmarks.common import banner
+
+N_REQUESTS = 200
+RATE = 60.0            # requests/s (virtual arrival clock): ~5× edge capacity
+MEAN_TOKENS = 4096.0   # edge ≈ 80 ms/task; slices 2–8× faster
+C_MAX = 2.0e-4         # $/task — the 8-chip slice needs banked surplus
+ALPHA = 0.02
+T_IDL_MS = 4_000.0     # short idle horizon → real warm/cold dynamics
+
+
+def run(emit):
+    banner("Table V — live prototype: placement over real JAX executions")
+    cfg = smoke_config("llama3.2-1b")
+    specs = [SliceSpec("slice2", 2, tokens_per_step=4),
+             SliceSpec("slice4", 4, tokens_per_step=4),
+             SliceSpec("slice8", 8, tokens_per_step=4)]
+    from repro.core.pricing import SlicePricing
+
+    t0 = time.perf_counter()
+    cat = calibrate_catalog(cfg, specs, n_tasks=16, n_cold=2, seed=0,
+                            pricing=SlicePricing(quantum_s=0.1),
+                            mean_tokens=MEAN_TOKENS)
+    calib_s = time.perf_counter() - t0
+    print(f"calibration: {calib_s:.1f}s  "
+          f"cold={cat.start_cold.mean:.0f}±{cat.start_cold.std:.0f} ms  "
+          f"warm={cat.start_warm.mean:.2f} ms")
+
+    tasks = llm_workload(N_REQUESTS, rate_per_s=RATE, seed=1,
+                         mean_tokens=MEAN_TOKENS)
+
+    t0 = time.perf_counter()
+    srv = LivePlacementServer(cat, MinLatencyPolicy(C_MAX, ALPHA),
+                              t_idl_ms=T_IDL_MS)
+    res = srv.serve(tasks)
+    serve_s = time.perf_counter() - t0
+
+    # edge-only comparison (paper Sec. VI-B final paragraph)
+    srv0 = LivePlacementServer(cat, MinLatencyPolicy(0.0, 0.0),
+                               t_idl_ms=T_IDL_MS)
+    res0 = srv0.serve(tasks)
+    speedup = res0.avg_actual_latency_ms / max(res.avg_actual_latency_ms, 1e-9)
+
+    hist = {}
+    for r in res.records:
+        hist[r.target] = hist.get(r.target, 0) + 1
+
+    print(f"\n{'metric':<28} {'paper (FD/AWS)':>15} {'ours (LLM/slices)':>18}")
+    print(f"{'latency pred error':<28} {'5.65 %':>15} "
+          f"{res.latency_error_pct:>17.2f}%")
+    print(f"{'budget violations':<28} {'1.33 %':>15} "
+          f"{res.pct_cost_violated:>17.2f}%")
+    print(f"{'% budget used':<28} {'86 %':>15} {res.pct_budget_used:>17.1f}%")
+    print(f"{'warm/cold mismatches':<28} {'0.83 %':>15} "
+          f"{res.n_warm_cold_mismatches / res.n * 100:>17.2f}%")
+    print(f"{'avg e2e latency':<28} {'1.71 s':>15} "
+          f"{res.avg_actual_latency_ms:>15.1f}ms")
+    print(f"{'edge-only avg latency':<28} {'2404 s':>15} "
+          f"{res0.avg_actual_latency_ms:>15.1f}ms")
+    print(f"{'placement vs edge-only':<28} {'~1400x':>15} {speedup:>16.1f}x")
+    print(f"placement histogram: {dict(sorted(hist.items()))}")
+
+    emit("table5/live", serve_s / N_REQUESTS * 1e6,
+         f"lat_err={res.latency_error_pct:.2f}%"
+         f";mismatch={res.n_warm_cold_mismatches}/{res.n}"
+         f";budget={res.pct_budget_used:.1f}%"
+         f";edge_only_speedup={speedup:.1f}x")
+
+
+if __name__ == "__main__":
+    from benchmarks.common import CsvSink
+
+    sink = CsvSink()
+    run(sink)
+    print(sink.dump())

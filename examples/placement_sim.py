@@ -1,0 +1,45 @@
+"""Sweep study: how the two knobs of the paper's framework behave.
+
+Reproduces Fig. 5 (cost vs deadline δ) and Fig. 6 (latency vs α) behavior for
+one app each, printing ASCII curves. Faster than benchmarks/run.py — good for
+interactive exploration.
+
+    PYTHONPATH=src python examples/placement_sim.py
+"""
+
+import numpy as np
+
+from repro.core.decision import DecisionEngine, MinCostPolicy, MinLatencyPolicy
+from repro.core.fit import build_predictor, fit_app
+from repro.core.simulator import Simulation
+
+
+def bar(x, scale, width=40):
+    n = int(min(x / scale, 1.0) * width)
+    return "#" * n
+
+
+print("fitting STT models...")
+twin, models = fit_app("STT", seed=0, n_inputs=300,
+                       configs=(768, 1152, 1280, 1664))
+tasks = twin.workload(300, seed=5)
+
+print("\nFig.5-style: total cost and edge executions vs deadline δ (STT)")
+print(f"{'δ (s)':>6} {'cost $':>10} {'edge#':>6}")
+for d in (4500, 5000, 5500, 6000, 6500, 7000):
+    pred = build_predictor(models, configs=(768, 1152, 1280, 1664))
+    eng = DecisionEngine(predictor=pred, policy=MinCostPolicy(float(d)))
+    res = Simulation(twin, eng, seed=9).run(tasks)
+    print(f"{d/1e3:>6.1f} {res.total_actual_cost:>10.6f} {res.n_edge:>6d} "
+          f"|{bar(res.n_edge, 300)}")
+
+print("\nFig.6-style: average latency vs α (STT, C_max=$3.07e-5)")
+print(f"{'α':>6} {'avg s':>8} {'budget rem%':>12}")
+for a in (0.0, 0.01, 0.02, 0.03, 0.05, 0.1):
+    pred = build_predictor(models, configs=(1152, 1280, 1664))
+    eng = DecisionEngine(predictor=pred,
+                         policy=MinLatencyPolicy(3.0747e-5, a))
+    res = Simulation(twin, eng, seed=9).run(tasks)
+    rem = 100 - res.pct_budget_used
+    print(f"{a:>6.2f} {res.avg_actual_latency_ms/1e3:>8.3f} {rem:>11.1f}% "
+          f"|{bar(res.avg_actual_latency_ms, 20e3)}")

@@ -1,0 +1,17 @@
+"""repro: Dynamic task placement for edge-cloud serverless platforms (Das et al., 2020),
+rebuilt as a production-grade multi-pod JAX/TPU training + serving framework.
+
+Subpackages (imported lazily — keep this module free of jax backend init so that
+``repro.launch.dryrun`` can set XLA_FLAGS before any device is created):
+
+- ``repro.core``        — the paper's contribution: perf models, Predictor/CIL, DecisionEngine, simulator
+- ``repro.modeling``    — pure-JAX model zoo for the 10 assigned architectures
+- ``repro.configs``     — architecture configs + shape suites + input_specs
+- ``repro.distributed`` — sharding rules, mesh helpers, gradient compression
+- ``repro.training``    — optimizer, train step, checkpointing, fault-tolerant loop
+- ``repro.serving``     — KV cache, serve steps, executor catalog, placement service
+- ``repro.kernels``     — Pallas TPU kernels (flash attention, decode, SSD, linear scan, GBRT)
+- ``repro.launch``      — production mesh, multi-pod dry-run, train/serve entry points
+"""
+
+__version__ = "0.1.0"

@@ -1,0 +1,56 @@
+"""input_specs(): ShapeDtypeStruct stand-ins for every model input.
+
+Weak-type-correct, shardable, zero allocation — the dry-run lowers train/serve
+steps against these. For decode cells the spec includes the KV/state cache of
+``seq_len`` entries plus the one-token batch, per the assignment.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig, ShapeConfig
+from repro.modeling.registry import build_model
+
+
+def _token_batch(cfg: ArchConfig, B: int, S: int, with_targets: bool):
+    specs: dict[str, jax.ShapeDtypeStruct] = {}
+    i32 = jnp.int32
+    f32 = jnp.float32
+    if cfg.family == "audio":
+        specs["frames"] = jax.ShapeDtypeStruct((B, S, cfg.frame_feat_dim), f32)
+        if with_targets:
+            specs["mask"] = jax.ShapeDtypeStruct((B, S), f32)
+            specs["targets"] = jax.ShapeDtypeStruct((B, S), i32)
+        return specs
+    if cfg.family == "vlm":
+        V = cfg.vision_tokens
+        specs["tokens"] = jax.ShapeDtypeStruct((B, S - V), i32)
+        specs["vision_embeds"] = jax.ShapeDtypeStruct((B, V, cfg.vision_feat_dim), f32)
+    else:
+        specs["tokens"] = jax.ShapeDtypeStruct((B, S), i32)
+    if with_targets:
+        specs["targets"] = jax.ShapeDtypeStruct((B, S), i32)
+        specs["loss_mask"] = jax.ShapeDtypeStruct((B, S), f32)
+    return specs
+
+
+def input_specs(cfg: ArchConfig, shape: ShapeConfig):
+    """Returns (kind, specs) where specs matches the step function's signature:
+
+    - train:   {batch}                      for train_step(params, batch)
+    - prefill: {batch}                      for prefill_step(params, batch)
+    - decode:  {batch: {token}, cache: …}   for serve_step(params, cache, batch)
+    """
+    B, S = shape.global_batch, shape.seq_len
+    if shape.kind == "train":
+        return "train", {"batch": _token_batch(cfg, B, S, with_targets=True)}
+    if shape.kind == "prefill":
+        return "prefill", {"batch": _token_batch(cfg, B, S, with_targets=False)}
+    if shape.kind == "decode":
+        model = build_model(cfg)
+        cache = model.cache_shape(B, S)
+        batch = {"token": jax.ShapeDtypeStruct((B,), jnp.int32)}
+        return "decode", {"cache": cache, "batch": batch}
+    raise ValueError(f"unknown shape kind {shape.kind!r}")

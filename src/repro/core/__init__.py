@@ -1,0 +1,51 @@
+"""The paper's primary contribution: dynamic task placement for edge-cloud serverless.
+
+Components (paper section in parens):
+
+- ``perf_models``  — linear/ridge regression, (quantized-)normal component models (IV-A/B)
+- ``gbrt``         — gradient-boosted regression trees, pure JAX/numpy (IV-A compute model)
+- ``pricing``      — AWS Lambda / edge / TPU-slice cost models (II-A)
+- ``cil``          — Container Information List: warm/cold shadow state (V-A)
+- ``predictor``    — Predictor: end-to-end latency+cost prediction per config (V-A)
+- ``decision``     — Decision Engine: min-cost-s.t.-deadline & min-latency-s.t.-cost (III-B, Alg. 1)
+- ``workload``     — Poisson arrival workload generators (II-B)
+- ``apps``         — AWS digital twin for the paper's IR / FD / STT applications (II-B, IV-C)
+- ``simulator``    — event-driven simulation of the full framework (VI-A)
+"""
+
+from repro.core.pricing import LambdaPricing, EdgePricing, SlicePricing
+from repro.core.perf_models import RidgeModel, NormalModel, fit_ridge
+from repro.core.gbrt import GBRT, GBRTConfig
+from repro.core.cil import ContainerInfoList, ContainerRecord
+from repro.core.predictor import Predictor, Prediction
+from repro.core.decision import (
+    DecisionEngine,
+    MinCostPolicy,
+    MinLatencyPolicy,
+    PlacementDecision,
+)
+from repro.core.workload import PoissonWorkload, TaskInput
+from repro.core.simulator import Simulation, SimulationResult
+
+__all__ = [
+    "LambdaPricing",
+    "EdgePricing",
+    "SlicePricing",
+    "RidgeModel",
+    "NormalModel",
+    "fit_ridge",
+    "GBRT",
+    "GBRTConfig",
+    "ContainerInfoList",
+    "ContainerRecord",
+    "Predictor",
+    "Prediction",
+    "DecisionEngine",
+    "MinCostPolicy",
+    "MinLatencyPolicy",
+    "PlacementDecision",
+    "PoissonWorkload",
+    "TaskInput",
+    "Simulation",
+    "SimulationResult",
+]

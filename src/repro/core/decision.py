@@ -1,0 +1,153 @@
+"""The Decision Engine (paper Sec. III-B, V-B, Alg. 1).
+
+Two placement policies:
+
+- ``MinCostPolicy(deadline_ms)``: minimize execution cost subject to a per-task
+  end-to-end deadline δ. Feasible set M = targets whose *predicted* latency
+  (edge latency includes predicted FIFO queue wait) meets δ; pick the cheapest.
+  If M is empty, the task is queued on the edge to save cost (paper Sec. V-B).
+
+- ``MinLatencyPolicy(c_max, alpha)``: minimize latency subject to a per-task
+  budget C(k) ≤ C_max + α·surplus(k), where surplus(k) = Σ_{i<k}(C_max − C(i))
+  is the banked unused budget (paper Eqn. 4, Alg. 1). The edge costs $0, so M
+  is never empty and surplus never goes negative.
+
+Beyond-paper extension: ``HedgedPolicy`` wraps MinLatency and duplicates the
+dispatch to a second config when the predicted tail latency of the primary
+exceeds a hedging threshold (classic tail-at-scale hedging; evaluated in
+benchmarks as a beyond-paper experiment).
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+from repro.core.predictor import Prediction, Predictor
+
+
+@dataclass(frozen=True)
+class PlacementDecision:
+    task_idx: int
+    target: str
+    prediction: Prediction
+    feasible: bool  # False when min-cost fell back to the edge queue
+    allowed_cost: float  # budget in force at decision time (min-latency)
+    hedge_target: str | None = None
+    hedge_prediction: Prediction | None = None
+
+
+class MinCostPolicy:
+    """Minimize cost s.t. per-task deadline δ."""
+
+    def __init__(self, deadline_ms: float):
+        self.deadline_ms = deadline_ms
+
+    def choose(self, preds: dict[str, Prediction], edge_name: str = "edge"):
+        feasible = {n: p for n, p in preds.items() if p.latency_ms <= self.deadline_ms}
+        if not feasible:
+            # No configuration satisfies the deadline: queue on the edge to
+            # save cost (paper Sec. V-B).
+            return edge_name, False, float("inf")
+        name = min(feasible, key=lambda n: (feasible[n].cost, feasible[n].latency_ms))
+        return name, True, float("inf")
+
+    def observe(self, chosen: Prediction) -> None:  # stateless
+        pass
+
+
+class MinLatencyPolicy:
+    """Minimize latency s.t. cost ≤ C_max + α·surplus (Alg. 1)."""
+
+    def __init__(self, c_max: float, alpha: float = 0.0):
+        if not 0.0 <= alpha <= 1.0:
+            raise ValueError(f"alpha must be in [0,1], got {alpha}")
+        self.c_max = c_max
+        self.alpha = alpha
+        self.surplus = 0.0
+
+    @property
+    def allowed(self) -> float:
+        return self.c_max + self.alpha * self.surplus
+
+    def choose(self, preds: dict[str, Prediction], edge_name: str = "edge"):
+        allowed = self.allowed
+        feasible = {n: p for n, p in preds.items() if p.cost <= allowed}
+        # λ_edge costs 0, so feasible is never empty when an edge target exists.
+        if not feasible:
+            feasible = {edge_name: preds[edge_name]} if edge_name in preds else preds
+        name = min(feasible, key=lambda n: (feasible[n].latency_ms, feasible[n].cost))
+        return name, True, allowed
+
+    def observe(self, chosen: Prediction) -> None:
+        # Line 9 of Alg. 1: surplus accumulates the *predicted* unused budget.
+        self.surplus += self.c_max - chosen.cost
+
+
+@dataclass
+class DecisionEngine:
+    """Binds a Predictor to a placement policy; one ``place()`` call per input."""
+
+    predictor: Predictor
+    policy: object
+    edge_name: str = "edge"
+    decisions: list = field(default_factory=list)
+
+    def place(self, task, now: float, edge_queue_wait_ms: float = 0.0) -> PlacementDecision:
+        preds = self.predictor.predict(task, now, edge_queue_wait_ms)
+        name, feasible, allowed = self.policy.choose(preds, self.edge_name)
+        chosen = preds[name]
+        self.policy.observe(chosen)
+        self.predictor.update_cil(name, now, chosen)
+        d = PlacementDecision(
+            task_idx=getattr(task, "idx", -1),
+            target=name,
+            prediction=chosen,
+            feasible=feasible,
+            allowed_cost=allowed,
+        )
+        self.decisions.append(d)
+        return d
+
+
+class HedgedPolicy:
+    """Beyond-paper: hedge high-tail-risk placements with a backup dispatch.
+
+    Wraps MinLatencyPolicy. If the chosen target's predicted latency exceeds
+    ``hedge_threshold_ms`` and a second, faster-on-tail config fits the
+    *remaining* budget, a duplicate dispatch is issued; the effective latency
+    is the min of the two (first-completion-wins).
+    """
+
+    def __init__(self, inner: MinLatencyPolicy, hedge_threshold_ms: float):
+        self.inner = inner
+        self.hedge_threshold_ms = hedge_threshold_ms
+        self.last_hedge: tuple[str, Prediction] | None = None
+
+    @property
+    def surplus(self) -> float:
+        return self.inner.surplus
+
+    @property
+    def allowed(self) -> float:
+        return self.inner.allowed
+
+    def choose(self, preds: dict[str, Prediction], edge_name: str = "edge"):
+        name, feasible, allowed = self.inner.choose(preds, edge_name)
+        self.last_hedge = None
+        primary = preds[name]
+        if primary.latency_ms > self.hedge_threshold_ms:
+            remaining = allowed - primary.cost
+            candidates = {
+                n: p for n, p in preds.items()
+                if n != name and p.cost <= remaining and p.latency_ms < primary.latency_ms * 1.5
+            }
+            if candidates:
+                backup = min(candidates, key=lambda n: candidates[n].latency_ms)
+                self.last_hedge = (backup, candidates[backup])
+        return name, feasible, allowed
+
+    def observe(self, chosen: Prediction) -> None:
+        self.inner.observe(chosen)
+        if self.last_hedge is not None:
+            # the hedge's cost also draws down the budget bank
+            self.inner.surplus -= self.last_hedge[1].cost

@@ -1,0 +1,184 @@
+"""The Predictor (paper Sec. V-A).
+
+Given an input, the Predictor returns predicted end-to-end latency and cost for
+every execution target: the N cloud configurations Φ = {λ_m} and the edge
+executor λ_edge. Cold-vs-warm start is decided by consulting the CIL. The
+Decision Engine then calls ``update_cil`` with the chosen configuration.
+
+Targets are pluggable so the same Predictor drives both the AWS reproduction
+(LambdaTarget/EdgeTarget, models from Sec. IV) and the TPU-fleet adaptation
+(``repro.serving.placement.SliceTarget``).
+
+The ``quantile`` option is a beyond-paper extension (the paper's stated future
+work): predict a latency quantile instead of the mean, so placement can hedge
+against the high variance the paper observed in cloud pipelines.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Mapping, Protocol
+
+from repro.core.cil import ContainerInfoList
+from repro.core.perf_models import NormalModel, RidgeModel, _norm_ppf
+from repro.core.pricing import EdgePricing, LambdaPricing
+
+EDGE = "edge"
+
+
+@dataclass(frozen=True)
+class Prediction:
+    target: str
+    latency_ms: float
+    cost: float
+    cold: bool
+    components: Mapping[str, float]
+
+    @property
+    def comp_ms(self) -> float:
+        return self.components.get("comp", 0.0)
+
+
+class ExecutionTarget(Protocol):
+    """A place a task can run: a cloud config λ_m, the edge device, a TPU slice."""
+
+    name: str
+    is_edge: bool
+
+    def predict_components(self, task, cold: bool, quantile: float | None) -> dict[str, float]:
+        """Latency components in ms. Must include a 'comp' entry."""
+        ...
+
+    def cost(self, comp_ms: float) -> float:
+        ...
+
+    def occupancy_ms(self, components: dict[str, float]) -> float:
+        """How long the executor/container is held busy (for CIL bookkeeping)."""
+        ...
+
+
+@dataclass
+class LambdaTarget:
+    """Cloud pipeline target: T_c(k) = upld(k) + start(m) + comp(k,m) + store(k)."""
+
+    name: str
+    memory_mb: float
+    upld_model: RidgeModel
+    start_warm: NormalModel
+    start_cold: NormalModel
+    comp_model: object  # GBRT over features (size, memory_mb)
+    store_model: NormalModel
+    pricing: LambdaPricing = field(default_factory=LambdaPricing)
+    comp_std_frac: float = 0.0  # relative comp std for quantile prediction
+    is_edge: bool = False
+
+    def predict_components(self, task, cold: bool, quantile: float | None = None) -> dict[str, float]:
+        import numpy as np
+
+        start = self.start_cold if cold else self.start_warm
+        comp = float(self.comp_model.predict(np.array([[task.size, self.memory_mb]]))[0])
+        if quantile is not None:
+            z = _norm_ppf(quantile)
+            comp = comp * (1.0 + z * self.comp_std_frac)
+            start_ms = start.predict_quantile(quantile)
+            store_ms = self.store_model.predict_quantile(quantile)
+        else:
+            start_ms = start.predict()
+            store_ms = self.store_model.predict()
+        return {
+            "upld": max(float(self.upld_model.predict(task.bytes)), 0.0),
+            "start": max(start_ms, 0.0),
+            "comp": max(comp, 0.0),
+            "store": max(store_ms, 0.0),
+        }
+
+    def cost(self, comp_ms: float) -> float:
+        return self.pricing.cost(comp_ms, self.memory_mb)
+
+    def occupancy_ms(self, components: dict[str, float]) -> float:
+        # The container is held from dispatch until the function returns:
+        # upload + start + compute (storage happens after release).
+        return components["upld"] + components["start"] + components["comp"]
+
+
+@dataclass
+class EdgeTarget:
+    """Edge pipeline target: T_e(k) = comp(k) + iotup(k) + store(k) (+ queue wait)."""
+
+    comp_model: RidgeModel
+    iotup_model: NormalModel
+    store_model: NormalModel
+    pricing: EdgePricing = field(default_factory=EdgePricing)
+    comp_std_frac: float = 0.0
+    name: str = EDGE
+    is_edge: bool = True
+
+    def predict_components(self, task, cold: bool = False, quantile: float | None = None) -> dict[str, float]:
+        comp = float(self.comp_model.predict(task.size))
+        if quantile is not None:
+            z = _norm_ppf(quantile)
+            comp = comp * (1.0 + z * self.comp_std_frac)
+            iot = self.iotup_model.predict_quantile(quantile)
+            store = self.store_model.predict_quantile(quantile)
+        else:
+            iot = self.iotup_model.predict()
+            store = self.store_model.predict()
+        return {"comp": max(comp, 0.0), "iotup": max(iot, 0.0), "store": max(store, 0.0)}
+
+    def cost(self, comp_ms: float) -> float:
+        return self.pricing.cost(comp_ms)
+
+    def occupancy_ms(self, components: dict[str, float]) -> float:
+        return components["comp"]
+
+
+@dataclass
+class Predictor:
+    """predict() + update_cil(), exactly the two methods of paper Sec. V-A."""
+
+    cloud_targets: list
+    edge_target: object | None
+    cil: ContainerInfoList = field(default_factory=ContainerInfoList)
+    quantile: float | None = None  # None = paper-faithful mean prediction
+
+    def predict(self, task, now: float, edge_queue_wait_ms: float = 0.0) -> dict[str, Prediction]:
+        """Predicted end-to-end latency and cost for every target."""
+        self.cil.reap(now)
+        out: dict[str, Prediction] = {}
+        for tgt in self.cloud_targets:
+            cold = not self.cil.will_warm_start(tgt.name, now)
+            comps = tgt.predict_components(task, cold, self.quantile)
+            latency = sum(comps.values())
+            out[tgt.name] = Prediction(
+                target=tgt.name,
+                latency_ms=latency,
+                cost=tgt.cost(comps["comp"]),
+                cold=cold,
+                components=comps,
+            )
+        if self.edge_target is not None:
+            comps = self.edge_target.predict_components(task, False, self.quantile)
+            latency = edge_queue_wait_ms + sum(comps.values())
+            comps = dict(comps, queue=edge_queue_wait_ms)
+            out[self.edge_target.name] = Prediction(
+                target=self.edge_target.name,
+                latency_ms=latency,
+                cost=self.edge_target.cost(comps["comp"]),
+                cold=False,
+                components=comps,
+            )
+        return out
+
+    def update_cil(self, chosen: str, now: float, prediction: Prediction) -> None:
+        """Record the chosen placement (paper: Predictor.updateCIL)."""
+        if self.edge_target is not None and chosen == self.edge_target.name:
+            return  # edge executor state is tracked by its FIFO queue, not the CIL
+        tgt = self._target(chosen)
+        completion = now + tgt.occupancy_ms(dict(prediction.components))
+        self.cil.record_dispatch(chosen, now, completion)
+
+    def _target(self, name: str):
+        for t in self.cloud_targets:
+            if t.name == name:
+                return t
+        raise KeyError(f"unknown target {name!r}")

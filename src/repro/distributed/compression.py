@@ -1,0 +1,86 @@
+"""Gradient compression for cross-pod data parallelism.
+
+At multi-pod scale the DP all-reduce over the (slow) pod interconnect is the
+marginal collective; compressing what crosses it is a standard lever. Two
+composable schemes, both with error feedback so compression error accumulates
+into the next step instead of being lost (Stich et al.; 1-bit Adam lineage):
+
+- ``topk``: keep the top-k fraction of entries by magnitude per tensor;
+- ``int8``: per-tensor scale, stochastic rounding.
+
+``compress_decompress`` is the in-graph simulation used by the train step:
+grad -> compress -> decompress + error-feedback state. On a real fleet the
+compressed representation is what crosses the pod axis; the roofline benefit
+is byte-count, which ``compressed_bytes`` reports for EXPERIMENTS.md.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclass(frozen=True)
+class CompressionConfig:
+    scheme: str = "none"  # "none" | "topk" | "int8"
+    topk_frac: float = 0.05
+    seed: int = 0
+
+
+def init_error_state(params):
+    return jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+
+
+def _topk_cd(g, frac: float):
+    """Top-|g| sparsification: returns the dense decompressed tensor."""
+    flat = g.reshape(-1)
+    k = max(int(np.ceil(flat.shape[0] * frac)), 1)
+    _, idx = jax.lax.top_k(jnp.abs(flat), k)
+    mask = jnp.zeros_like(flat).at[idx].set(1.0)
+    return (flat * mask).reshape(g.shape)
+
+
+def _int8_cd(g, key):
+    scale = jnp.maximum(jnp.max(jnp.abs(g)), 1e-12) / 127.0
+    scaled = g / scale
+    noise = jax.random.uniform(key, g.shape, minval=-0.5, maxval=0.5)
+    q = jnp.clip(jnp.round(scaled + noise), -127, 127).astype(jnp.int8)
+    return q.astype(jnp.float32) * scale
+
+
+def compress_decompress(grads, error_state, cfg: CompressionConfig, step=0):
+    """Error-feedback compression: returns (decompressed grads, new error state)."""
+    if cfg.scheme == "none":
+        return grads, error_state
+
+    flat_g, treedef = jax.tree.flatten(grads)
+    flat_e = treedef.flatten_up_to(error_state)
+    out_g, out_e = [], []
+    for i, (g, e) in enumerate(zip(flat_g, flat_e)):
+        corrected = g.astype(jnp.float32) + e
+        if cfg.scheme == "topk":
+            d = _topk_cd(corrected, cfg.topk_frac)
+        elif cfg.scheme == "int8":
+            key = jax.random.fold_in(jax.random.key(cfg.seed), step * 10_000 + i)
+            d = _int8_cd(corrected, key)
+        else:
+            raise ValueError(f"unknown compression scheme {cfg.scheme!r}")
+        out_g.append(d.astype(g.dtype))
+        out_e.append(corrected - d)
+    return treedef.unflatten(out_g), treedef.unflatten(out_e)
+
+
+def compressed_bytes(params, cfg: CompressionConfig) -> int:
+    """Bytes that cross the pod axis per step under this scheme (for §Roofline)."""
+    n = sum(int(np.prod(p.shape)) for p in jax.tree.leaves(params))
+    if cfg.scheme == "none":
+        return n * 4
+    if cfg.scheme == "topk":
+        k = int(np.ceil(n * cfg.topk_frac))
+        return k * (4 + 4)  # value + index
+    if cfg.scheme == "int8":
+        return n * 1 + 4
+    raise ValueError(cfg.scheme)

@@ -1,0 +1,45 @@
+"""Elastic re-sharding: restore a checkpoint onto a *different* mesh.
+
+Checkpoints are saved host-side as full (unsharded) arrays
+(repro.training.checkpoint), so elasticity reduces to: load → build the new
+mesh's shardings from the same logical axes → ``jax.device_put`` each array
+with its new NamedSharding. Scale 256→512 chips (or degrade 512→256 after
+losing a pod) without touching the checkpoint format.
+
+``reshard_tree`` is also the restart path after a failed pod: the supervisor
+re-invokes the launcher with the surviving mesh and resumes from LATEST.
+"""
+
+from __future__ import annotations
+
+import jax
+
+from repro.distributed.sharding import make_rules, param_shardings
+
+
+def reshard_tree(tree: dict, specs: dict, cfg, mesh, fsdp: bool = False) -> dict:
+    """Place a flat {path: host_array} tree onto ``mesh`` per logical axes."""
+    rules = make_rules(cfg, mesh, fsdp=fsdp)
+    shardings = param_shardings(specs, rules, mesh)
+    out = {}
+    for path, arr in tree.items():
+        s = shardings.get(path)
+        out[path] = jax.device_put(arr, s) if s is not None else jax.device_put(arr)
+    return out
+
+
+def elastic_restore(ckpt_dir: str, model, cfg, mesh, fsdp: bool = False):
+    """restore_latest + reshard onto ``mesh``. Returns (step, params, state)."""
+    from repro.training import checkpoint as ckpt
+
+    resumed = ckpt.restore_latest(ckpt_dir)
+    if resumed is None:
+        return None
+    step, tree = resumed
+    specs = model.param_specs()
+    params = reshard_tree(tree["params"], specs, cfg, mesh, fsdp=fsdp)
+    # optimizer moments mirror the parameter shardings
+    state = tree["state"]
+    state["opt"]["m"] = reshard_tree(state["opt"]["m"], specs, cfg, mesh, fsdp=fsdp)
+    state["opt"]["v"] = reshard_tree(state["opt"]["v"], specs, cfg, mesh, fsdp=fsdp)
+    return step, params, state

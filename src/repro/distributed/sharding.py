@@ -1,0 +1,180 @@
+"""Logical-axis sharding: one rules table maps logical axis names to mesh axes.
+
+MaxText-style: every parameter (via ``ParamSpec.axes``) and key activation (via
+``shard(x, axes)`` calls inside model code) is annotated with *logical* names.
+``make_rules(cfg, mesh)`` resolves those names to physical mesh axes, checking
+divisibility per architecture — e.g. gemma-2b's 8 query heads cannot shard over
+a 16-way model axis, so "heads" resolves to None (replicated) there and the
+d_ff/vocab axes carry the model parallelism instead.
+
+``shard()`` is a no-op outside an active sharding context, so single-device
+smoke tests run the exact same model code.
+"""
+
+from __future__ import annotations
+
+import contextlib
+import threading
+from dataclasses import dataclass
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+_STATE = threading.local()
+
+
+@dataclass(frozen=True)
+class ShardingCtx:
+    mesh: Mesh
+    rules: dict[str, tuple[str, ...] | None]
+
+
+def _axis_size(mesh: Mesh, axes) -> int:
+    if axes is None:
+        return 1
+    size = 1
+    for a in axes:
+        size *= mesh.shape[a]
+    return size
+
+
+def make_rules(cfg, mesh: Mesh, fsdp: bool = False,
+               serving: bool = False) -> dict[str, tuple[str, ...] | None]:
+    """Resolve logical axis names to mesh axes for one architecture.
+
+    ``serving=True`` + ``cfg.serve_2d_ffn`` (§Perf): FFN / expert-FFN weight
+    dims shard over model×data so giant serving weights are fully distributed
+    WITHOUT per-step FSDP all-gathers — the partial-sum all-reduce moves to
+    the (tiny at decode) activations instead of the weights.
+    """
+    data_axes = tuple(a for a in ("pod", "data") if a in mesh.shape)
+    model_ax = ("model",) if "model" in mesh.shape else None
+    m = _axis_size(mesh, model_ax)
+
+    def if_div(dim: int, axes):
+        return axes if axes and dim % _axis_size(mesh, axes) == 0 else None
+
+    kv_heads = if_div(getattr(cfg, "n_kv_heads", 0) or 0, model_ax)
+
+    # "rnn" names several related recurrent widths; shard only if every tensor
+    # dim carrying it divides the model axis. For SSM that is the in_proj
+    # output (2·d_inner + 2·ds + nh), the conv channel (d_inner + 2·ds) and
+    # d_inner itself; for Griffin it is d_rnn.
+    rnn_dims: list[int] = []
+    if getattr(cfg, "d_rnn", 0):
+        rnn_dims = [cfg.d_rnn]
+    elif getattr(cfg, "ssm_state", 0):
+        d_inner = cfg.ssm_expand * cfg.d_model
+        nh = d_inner // cfg.ssm_head_dim
+        ds = cfg.ssm_state
+        rnn_dims = [2 * d_inner + 2 * ds + nh, d_inner + 2 * ds, d_inner]
+    rnn_ok = bool(rnn_dims) and all(
+        d % _axis_size(mesh, model_ax) == 0 for d in rnn_dims)
+
+    rules: dict[str, tuple[str, ...] | None] = {
+        "batch": data_axes or None,
+        "embed": None,
+        "embed_fsdp": None,
+        "heads": if_div(cfg.n_heads, model_ax),
+        "kv_heads": kv_heads,
+        "head_dim": None,
+        "mlp": if_div(cfg.d_ff or 0, model_ax),
+        "vocab": if_div(cfg.vocab, model_ax),
+        "experts": if_div(getattr(cfg, "n_experts", 0) or 0, model_ax),
+        # expert-internal FF: shard over model ONLY when experts cannot
+        # (otherwise the same mesh axis would appear twice in one spec)
+        "expert_mlp": (
+            None if if_div(getattr(cfg, "n_experts", 0) or 0, model_ax)
+            else if_div(getattr(cfg, "d_ff_expert", 0) or 0, model_ax)),
+        "rnn_blocks": if_div(getattr(cfg, "rglru_block_gates", 0) or 0,
+                             model_ax),
+        # activation counterpart of "mlp": always model-only (activations are
+        # already batch-sharded over the data axes)
+        "mlp_act": if_div(cfg.d_ff or 0, model_ax),
+        "rnn": model_ax if rnn_ok else None,
+        "ssm_heads": if_div(
+            (cfg.ssm_expand * cfg.d_model // cfg.ssm_head_dim)
+            if getattr(cfg, "ssm_state", 0) else 0, model_ax),
+        "layers": None,
+        # activation sequence axis: used only by the cp_attn / sp_acts §Perf
+        # knobs (gated in model code); sequence lengths are model-axis aligned
+        "seq": model_ax,
+        # GQA/MQA with few KV heads: shard the KV-cache *sequence* axis over
+        # the model axis instead (flash-decode style); GSPMD inserts the
+        # softmax-denominator all-reduce.
+        "kv_seq": model_ax if (model_ax and kv_heads is None
+                               and (getattr(cfg, "n_kv_heads", 0) or 0) > 0)
+                  else None,
+    }
+    if serving and getattr(cfg, "serve_2d_ffn", False):
+        mlp2d = (model_ax or ()) + data_axes
+        if cfg.d_ff and cfg.d_ff % _axis_size(mesh, mlp2d) == 0:
+            rules["mlp"] = mlp2d
+        if rules["experts"] is not None:
+            dfe = getattr(cfg, "d_ff_expert", 0) or 0
+            rules["expert_mlp"] = if_div(dfe, data_axes)
+    elif fsdp:
+        # FSDP: shard the d_model axis of weights over the data axes too
+        # (params are gathered just-in-time by GSPMD; optimizer state stays sharded).
+        rules["embed"] = if_div(cfg.d_model, data_axes)
+        rules["embed_fsdp"] = rules["embed"]
+    return rules
+
+
+def spec_for(axes, rules) -> P:
+    parts = []
+    for a in axes:
+        r = rules.get(a) if a is not None else None
+        if r is None:
+            parts.append(None)
+        elif len(r) == 1:
+            parts.append(r[0])
+        else:
+            parts.append(tuple(r))
+    return P(*parts)
+
+
+def param_shardings(specs, rules, mesh) -> dict:
+    """NamedShardings for a ``param_specs`` dict."""
+    return {
+        path: NamedSharding(mesh, spec_for(s.axes, rules))
+        for path, s in specs.items()
+    }
+
+
+# ------------------------------------------------------------------ context
+@contextlib.contextmanager
+def sharding_ctx(mesh: Mesh, rules: dict):
+    prev = getattr(_STATE, "ctx", None)
+    _STATE.ctx = ShardingCtx(mesh=mesh, rules=rules)
+    try:
+        yield
+    finally:
+        _STATE.ctx = prev
+
+
+def current_ctx() -> ShardingCtx | None:
+    return getattr(_STATE, "ctx", None)
+
+
+def shard(x, axes):
+    """Annotate activation ``x`` with logical axes; no-op without a context."""
+    ctx = current_ctx()
+    if ctx is None:
+        return x
+    spec = spec_for(axes, ctx.rules)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(ctx.mesh, spec))
+
+
+def axis_ways(logical: str) -> int:
+    """Mesh size a logical axis resolves to (0 outside a sharding context)."""
+    ctx = current_ctx()
+    if ctx is None:
+        return 0
+    r = ctx.rules.get(logical)
+    if not r:
+        return 0
+    size = 1
+    for a in r:
+        size *= ctx.mesh.shape[a]
+    return size

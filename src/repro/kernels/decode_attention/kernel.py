@@ -1,0 +1,111 @@
+"""Flash-decode Pallas TPU kernel: one query token vs. a length-masked KV cache.
+
+Decode attention is memory-bound: per step it streams the whole KV cache from
+HBM once and does O(S·D) FLOPs. The kernel therefore:
+
+- iterates kv blocks as the innermost sequential grid axis, carrying the
+  online-softmax state (m, l, acc) in VMEM scratch — one HBM pass, no
+  (S,)-sized intermediates;
+- masks cache slots ``>= length_b`` (per-batch valid lengths; ring-buffer
+  caches pass length = capacity once full);
+- skips kv blocks entirely past every valid slot (``pl.when``), so short
+  sequences in a long cache don't pay for dead blocks;
+- the query tile is (1, D) per (batch, head) — decode has no q parallelism to
+  tile, so batch×heads is the parallel grid surface (matching TPU cores via
+  the megacore grid split on real hardware).
+
+lengths ride in SMEM (scalar memory): they gate control flow, not vectors.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -2.0e38
+
+
+def _dec_kernel(len_ref, q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
+                scale: float, bk: int, nk: int):
+    b = pl.program_id(0)
+    ki = pl.program_id(2)
+    length = len_ref[b]
+
+    @pl.when(ki == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    k_start = ki * bk
+
+    @pl.when(k_start < length)
+    def _compute():
+        q = q_ref[0, 0].astype(jnp.float32)  # (1, d)
+        k = k_ref[0, 0].astype(jnp.float32)  # (bk, d)
+        v = v_ref[0, 0].astype(jnp.float32)  # (bk, d)
+        s = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32) * scale  # (1, bk)
+        slot = k_start + jax.lax.broadcasted_iota(jnp.int32, (1, bk), 1)
+        s = jnp.where(slot < length, s, NEG_INF)
+
+        m_prev = m_ref[...]
+        m_cur = jnp.max(s, axis=-1, keepdims=True)
+        m_new = jnp.maximum(m_prev, m_cur)
+        p = jnp.exp(s - m_new)
+        alpha = jnp.exp(m_prev - m_new)
+        l_ref[...] = alpha * l_ref[...] + jnp.sum(p, axis=-1, keepdims=True)
+        m_ref[...] = m_new
+        acc_ref[...] = acc_ref[...] * alpha + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+
+    @pl.when(ki == nk - 1)
+    def _finalize():
+        l = jnp.maximum(l_ref[...], 1e-30)
+        o_ref[0, 0] = (acc_ref[...] / l).astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("block_k", "interpret"))
+def decode_attention_bhd(q, k, v, lengths, *, block_k: int = 256,
+                         interpret: bool = True):
+    """q: (B, H, 1, D); k/v: (B, Hkv, S, D); lengths: (B,) int32 -> (B, H, 1, D)."""
+    B, H, _, D = q.shape
+    Hkv, S = k.shape[1], k.shape[2]
+    group = H // Hkv
+    bk = min(block_k, S)
+    assert S % bk == 0, (S, bk)
+    nk = S // bk
+    scale = 1.0 / (D ** 0.5)
+
+    kernel = functools.partial(_dec_kernel, scale=scale, bk=bk, nk=nk)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(B, H, nk),
+        in_specs=[
+            # index maps receive the scalar-prefetch ref as a trailing arg
+            pl.BlockSpec((1, 1, 1, D), lambda b, h, ki, lens: (b, h, 0, 0)),
+            pl.BlockSpec((1, 1, bk, D),
+                         lambda b, h, ki, lens: (b, h // group, ki, 0)),
+            pl.BlockSpec((1, 1, bk, D),
+                         lambda b, h, ki, lens: (b, h // group, ki, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, 1, D), lambda b, h, ki, lens: (b, h, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((1, 1), jnp.float32),
+            pltpu.VMEM((1, 1), jnp.float32),
+            pltpu.VMEM((1, D), jnp.float32),
+        ],
+    )
+    return pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((B, H, 1, D), q.dtype),
+        interpret=interpret,
+    )(lengths.astype(jnp.int32), q, k, v)

@@ -1,0 +1,23 @@
+"""Pure-jnp oracle for decode_attention (naive length-masked attention)."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+NEG_INF = -2.0e38
+
+
+def decode_attention_ref(q, k_cache, v_cache, lengths):
+    """q: (B, 1, H, D); caches: (B, S, Hkv, D); lengths: (B,) -> (B, 1, H, D)."""
+    B, _, H, D = q.shape
+    S, Hkv = k_cache.shape[1], k_cache.shape[2]
+    G = H // Hkv
+    qf = q.astype(jnp.float32).reshape(B, 1, Hkv, G, D)
+    s = jnp.einsum("bqkgd,bskd->bkgqs", qf, k_cache.astype(jnp.float32))
+    s = s / (D ** 0.5)
+    valid = jnp.arange(S)[None, :] < lengths[:, None]  # (B, S)
+    s = jnp.where(valid[:, None, None, None, :], s, NEG_INF)
+    p = jnp.exp(s - jnp.max(s, axis=-1, keepdims=True))
+    p = p / jnp.maximum(jnp.sum(p, axis=-1, keepdims=True), 1e-30)
+    out = jnp.einsum("bkgqs,bskd->bqkgd", p, v_cache.astype(jnp.float32))
+    return out.reshape(B, 1, H, D).astype(q.dtype)

@@ -1,0 +1,138 @@
+"""Flash attention Pallas TPU kernel (causal / local-window, GQA).
+
+TPU adaptation of the flash-attention insight (the paper-of-record GPU
+algorithm re-blocked for the TPU memory hierarchy):
+
+- grid = (batch, q_heads, num_q_blocks, num_kv_blocks); the kv axis is the
+  innermost, **sequential** grid dimension, so the online-softmax state
+  (m, l, acc) lives in VMEM scratch that persists across kv steps — the TPU
+  equivalent of a CUDA thread-block's shared-memory accumulator;
+- Q/K/V blocks are staged HBM→VMEM by BlockSpec index maps. GQA is expressed
+  in the K/V index maps (``h // group``) so K/V blocks are fetched once per
+  query-head group rather than materialized repeated;
+- block shapes default to (128, head_dim): 128 is the MXU systolic dimension,
+  and three (128, D) tiles + (128, 128) scores fit comfortably in the ~16 MB
+  VMEM budget for every head_dim in the model zoo (64–256);
+- fully-masked (q, kv) block pairs are *skipped* (``pl.when``): for causal
+  attention this halves compute; for local windows it makes long-context
+  prefill cost O(S·W) instead of O(S²) — this is the banded-attention
+  optimization recorded in EXPERIMENTS.md §Perf.
+
+Softmax statistics are fp32 regardless of input dtype (bf16-safe).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -2.0e38  # fp32-representable; avoids -inf NaN hazards in exp
+
+
+def _fa_kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
+               scale: float, causal: bool, window: int, bq: int, bk: int,
+               nk: int):
+    qi = pl.program_id(2)
+    ki = pl.program_id(3)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q_start = qi * bq
+    k_start = ki * bk
+
+    # --- block-level skip: is any (q, k) pair in this tile unmasked? --------
+    live = jnp.bool_(True)
+    if causal:
+        # need k_start <= q_end
+        live &= k_start <= q_start + bq - 1
+    if window and window > 0:
+        # need k_end > q_start - window
+        live &= k_start + bk - 1 > q_start - window
+
+    @pl.when(live)
+    def _compute():
+        q = q_ref[0, 0].astype(jnp.float32)  # (bq, d)
+        k = k_ref[0, 0].astype(jnp.float32)  # (bk, d)
+        v = v_ref[0, 0].astype(jnp.float32)  # (bk, d)
+        s = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32) * scale  # (bq, bk)
+
+        q_pos = q_start + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
+        k_pos = k_start + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+        mask = jnp.bool_(True)
+        if causal:
+            mask &= k_pos <= q_pos
+        if window and window > 0:
+            mask &= k_pos > q_pos - window
+        s = jnp.where(mask, s, NEG_INF)
+
+        m_prev = m_ref[...]  # (bq, 1)
+        l_prev = l_ref[...]
+        m_cur = jnp.max(s, axis=-1, keepdims=True)
+        m_new = jnp.maximum(m_prev, m_cur)
+        p = jnp.exp(s - m_new)
+        alpha = jnp.exp(m_prev - m_new)  # (bq, 1)
+        l_ref[...] = alpha * l_prev + jnp.sum(p, axis=-1, keepdims=True)
+        m_ref[...] = m_new
+        acc_ref[...] = acc_ref[...] * alpha + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+
+    @pl.when(ki == nk - 1)
+    def _finalize():
+        l = jnp.maximum(l_ref[...], 1e-30)
+        o_ref[0, 0] = (acc_ref[...] / l).astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("causal", "window", "block_q", "block_k", "interpret"))
+def flash_attention_bhsd(q, k, v, *, causal: bool = True, window: int = 0,
+                         block_q: int = 128, block_k: int = 128,
+                         interpret: bool = True):
+    """q: (B, H, Sq, D); k/v: (B, Hkv, Skv, D). Returns (B, H, Sq, D).
+
+    Sq must be a multiple of block_q and Skv of block_k (ops.py pads).
+    """
+    B, H, Sq, D = q.shape
+    Hkv, Skv = k.shape[1], k.shape[2]
+    assert H % Hkv == 0, (H, Hkv)
+    group = H // Hkv
+    bq = min(block_q, Sq)
+    bk = min(block_k, Skv)
+    assert Sq % bq == 0 and Skv % bk == 0, (Sq, bq, Skv, bk)
+    nq, nk = Sq // bq, Skv // bk
+    scale = 1.0 / (D ** 0.5)
+
+    kernel = functools.partial(
+        _fa_kernel, scale=scale, causal=causal, window=window,
+        bq=bq, bk=bk, nk=nk)
+
+    return pl.pallas_call(
+        kernel,
+        grid=(B, H, nq, nk),
+        in_specs=[
+            pl.BlockSpec((1, 1, bq, D), lambda b, h, qi, ki: (b, h, qi, 0)),
+            pl.BlockSpec((1, 1, bk, D),
+                         lambda b, h, qi, ki: (b, h // group, ki, 0)),
+            pl.BlockSpec((1, 1, bk, D),
+                         lambda b, h, qi, ki: (b, h // group, ki, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, bq, D), lambda b, h, qi, ki: (b, h, qi, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, H, Sq, D), q.dtype),
+        scratch_shapes=[
+            # online-softmax state, persistent across the sequential kv axis
+            pltpu.VMEM((bq, 1), jnp.float32),
+            pltpu.VMEM((bq, 1), jnp.float32),
+            pltpu.VMEM((bq, D), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v)

@@ -1,0 +1,1 @@
+from repro.kernels.gbrt_predict import ops, ref  # noqa: F401

@@ -1,0 +1,102 @@
+"""GBRT ensemble inference Pallas TPU kernel — the Predictor's hot loop.
+
+The paper's Decision Engine calls the GBRT compute-time model once per
+(input × configuration); a serving fleet with thousands of placement decisions
+per second amortizes them by *batching* prediction rows, which is exactly what
+this kernel serves.
+
+TPU adaptation of tree traversal (a scattered-memory GPU/CPU workload): trees
+are complete (heap layout, pass-through nodes use threshold=+inf), so the
+traversal is a fixed ``depth``-step index walk with no divergence. Every
+gather is re-expressed as a **one-hot matmul** — the MXU-native form of a
+permutation — so the kernel never issues a data-dependent load:
+
+- node→feature-id and node→threshold selection: one_hot(node, I) contraction;
+- sample→feature-value selection: one_hot(feat_id, F) row-product;
+- leaf lookup: one_hot(leaf, L) contraction.
+
+Grid is (num_row_blocks,); the whole (small) ensemble sits in VMEM per step;
+trees accumulate through a ``fori_loop`` into an fp32 running sum.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _one_hot(idx, n):
+    """(rows,) int32 -> (rows, n) f32 via broadcasted-iota compare (no gather)."""
+    cols = jax.lax.broadcasted_iota(jnp.int32, (idx.shape[0], n), 1)
+    return (idx[:, None] == cols).astype(jnp.float32)
+
+
+def _gbrt_kernel(x_ref, f_ref, th_ref, lv_ref, o_ref, *, depth: int,
+                 n_trees: int, lr: float, base: float):
+    x = x_ref[...].astype(jnp.float32)            # (bn, F)
+    bn, F = x.shape
+    I = f_ref.shape[1]                             # internal nodes per tree
+    L = lv_ref.shape[1]                            # leaves per tree
+
+    def tree_step(t, acc):
+        feat = f_ref[pl.dslice(t, 1), :][0]        # (I,) int32
+        thr = th_ref[pl.dslice(t, 1), :][0]        # (I,) f32
+        leaves = lv_ref[pl.dslice(t, 1), :][0]     # (L,) f32
+        node = jnp.zeros((bn,), jnp.int32)
+        for _ in range(depth):                     # static unroll
+            sel = _one_hot(node, I)                # (bn, I)
+            f_id = jax.lax.dot_general(
+                sel, feat.astype(jnp.float32)[:, None],
+                (((1,), (0,)), ((), ())),
+                preferred_element_type=jnp.float32)[:, 0]
+            t_val = jax.lax.dot_general(
+                sel, thr[:, None], (((1,), (0,)), ((), ())),
+                preferred_element_type=jnp.float32)[:, 0]
+            fsel = _one_hot(f_id.astype(jnp.int32), F)   # (bn, F)
+            x_val = jnp.sum(x * fsel, axis=1)
+            go_right = (x_val > t_val).astype(jnp.int32)
+            node = 2 * node + 1 + go_right
+        leaf = node - (2 ** depth - 1)
+        lsel = _one_hot(leaf, L)
+        contrib = jax.lax.dot_general(
+            lsel, leaves[:, None], (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)[:, 0]
+        return acc + lr * contrib
+
+    acc = jnp.full((bn,), base, jnp.float32)
+    acc = jax.lax.fori_loop(0, n_trees, tree_step, acc)
+    o_ref[...] = acc[:, None]
+
+
+@functools.partial(jax.jit, static_argnames=("depth", "lr", "base", "block_n",
+                                             "interpret"))
+def gbrt_predict_blocked(x, features, thresholds, leaves, *, depth: int,
+                         lr: float, base: float, block_n: int = 256,
+                         interpret: bool = True):
+    """x: (N, F) f32; features: (T, I) int32; thresholds: (T, I) f32;
+    leaves: (T, L) f32. Returns (N,) f32 predictions. N % block_n == 0."""
+    N, F = x.shape
+    T, I = features.shape
+    L = leaves.shape[1]
+    bn = min(block_n, N)
+    assert N % bn == 0, (N, bn)
+
+    kernel = functools.partial(_gbrt_kernel, depth=depth, n_trees=T, lr=lr,
+                               base=base)
+    out = pl.pallas_call(
+        kernel,
+        grid=(N // bn,),
+        in_specs=[
+            pl.BlockSpec((bn, F), lambda i: (i, 0)),
+            pl.BlockSpec((T, I), lambda i: (0, 0)),   # full ensemble in VMEM
+            pl.BlockSpec((T, I), lambda i: (0, 0)),
+            pl.BlockSpec((T, L), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((bn, 1), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((N, 1), jnp.float32),
+        interpret=interpret,
+    )(x, features, thresholds, leaves)
+    return out[:, 0]

@@ -1,0 +1,33 @@
+"""Public wrapper: predict a fitted ``repro.core.gbrt.GBRT`` with the kernel."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels.gbrt_predict.kernel import gbrt_predict_blocked
+
+
+def gbrt_predict(model, x, *, block_n: int = 256,
+                 interpret: bool | None = None) -> np.ndarray:
+    """model: repro.core.gbrt.GBRT; x: (N, F). Returns np.ndarray (N,)."""
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    x = np.asarray(x, np.float32)
+    if x.ndim == 1:
+        x = x[:, None]
+    N = x.shape[0]
+    # +inf thresholds mark pass-through nodes; the kernel compares in f32
+    big = np.float32(3.0e38)
+    thr = np.clip(model.thresholds, -big, big).astype(np.float32)
+    bn = min(block_n, max(N, 1))
+    pad = (-N) % bn
+    if pad:
+        x = np.pad(x, ((0, pad), (0, 0)))
+    out = gbrt_predict_blocked(
+        jnp.asarray(x), jnp.asarray(model.features, jnp.int32),
+        jnp.asarray(thr), jnp.asarray(model.leaves, jnp.float32),
+        depth=model.config.max_depth, lr=float(model.config.learning_rate),
+        base=float(model.base), block_n=bn, interpret=interpret)
+    return np.asarray(out)[:N]

@@ -1,0 +1,84 @@
+"""RG-LRU gated linear recurrence Pallas TPU kernel.
+
+Computes h_t = a_t ⊙ h_{t-1} + x_t ⊙ u_t along the sequence, with per-channel
+gates a_t ∈ (0, 1] (Griffin / RecurrentGemma's recurrent core).
+
+Unlike SSD, the decay here is *per-channel* (a_t is (S, D)), so the
+chunk-as-matmul trick would need a (Q, Q, D) decay tensor — not VMEM-viable.
+The TPU-natural structure instead is the classic sequential-in-S, vector-in-D
+scan (this is how the production RecurrentGemma Pallas kernel works too):
+
+- grid = (batch, num_chunks) with the chunk axis sequential; the carried state
+  h ∈ (1, D) fp32 persists in VMEM scratch across chunks;
+- within a chunk, a ``fori_loop`` walks the Q rows; every step is a fused
+  multiply-add over a (1, D) vector — VPU-lane parallel across the model
+  dimension, which is the wide axis (d_rnn = 4096 for recurrentgemma-9b);
+- chunking exists purely to bound the VMEM block: (Q, D) in/out tiles double-
+  buffer HBM↔VMEM while the inner loop runs.
+
+I/O is fp32: the model computes gates in fp32 and consumes h in fp32.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _scan_kernel(x_ref, a_ref, y_ref, st_ref, h_ref, *, Q: int, nc: int):
+    ci = pl.program_id(1)
+
+    @pl.when(ci == 0)
+    def _init():
+        h_ref[...] = jnp.zeros_like(h_ref)
+
+    def body(t, h):
+        a_t = a_ref[0, pl.dslice(t, 1), :]      # (1, D)
+        x_t = x_ref[0, pl.dslice(t, 1), :]
+        h = a_t * h + x_t
+        y_ref[0, pl.dslice(t, 1), :] = h
+        return h
+
+    h = jax.lax.fori_loop(0, Q, body, h_ref[...])
+    h_ref[...] = h
+
+    @pl.when(ci == nc - 1)
+    def _emit():
+        st_ref[0] = h
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
+def linear_scan_bsd(x, a, *, chunk: int = 256, interpret: bool = True):
+    """x, a: (B, S, D) fp32. Returns (h (B, S, D), final_state (B, D)).
+
+    S must be a multiple of ``chunk`` (ops.py pads with a=1, x=0 — inert).
+    """
+    B, S, D = x.shape
+    Q = min(chunk, S)
+    assert S % Q == 0, (S, Q)
+    nc = S // Q
+
+    kernel = functools.partial(_scan_kernel, Q=Q, nc=nc)
+    y, state = pl.pallas_call(
+        kernel,
+        grid=(B, nc),
+        in_specs=[
+            pl.BlockSpec((1, Q, D), lambda b, ci: (b, ci, 0)),
+            pl.BlockSpec((1, Q, D), lambda b, ci: (b, ci, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, Q, D), lambda b, ci: (b, ci, 0)),
+            pl.BlockSpec((1, 1, D), lambda b, ci: (b, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((B, S, D), jnp.float32),
+            jax.ShapeDtypeStruct((B, 1, D), jnp.float32),
+        ],
+        scratch_shapes=[pltpu.VMEM((1, D), jnp.float32)],
+        interpret=interpret,
+    )(x.astype(jnp.float32), a.astype(jnp.float32))
+    return y, state[:, 0]

@@ -1,0 +1,20 @@
+"""Pure-jnp oracle for linear_scan: associative scan of h_t = a_t h_{t-1} + x_t."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def linear_scan_ref(x, a):
+    """x, a: (B, S, D). Returns (h (B, S, D), final_state (B, D)). fp32."""
+
+    def combine(l, r):
+        a_l, b_l = l
+        a_r, b_r = r
+        return a_l * a_r, a_r * b_l + b_r
+
+    x = x.astype(jnp.float32)
+    a = a.astype(jnp.float32)
+    _, h = jax.lax.associative_scan(combine, (a, x), axis=1)
+    return h, h[:, -1]

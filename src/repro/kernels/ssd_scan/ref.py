@@ -1,0 +1,31 @@
+"""Pure-jnp oracle for ssd_scan: the literal SSD recurrence, step by step."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def ssd_ref(x, dt, A, B, C):
+    """Literal recurrence (fp32). Layout matches the model:
+    x: (b, S, nh, hd); dt: (b, S, nh); A: (nh,); B/C: (b, S, ds).
+    Returns (y (b, S, nh, hd), final_state (b, nh, hd, ds))."""
+    b, S, nh, hd = x.shape
+
+    def step(h, inp):
+        x_t, dt_t, B_t, C_t = inp
+        decay = jnp.exp(dt_t * A)[:, :, None, None]
+        upd = (dt_t[:, :, None] * x_t)[..., None] * B_t[:, None, None, :]
+        h = h * decay + upd
+        y = jnp.einsum("bhpn,bn->bhp", h, C_t)
+        return h, y
+
+    h0 = jnp.zeros((b, nh, hd, B.shape[-1]), jnp.float32)
+    xs = (
+        x.astype(jnp.float32).transpose(1, 0, 2, 3),
+        dt.astype(jnp.float32).transpose(1, 0, 2),
+        B.astype(jnp.float32).transpose(1, 0, 2),
+        C.astype(jnp.float32).transpose(1, 0, 2),
+    )
+    h, ys = jax.lax.scan(step, h0, xs)
+    return ys.transpose(1, 0, 2, 3).astype(x.dtype), h

@@ -1,0 +1,436 @@
+"""Trip-count-aware HLO cost analysis.
+
+``compiled.cost_analysis()`` counts a ``while`` body ONCE, so with
+scan-over-layers it under-reports FLOPs by ~n_layers× (verified empirically —
+see EXPERIMENTS.md §Dry-run). This module re-derives roofline terms from the
+post-optimization HLO text, multiplying through ``known_trip_count``:
+
+- **dot FLOPs**: 2 · output_elems · contracted_elems per ``dot`` (including
+  dots inside fusion computations);
+- **elementwise FLOPs**: 1/output element for arithmetic ops (rough lower
+  bound; dots dominate every model here);
+- **HBM bytes**: per instruction, operand + output bytes; fusions count only
+  their boundary (interior values live in registers/VMEM) — this approximates
+  the traffic XLA's own model reports;
+- **collective link-bytes per device**: per collective, the bytes the device
+  *transmits* under a ring schedule:
+  all-gather (g−1)·operand; reduce-scatter (g−1)/g·operand;
+  all-reduce 2·(g−1)/g·operand; all-to-all (g−1)/g·operand;
+  collective-permute 1·operand.
+
+The per-device program is what the HLO text shows post-GSPMD, so all numbers
+are per device; roofline terms divide by per-chip peak rates directly.
+"""
+
+from __future__ import annotations
+
+import json
+import re
+from dataclasses import dataclass, field
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2,
+    "s32": 4, "u32": 4, "s64": 8, "u64": 8, "f8e4m3fn": 1, "f8e5m2": 1,
+    "bf16": 2, "f16": 2, "f32": 4, "f64": 8, "c64": 8, "c128": 16,
+}
+
+_ELEMENTWISE = {
+    "add", "subtract", "multiply", "divide", "power", "maximum", "minimum",
+    "tanh", "exponential", "log", "rsqrt", "sqrt", "negate", "abs", "sign",
+    "compare", "select", "and", "or", "xor", "not", "clamp", "floor", "ceil",
+    "round-nearest-afz", "round-nearest-even", "remainder", "atan2", "cbrt",
+    "logistic", "expm1", "log1p", "sine", "cosine", "tan", "erf", "is-finite",
+    "reduce", "reduce-window", "map", "scatter", "exponential-minus-one",
+}
+
+_NO_TRAFFIC = {
+    "parameter", "constant", "tuple", "get-tuple-element", "bitcast",
+    "after-all", "partition-id", "replica-id", "opt-barrier",
+}
+
+_COLLECTIVES = {
+    "all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+    "collective-permute", "collective-broadcast", "ragged-all-to-all",
+}
+
+# Pure view/legalization ops: free on TPU (native bf16, layout-in-registers);
+# XLA CPU materializes them, which must not pollute the roofline terms.
+_VIEW_OPS = {"convert", "bitcast", "copy"}
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+# After comment stripping, the result type is either a (one-level) tuple or a
+# single array/token; then the opcode, then '('.
+_INSTR_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%?([\w.\-]+)\s*=\s*"
+    r"(\([^()]*\)|[\w\[\],{}/]+)\s*"
+    r"([\w\-]+)\((.*)$")
+_COMP_START_RE = re.compile(r"^(?:ENTRY\s+)?%?([\w.\-]+)\s+\(.*\)\s*->.*\{\s*$")
+_COMMENT_RE = re.compile(r"/\*.*?\*/")
+
+
+def _shape_bytes_elems(type_str: str) -> tuple[int, int]:
+    """Total (bytes, elems) across all array shapes in a (possibly tuple) type."""
+    total_b = total_e = 0
+    for dt, dims in _SHAPE_RE.findall(type_str):
+        if dt not in _DTYPE_BYTES:
+            continue
+        elems = 1
+        for d in dims.split(","):
+            if d:
+                elems *= int(d)
+        total_e += elems
+        total_b += elems * _DTYPE_BYTES[dt]
+    return total_b, total_e
+
+
+@dataclass
+class Instr:
+    name: str
+    type_str: str
+    opcode: str
+    rest: str  # operand list + attributes
+    out_bytes: int = 0
+    out_elems: int = 0
+
+    def operand_names(self) -> list[str]:
+        # ``rest`` starts just after 'opcode(' — scan to the matching ')'
+        depth, buf = 1, ""
+        for ch in self.rest:
+            if ch == "(":
+                depth += 1
+            elif ch == ")":
+                depth -= 1
+                if depth == 0:
+                    break
+            buf += ch
+        return re.findall(r"%([\w.\-]+)", buf)
+
+    def attr(self, name: str) -> str | None:
+        m = re.search(rf"{name}=([%\w.\-]+)", self.rest)
+        return m.group(1).lstrip("%") if m else None
+
+    def trip_count(self) -> int | None:
+        # backend_config={"known_trip_count":{"n":"16"}, ...}
+        m = re.search(r'known_trip_count\\?"?:?[^0-9]*(\d+)', self.rest)
+        return int(m.group(1)) if m else None
+
+    def group_size(self) -> int:
+        # replica_groups=[2,4]<=[8]  (2 groups of 4)  |  {{0,1},{2,3}}
+        m = re.search(r"replica_groups=\[(\d+),(\d+)\]", self.rest)
+        if m:
+            return int(m.group(2))
+        m = re.search(r"replica_groups=\{\{([^}]*)\}", self.rest)
+        if m:
+            return len(m.group(1).split(","))
+        return 1
+
+
+def parse_hlo(text: str) -> dict[str, list[Instr]]:
+    comps: dict[str, list[Instr]] = {}
+    cur: list[Instr] | None = None
+    entry = None
+    for line in text.splitlines():
+        line = _COMMENT_RE.sub("", line)  # strip /*index=5*/ etc.
+        if cur is None:
+            m = _COMP_START_RE.match(line.strip())
+            if m:
+                name = m.group(1)
+                comps[name] = []
+                cur = comps[name]
+                if line.strip().startswith("ENTRY"):
+                    entry = name
+            continue
+        if line.strip() == "}":
+            cur = None
+            continue
+        m = _INSTR_RE.match(line)
+        if m:
+            name, tstr, opcode, rest = m.groups()
+            b, e = _shape_bytes_elems(tstr)
+            cur.append(Instr(name=name, type_str=tstr, opcode=opcode,
+                             rest=rest, out_bytes=b, out_elems=e))
+    comps["__entry__"] = comps.get(entry, [])
+    comps["__entry_name__"] = entry  # type: ignore
+    return comps
+
+
+@dataclass
+class HloCosts:
+    dot_flops: float = 0.0
+    elem_flops: float = 0.0
+    hbm_bytes: float = 0.0
+    collective_link_bytes: float = 0.0
+    collectives: dict = field(default_factory=dict)
+
+    @property
+    def flops(self) -> float:
+        return self.dot_flops + self.elem_flops
+
+    def add(self, other: "HloCosts", mult: float = 1.0):
+        self.dot_flops += other.dot_flops * mult
+        self.elem_flops += other.elem_flops * mult
+        self.hbm_bytes += other.hbm_bytes * mult
+        self.collective_link_bytes += other.collective_link_bytes * mult
+        for k, v in other.collectives.items():
+            self.collectives[k] = self.collectives.get(k, 0.0) + v * mult
+
+    def to_dict(self) -> dict:
+        return {
+            "dot_flops": self.dot_flops, "elem_flops": self.elem_flops,
+            "flops": self.flops, "hbm_bytes": self.hbm_bytes,
+            "collective_link_bytes": self.collective_link_bytes,
+            "collectives": dict(self.collectives),
+        }
+
+
+def _fusion_param_reads(callee_instrs: list[Instr]) -> dict[int, int]:
+    """Bytes actually READ per parameter of a fused computation.
+
+    A scan-over-layers body receives the full stacked weights / KV cache as a
+    fusion operand but touches one dynamic-slice of it per trip; counting the
+    full operand would overcount HBM traffic by ~n_layers×. If every consumer
+    of a parameter is a slice-type op, charge the slice outputs (capped at the
+    full size); any non-slice consumer charges the full parameter once.
+
+    ``convert``/``bitcast``/``copy`` chains are treated as *views*: XLA CPU
+    legalizes bf16 by round-tripping whole buffers through f32 converts that
+    simply do not exist on TPU (native bf16), so consumption is classified by
+    the op at the end of the view chain, not the view itself.
+    """
+    params: dict[str, tuple[int, int]] = {}
+    for ins in callee_instrs:
+        if ins.opcode == "parameter":
+            m = re.match(r"\s*(\d+)", ins.rest)
+            idx = int(m.group(1)) if m else len(params)
+            params[ins.name] = (idx, ins.out_bytes)
+
+    view_of: dict[str, str] = {}  # instr -> param it is a pure view of
+    for ins in callee_instrs:
+        if ins.opcode in _VIEW_OPS:
+            ops = ins.operand_names()
+            if ops:
+                src = ops[0]
+                root = view_of.get(src, src)
+                if root in params:
+                    view_of[ins.name] = root
+
+    sliced: dict[int, int] = {}
+    full_read: dict[int, bool] = {}
+    for ins in callee_instrs:
+        if ins.opcode == "parameter" or ins.opcode in _VIEW_OPS:
+            continue
+        for pos, o in enumerate(ins.operand_names()):
+            root = view_of.get(o, o)
+            if root not in params:
+                continue
+            idx, full = params[root]
+            if ins.opcode in ("dynamic-slice", "slice", "gather"):
+                sliced[idx] = min(sliced.get(idx, 0) + ins.out_bytes, full)
+            elif ins.opcode == "dynamic-update-slice" and pos == 0:
+                # target buffer of an in-place update: aliased, not read
+                continue
+            else:
+                full_read[idx] = True
+    reads: dict[int, int] = {}
+    for name, (idx, full) in params.items():
+        if full_read.get(idx):
+            reads[idx] = full
+        else:
+            reads[idx] = sliced.get(idx, 0)
+    return reads
+
+
+def _fusion_out_bytes(ins: Instr, callee_instrs: list[Instr]) -> int:
+    """Written bytes of a fusion: a DUS-rooted fusion (possibly behind view
+    ops) writes only the update region of its aliased output buffer."""
+    if callee_instrs:
+        sym = {i.name: i for i in callee_instrs}
+        root = callee_instrs[-1]
+        hops = 0
+        while root.opcode in _VIEW_OPS and hops < 8:
+            ops = root.operand_names()
+            nxt = sym.get(ops[0]) if ops else None
+            if nxt is None:
+                break
+            root, hops = nxt, hops + 1
+        if root.opcode == "dynamic-update-slice":
+            ops = root.operand_names()
+            upd = sym.get(ops[1]) if len(ops) > 1 else None
+            if upd is not None:
+                return upd.out_bytes
+            return max(root.out_bytes // 8, 0)  # conservative fallback
+    return ins.out_bytes
+
+
+def _dot_flops(instr: Instr, symtab: dict[str, Instr]) -> float:
+    ops = instr.operand_names()
+    contracted = 1
+    m = re.search(r"lhs_contracting_dims=\{([\d,]*)\}", instr.rest)
+    if m and ops:
+        lhs = symtab.get(ops[0])
+        if lhs is not None:
+            shapes = _SHAPE_RE.findall(lhs.type_str)
+            if shapes:
+                dims = [int(d) for d in shapes[0][1].split(",") if d]
+                for ci in m.group(1).split(","):
+                    if ci and int(ci) < len(dims):
+                        contracted *= dims[int(ci)]
+    return 2.0 * instr.out_elems * contracted
+
+
+def analyze_computation(name: str, comps: dict, memo: dict,
+                        inside_fusion: bool = False) -> HloCosts:
+    key = (name, inside_fusion)
+    if key in memo:
+        return memo[key]
+    costs = HloCosts()
+    instrs = comps.get(name, [])
+    symtab = {i.name: i for i in instrs}
+    for ins in instrs:
+        op = ins.opcode
+        if op.endswith("-done"):
+            continue  # the matching -start already carries the cost
+        base = op[:-6] if op.endswith("-start") else op
+        if base in _COLLECTIVES and not op.endswith("-done"):
+            operand_bytes = 0
+            for o in ins.operand_names():
+                src = symtab.get(o)
+                operand_bytes += src.out_bytes if src else 0
+            if operand_bytes == 0:
+                operand_bytes = ins.out_bytes
+            g = max(ins.group_size(), 1)
+            if base == "all-gather":
+                link = operand_bytes * (g - 1)
+            elif base == "all-reduce":
+                link = operand_bytes * 2.0 * (g - 1) / g
+            elif base in ("reduce-scatter", "all-to-all", "ragged-all-to-all"):
+                link = operand_bytes * (g - 1) / g
+            else:  # collective-permute / broadcast
+                link = operand_bytes
+            costs.collective_link_bytes += link
+            costs.collectives[base] = costs.collectives.get(base, 0.0) + link
+            if not inside_fusion:
+                costs.hbm_bytes += operand_bytes + ins.out_bytes
+            continue
+
+        if op == "dot":
+            costs.dot_flops += _dot_flops(ins, symtab)
+            if not inside_fusion:
+                opb = sum(symtab[o].out_bytes for o in ins.operand_names()
+                          if o in symtab)
+                costs.hbm_bytes += opb + ins.out_bytes
+            continue
+
+        if op == "fusion":
+            callee = ins.attr("calls")
+            if callee:
+                costs.add(analyze_computation(callee, comps, memo,
+                                              inside_fusion=True))
+                callee_instrs = comps.get(callee, [])
+                opb = sum(_fusion_param_reads(callee_instrs).values())
+                outb = _fusion_out_bytes(ins, callee_instrs)
+            else:
+                opb = sum(symtab[o].out_bytes for o in ins.operand_names()
+                          if o in symtab)
+                outb = ins.out_bytes
+            costs.hbm_bytes += opb + outb
+            continue
+
+        if op in ("dynamic-slice", "slice", "gather"):
+            # read the slice, write the slice — not the full source buffer
+            if not inside_fusion:
+                costs.hbm_bytes += 2 * ins.out_bytes
+            continue
+
+        if op == "dynamic-update-slice":
+            # in-place update: read+write the update region only
+            if not inside_fusion:
+                ops_ = ins.operand_names()
+                upd = symtab.get(ops_[1]) if len(ops_) > 1 else None
+                costs.hbm_bytes += 2 * (upd.out_bytes if upd else ins.out_bytes)
+            continue
+
+        if op == "while":
+            trips = ins.trip_count() or 1
+            body = ins.attr("body")
+            cond = ins.attr("condition")
+            if body:
+                costs.add(analyze_computation(body, comps, memo), trips)
+            if cond:
+                costs.add(analyze_computation(cond, comps, memo), trips)
+            continue
+
+        if op in ("call", "async-start"):
+            callee = ins.attr("to_apply") or ins.attr("calls")
+            if callee:
+                costs.add(analyze_computation(callee, comps, memo))
+            continue
+
+        if op == "conditional":
+            branches = re.findall(r"(?:true_computation|false_computation|branch_computations=\{[^}]*)=?%([\w.\-]+)", ins.rest)
+            sub = [analyze_computation(b, comps, memo) for b in branches if b in comps]
+            if sub:
+                worst = max(sub, key=lambda c: c.flops)
+                costs.add(worst)
+            continue
+
+        if op in _VIEW_OPS and op != "copy":
+            continue  # convert/bitcast: free on TPU (see _VIEW_OPS)
+
+        if base in _ELEMENTWISE:
+            costs.elem_flops += ins.out_elems
+            if not inside_fusion and op not in _NO_TRAFFIC:
+                opb = sum(symtab[o].out_bytes for o in ins.operand_names()
+                          if o in symtab)
+                costs.hbm_bytes += opb + ins.out_bytes
+            continue
+
+        if not inside_fusion and op not in _NO_TRAFFIC:
+            # data movement ops (copy, dynamic-slice, broadcast, …)
+            opb = sum(symtab[o].out_bytes for o in ins.operand_names()
+                      if o in symtab)
+            costs.hbm_bytes += opb + ins.out_bytes
+    memo[key] = costs
+    return costs
+
+
+def analyze_hlo_text(text: str) -> dict:
+    comps = parse_hlo(text)
+    entry = comps.get("__entry_name__")
+    costs = analyze_computation(entry, comps, memo={})
+    return costs.to_dict()
+
+
+def analyze_compiled(compiled) -> dict:
+    """Full analysis bundle for one compiled executable (per-device numbers)."""
+    out = {"hlo": analyze_hlo_text(compiled.as_text())}
+    try:
+        ca = compiled.cost_analysis()
+        out["xla_cost_analysis"] = {
+            k: float(v) for k, v in ca.items()
+            if isinstance(v, (int, float)) and k in
+            ("flops", "bytes accessed", "transcendentals", "utilization operand 0 {}")
+        }
+    except Exception as e:  # pragma: no cover
+        out["xla_cost_analysis"] = {"error": str(e)}
+    try:
+        ma = compiled.memory_analysis()
+        out["memory"] = {
+            "argument_bytes": ma.argument_size_in_bytes,
+            "output_bytes": ma.output_size_in_bytes,
+            "temp_bytes": ma.temp_size_in_bytes,
+            "generated_code_bytes": ma.generated_code_size_in_bytes,
+            "alias_bytes": ma.alias_size_in_bytes,
+            "peak_bytes_estimate": (ma.argument_size_in_bytes
+                                    + ma.output_size_in_bytes
+                                    + ma.temp_size_in_bytes
+                                    - ma.alias_size_in_bytes),
+        }
+    except Exception as e:  # pragma: no cover
+        out["memory"] = {"error": str(e)}
+    return out
+
+
+def save_json(path: str, obj: dict):
+    with open(path, "w") as f:
+        json.dump(obj, f, indent=1, sort_keys=True)

@@ -1,0 +1,136 @@
+"""Step construction for the dry-run and launchers (no jax-init side effects).
+
+``build_cell`` assembles, for one (architecture × shape × mesh) cell:
+- the step function (train / prefill / decode),
+- abstract (ShapeDtypeStruct) arguments — zero allocation,
+- explicit in_shardings for every argument,
+so callers do ``jit(step, in_shardings=...).lower(*args).compile()``.
+
+Sharding policy (DESIGN.md §5):
+- params/opt by logical axes (make_rules); FSDP (weights' d_model over the
+  data axes) switches on automatically above ``FSDP_PARAM_THRESHOLD`` params;
+- batch over ("pod","data"), falling back to a divisible prefix (long_500k
+  has global_batch=1 → replicated);
+- KV caches by model.cache_axes(): KV-heads over "model" when divisible,
+  otherwise KV-sequence over "model" (flash-decode sharding).
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ArchConfig, ShapeConfig
+from repro.configs.specs import input_specs
+from repro.distributed.sharding import make_rules, param_shardings, spec_for
+from repro.modeling.module import abstract_params
+from repro.modeling.registry import build_model
+from repro.training.optimizer import OptimizerConfig
+from repro.training.train_loop import make_train_step
+
+# Above this many params, weights/optimizer shard over the data axes too.
+FSDP_PARAM_THRESHOLD = 8_000_000_000
+
+
+@dataclass
+class Cell:
+    arch: str
+    shape: str
+    kind: str                      # train | prefill | decode
+    step: Callable
+    args: tuple                    # abstract ShapeDtypeStructs
+    in_shardings: tuple
+    donate_argnums: tuple
+    model: Any
+    fsdp: bool
+    rules: dict
+
+
+def _batch_rule_for(B: int, mesh) -> tuple[str, ...] | None:
+    """Largest prefix of ("pod","data") whose product divides B."""
+    axes = [a for a in ("pod", "data") if a in mesh.shape]
+    # try the full product first, then single axes (largest first)
+    singles = sorted(axes, key=lambda a: -mesh.shape[a])
+    candidates = [tuple(axes)] + [(a,) for a in singles]
+    for cand in candidates:
+        size = 1
+        for a in cand:
+            size *= mesh.shape[a]
+        if size > 1 and B % size == 0:
+            return cand
+    return None
+
+
+def _tree_shardings(specs: dict, axes_map: Callable, rules, mesh) -> dict:
+    return {k: NamedSharding(mesh, spec_for(axes_map(k, v), rules))
+            for k, v in specs.items()}
+
+
+def _batch_axes(_k, v):
+    return ("batch",) + (None,) * (len(v.shape) - 1)
+
+
+def build_cell(cfg: ArchConfig, shape: ShapeConfig, mesh, *,
+               fsdp: bool | None = None) -> Cell:
+    model = build_model(cfg)
+    kind, specs = input_specs(cfg, shape)
+    serving = kind != "train"
+    if fsdp is None:
+        fsdp = model.param_count() > FSDP_PARAM_THRESHOLD
+        if serving and getattr(cfg, "serve_2d_ffn", False):
+            fsdp = False  # 2D weight sharding replaces FSDP gathers
+    rules = make_rules(cfg, mesh, fsdp=fsdp, serving=serving)
+    rules = dict(rules, batch=_batch_rule_for(shape.global_batch, mesh))
+    replicated = NamedSharding(mesh, P())
+
+    if kind == "train":
+        pspecs = model.param_specs()
+        params = abstract_params(pspecs, jnp.dtype(cfg.param_dtype))
+        psh = param_shardings(pspecs, rules, mesh)
+        opt = {"opt": {
+            "m": jax.tree.map(lambda s: jax.ShapeDtypeStruct(s.shape, jnp.float32), params),
+            "v": jax.tree.map(lambda s: jax.ShapeDtypeStruct(s.shape, jnp.float32), params),
+            "step": jax.ShapeDtypeStruct((), jnp.int32),
+        }}
+        osh = {"opt": {"m": psh, "v": psh, "step": replicated}}
+        batch = specs["batch"]
+        bsh = _tree_shardings(batch, _batch_axes, rules, mesh)
+        step = make_train_step(model, OptimizerConfig())
+        return Cell(cfg.name, shape.name, kind, step,
+                    (params, opt, batch), (psh, osh, bsh),
+                    donate_argnums=(0, 1), model=model, fsdp=fsdp, rules=rules)
+
+    serve_dtype = jnp.dtype(cfg.dtype)
+    pspecs = model.param_specs()
+    params = abstract_params(pspecs, serve_dtype)
+    psh = param_shardings(pspecs, rules, mesh)
+
+    if kind == "prefill":
+        batch = specs["batch"]
+        bsh = _tree_shardings(batch, _batch_axes, rules, mesh)
+
+        def prefill_step(params, batch):
+            return model.prefill(params, batch)
+
+        return Cell(cfg.name, shape.name, kind, prefill_step,
+                    (params, batch), (psh, bsh),
+                    donate_argnums=(), model=model, fsdp=fsdp, rules=rules)
+
+    # ---- decode ------------------------------------------------------------
+    cache = specs["cache"]
+    batch = specs["batch"]
+    cache_axes = model.cache_axes()
+    csh = {k: NamedSharding(mesh, spec_for(cache_axes[k], rules))
+           for k in cache}
+    bsh = _tree_shardings(batch, _batch_axes, rules, mesh)
+
+    def decode_step(params, cache, batch):
+        return model.decode_step(params, cache, batch)
+
+    return Cell(cfg.name, shape.name, kind, decode_step,
+                (params, cache, batch), (psh, csh, bsh),
+                donate_argnums=(1,), model=model, fsdp=fsdp, rules=rules)

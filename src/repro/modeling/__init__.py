@@ -1,0 +1,5 @@
+"""Pure-JAX model zoo for the assigned architecture pool."""
+
+from repro.modeling.registry import build_model, FAMILIES
+
+__all__ = ["build_model", "FAMILIES"]

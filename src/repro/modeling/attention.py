@@ -1,0 +1,212 @@
+"""Attention: GQA/MQA/MHA with flash-style chunked online computation.
+
+Two implementations, selected by ``cfg.attn_impl``:
+
+- ``xla``: pure-JAX chunked attention (lax.scan over query blocks with a
+  remat'd body) — memory-bounded like flash attention, shardable under pjit,
+  compilable on any backend. This is the path the multi-pod dry-run exercises.
+- ``pallas``: the TPU Pallas kernels in ``repro.kernels`` (flash_attention /
+  decode_attention). Validated in interpret mode on CPU; the TARGET on real
+  TPU fleets.
+
+GQA is computed with grouped einsums on (B, S, Hkv, G, D) — K/V are never
+materialized repeated across query heads.
+"""
+
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -2.0e38
+
+
+def _block_mask(q_pos, k_pos, causal: bool, window: int):
+    """(qc, S) boolean mask: True = attend."""
+    m = jnp.ones((q_pos.shape[0], k_pos.shape[0]), dtype=bool)
+    if causal:
+        m &= k_pos[None, :] <= q_pos[:, None]
+    if window and window > 0:
+        m &= k_pos[None, :] > (q_pos[:, None] - window)
+    return m
+
+
+def _attend_block(q_blk, k, v, q_pos, k_pos, causal, window, scale):
+    """One query block vs. full K/V. q_blk: (B, qc, Hkv, G, D); k/v: (B, S, Hkv, D)."""
+    scores = jnp.einsum(
+        "bqkgd,bskd->bkgqs", q_blk, k, preferred_element_type=jnp.float32
+    ) * scale
+    mask = _block_mask(q_pos, k_pos, causal, window)  # (qc, S)
+    scores = jnp.where(mask[None, None, None, :, :], scores, NEG_INF)
+    scores = scores - jax.lax.stop_gradient(jnp.max(scores, axis=-1, keepdims=True))
+    probs = jnp.exp(scores)
+    denom = jnp.sum(probs, axis=-1, keepdims=True)
+    probs = (probs / jnp.maximum(denom, 1e-30)).astype(v.dtype)
+    return jnp.einsum("bkgqs,bskd->bqkgd", probs, v)
+
+
+def chunked_attention(q, k, v, *, causal: bool = True, window: int = 0,
+                      q_chunk: int = 512, banded: bool = False):
+    """Flash-style attention. q: (B, Sq, H, D); k/v: (B, Skv, Hkv, D).
+
+    Scans over query chunks with a remat'd body, so peak memory is
+    O(B · H · q_chunk · Skv) instead of O(B · H · Sq · Skv), and the backward
+    pass recomputes block scores instead of storing them.
+
+    ``banded=True`` (§Perf, local windows only): each query chunk attends to a
+    dynamic K/V slice of static length window+q_chunk instead of the full
+    sequence — O(S·(W+qc)) compute instead of O(S²); at 32k context with a
+    2048-window this is ~13× fewer attention FLOPs.
+    """
+    B, Sq, H, D = q.shape
+    Skv, Hkv = k.shape[1], k.shape[2]
+    G = H // Hkv
+    scale = 1.0 / (D ** 0.5)
+    qc = min(q_chunk, Sq)
+    pad = (-Sq) % qc
+    if pad:
+        q = jnp.pad(q, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    Sq_p = Sq + pad
+    n_blocks = Sq_p // qc
+
+    qg = q.reshape(B, n_blocks, qc, Hkv, G, D).transpose(1, 0, 2, 3, 4, 5)
+    use_band = (banded and causal and window and window > 0
+                and window + qc < Skv and Sq == Skv)
+    band = min(window + qc, Skv) if use_band else Skv
+
+    @jax.checkpoint
+    def body(carry, blk):
+        q_blk, blk_idx = blk
+        q_pos = blk_idx * qc + jnp.arange(qc)
+        if use_band:
+            # static-size K/V slice covering [q_end - band, q_end)
+            start = jnp.clip(blk_idx * qc + qc - band, 0, Skv - band)
+            k_blk = jax.lax.dynamic_slice_in_dim(k, start, band, axis=1)
+            v_blk = jax.lax.dynamic_slice_in_dim(v, start, band, axis=1)
+            k_pos_blk = start + jnp.arange(band)
+        else:
+            k_blk, v_blk = k, v
+            k_pos_blk = jnp.arange(Skv)
+        out = _attend_block(q_blk, k_blk, v_blk, q_pos, k_pos_blk, causal,
+                            window, scale)
+        return carry, out
+
+    if n_blocks == 1:
+        _, out = body(None, (qg[0], jnp.asarray(0)))
+        out = out[None]
+    else:
+        _, out = jax.lax.scan(body, None, (qg, jnp.arange(n_blocks)))
+    out = out.transpose(1, 0, 2, 3, 4, 5).reshape(B, Sq_p, H, D)
+    return out[:, :Sq]
+
+
+def decode_attention(q, k_cache, v_cache, length, *, window: int = 0,
+                     positions=None, impl: str = "xla"):
+    """Single-token attention against a KV cache.
+
+    q: (B, 1, H, D); caches: (B, S, Hkv, D); length: (B,) valid cache lengths
+    (entries at index >= length are masked). ``positions`` optionally gives the
+    absolute position of each cache slot (for ring-buffer local-window caches).
+
+    ``impl="pallas"`` dispatches to the flash-decode kernel when the mask is a
+    pure length mask (ring-buffer caches need no window filter: every resident
+    slot is within the window by construction).
+    """
+    if impl == "pallas" and not (window and window > 0):
+        from repro.kernels.decode_attention import ops as da_ops
+
+        return da_ops.decode_attention(q, k_cache, v_cache, length)
+    B, _, H, D = q.shape
+    S, Hkv = k_cache.shape[1], k_cache.shape[2]
+    G = H // Hkv
+    scale = 1.0 / (D ** 0.5)
+    qg = q.reshape(B, 1, Hkv, G, D)
+    scores = jnp.einsum(
+        "bqkgd,bskd->bkgqs", qg, k_cache, preferred_element_type=jnp.float32
+    ) * scale  # (B, Hkv, G, 1, S)
+    slot = jnp.arange(S)
+    valid = slot[None, :] < length[:, None]  # (B, S)
+    if window and window > 0 and positions is not None:
+        cur = jnp.max(jnp.where(valid, positions, -1), axis=1, keepdims=True)
+        valid &= positions > (cur - window)
+    scores = jnp.where(valid[:, None, None, None, :], scores, NEG_INF)
+    scores = scores - jnp.max(scores, axis=-1, keepdims=True)
+    probs = jnp.exp(scores)
+    probs = probs / jnp.maximum(jnp.sum(probs, axis=-1, keepdims=True), 1e-30)
+    out = jnp.einsum("bkgqs,bskd->bqkgd", probs.astype(v_cache.dtype), v_cache)
+    return out.reshape(B, 1, H, D)
+
+
+def cp_chunked_attention(q, k, v, *, causal: bool = True, window: int = 0,
+                         q_chunk: int = 512, ways: int = 16, shard_fn=None):
+    """Context-parallel flash-style attention (§Perf H1.2).
+
+    A plain ``lax.scan`` over query chunks serializes exactly the dimension
+    context parallelism needs to shard (scan trips cannot be partitioned —
+    measured: a with_sharding_constraint on q changed nothing, EXPERIMENTS.md
+    §Perf H1.1). Restructure: fold the sequence into (outer, ways, qc) where
+    ``ways`` is a TENSOR dim sharded over the model axis; the scan runs over
+    ``outer`` only. Per-device score traffic and attention FLOPs drop ~ways×
+    for archs whose head count cannot shard (gemma: 8 q-heads, llama4: 40).
+    """
+    shard_fn = shard_fn or (lambda a, axes: a)
+    B, Sq, H, D = q.shape
+    Skv, Hkv = k.shape[1], k.shape[2]
+    G = H // Hkv
+    scale = 1.0 / (D ** 0.5)
+    qc = min(q_chunk, max(Sq // ways, 1))
+    span = ways * qc
+    pad = (-Sq) % span
+    if pad:
+        q = jnp.pad(q, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    Sq_p = Sq + pad
+    outer = Sq_p // span
+
+    qg = q.reshape(B, outer, ways, qc, Hkv, G, D).transpose(1, 0, 2, 3, 4, 5, 6)
+    k_pos = jnp.arange(Skv)
+
+    @jax.checkpoint
+    def body(carry, blk):
+        q_blk, o_idx = blk  # (B, ways, qc, Hkv, G, D)
+        q_blk = shard_fn(q_blk, ("batch", "seq", None, None, None, None))
+        q_pos = (o_idx * span
+                 + jnp.arange(ways)[:, None] * qc
+                 + jnp.arange(qc)[None, :])  # (ways, qc)
+        s = jnp.einsum("bwqkgd,bskd->bwkgqs", q_blk, k,
+                       preferred_element_type=jnp.float32) * scale
+        s = shard_fn(s, ("batch", "seq", None, None, None, None))
+        mask = jnp.ones((ways, qc, Skv), bool)
+        if causal:
+            mask &= k_pos[None, None, :] <= q_pos[:, :, None]
+        if window and window > 0:
+            mask &= k_pos[None, None, :] > (q_pos[:, :, None] - window)
+        s = jnp.where(mask[None, :, None, None, :, :], s, NEG_INF)
+        s = s - jax.lax.stop_gradient(jnp.max(s, axis=-1, keepdims=True))
+        p = jnp.exp(s)
+        p = p / jnp.maximum(jnp.sum(p, axis=-1, keepdims=True), 1e-30)
+        out = jnp.einsum("bwkgqs,bskd->bwqkgd", p.astype(v.dtype), v)
+        return carry, shard_fn(out, ("batch", "seq", None, None, None, None))
+
+    if outer == 1:
+        _, out = body(None, (qg[0], jnp.asarray(0)))
+        out = out[None]
+    else:
+        _, out = jax.lax.scan(body, None, (qg, jnp.arange(outer)))
+    out = out.transpose(1, 0, 2, 3, 4, 5, 6).reshape(B, Sq_p, H, D)
+    return out[:, :Sq]
+
+
+def attention(q, k, v, *, causal=True, window=0, q_chunk=512, impl="xla",
+              banded=False, cp_ways=0, shard_fn=None):
+    if impl == "pallas":
+        from repro.kernels.flash_attention import ops as fa_ops
+
+        return fa_ops.flash_attention(q, k, v, causal=causal, window=window)
+    if cp_ways and cp_ways > 1:
+        return cp_chunked_attention(q, k, v, causal=causal, window=window,
+                                    q_chunk=q_chunk, ways=cp_ways,
+                                    shard_fn=shard_fn)
+    return chunked_attention(q, k, v, causal=causal, window=window,
+                             q_chunk=q_chunk, banded=banded)

@@ -1,0 +1,121 @@
+"""Encoder-only audio model (HuBERT-XL backbone).
+
+The CNN waveform frontend is a STUB per the assignment: ``input_specs``
+provides precomputed frame features (B, S, frame_feat_dim); the model applies
+the learned feature projection, sinusoidal positions, and a bidirectional
+transformer encoder. Training is masked prediction over a 504-entry codebook
+(HuBERT-style): masked frames are replaced by a learned mask embedding and the
+cross-entropy is computed at masked positions only.
+
+Encoder-only ⇒ no decode step (decode shape cells are documented skips).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.sharding import shard
+from repro.modeling.attention import attention
+from repro.modeling.layers import apply_norm, norm_specs, sinusoidal_positions
+from repro.modeling.lm import (
+    LM,
+    _maybe_remat,
+    attn_qkv,
+    attn_specs,
+    mlp_apply,
+    mlp_specs,
+    subtree_rel,
+)
+from repro.modeling.losses import chunked_softmax_xent
+from repro.modeling.module import ParamSpec, prefix_specs, stacked, subtree
+
+
+class AudioEncoder(LM):
+    def layer_specs(self):
+        cfg = self.cfg
+        s = {}
+        s.update(prefix_specs("ln_attn", norm_specs(cfg.norm, cfg.d_model)))
+        s.update(prefix_specs("attn", attn_specs(cfg)))
+        s.update(prefix_specs("ln_mlp", norm_specs(cfg.norm, cfg.d_model)))
+        s.update(prefix_specs("mlp", mlp_specs(cfg, cfg.d_ff)))
+        return s
+
+    def param_specs(self):
+        cfg = self.cfg
+        specs = {
+            "frontend/w": ParamSpec((cfg.frame_feat_dim, cfg.d_model),
+                                    (None, "embed")),
+            "frontend/b": ParamSpec((cfg.d_model,), ("embed",), init="zeros"),
+            "mask_emb": ParamSpec((cfg.d_model,), ("embed",), init="embed",
+                                  scale=0.02),
+        }
+        specs.update(prefix_specs(
+            "layers", {k: stacked(v, cfg.n_layers) for k, v in self.layer_specs().items()}))
+        specs.update(prefix_specs("ln_f", norm_specs(cfg.norm, cfg.d_model)))
+        specs["head/w"] = ParamSpec((cfg.d_model, cfg.vocab), ("embed", "vocab"),
+                                    scale=cfg.d_model ** -0.5)
+        return specs
+
+    def _layer(self, p, x, positions, mode, **kw):
+        cfg = self.cfg
+        h = apply_norm(cfg.norm, x, p, "ln_attn")
+        q, k, v = attn_qkv(cfg, subtree_rel(p, "attn"), h, positions)
+        att = attention(q, k, v, causal=False, window=0,
+                        q_chunk=cfg.q_chunk, impl=cfg.attn_impl)
+        o = jnp.einsum("bshk,hkd->bsd", att, p["attn/o"].astype(x.dtype))
+        x = x + shard(o, ("batch", None, None))
+        h2 = apply_norm(cfg.norm, x, p, "ln_mlp")
+        x = x + shard(mlp_apply(cfg, subtree_rel(p, "mlp"), h2),
+                      ("batch", None, None))
+        return x
+
+    def forward(self, params, batch):
+        cfg = self.cfg
+        dt = jnp.dtype(cfg.dtype)
+        x = (jnp.einsum("bsf,fd->bsd", batch["frames"].astype(dt),
+                        params["frontend/w"].astype(dt))
+             + params["frontend/b"].astype(dt))
+        if "mask" in batch:
+            m = batch["mask"].astype(dt)[..., None]
+            x = x * (1.0 - m) + params["mask_emb"].astype(dt) * m
+        S = x.shape[1]
+        x = x + sinusoidal_positions(S, cfg.d_model, dt)[None]
+        x = shard(x, ("batch", None, None))
+        positions = jnp.arange(S)[None, :]
+        stacked_p = subtree(params, "layers")
+
+        def body(x, layer_p):
+            return self._layer(layer_p, x, positions, "train"), None
+
+        body = _maybe_remat(body, cfg.remat)
+        x, _ = jax.lax.scan(body, x, stacked_p)
+        x = apply_norm(cfg.norm, x, params, "ln_f")
+        return x, jnp.zeros((), jnp.float32)
+
+    def loss(self, params, batch):
+        cfg = self.cfg
+        h, _ = self.forward(params, batch)
+        mask = batch.get("mask")
+        if mask is None:
+            mask = jnp.ones(batch["targets"].shape, jnp.float32)
+        loss_sum, denom = chunked_softmax_xent(
+            h, params["head/w"].astype(h.dtype), batch["targets"],
+            mask.astype(jnp.float32), chunk=cfg.loss_chunk,
+            impl=cfg.loss_impl)
+        loss = loss_sum / jnp.maximum(denom, 1.0)
+        return loss, {"xent": loss}
+
+    def encode(self, params, batch):
+        """Inference forward ("prefill" for the encoder family): frame logits."""
+        h, _ = self.forward(params, batch)
+        logits = jnp.einsum("bsd,dv->bsv", h, params["head/w"].astype(h.dtype),
+                            preferred_element_type=jnp.float32)
+        return logits
+
+    # encoder-only: no KV cache / decode step
+    def prefill(self, params, batch, cache_len=None):
+        return self.encode(params, batch), None
+
+    def decode_step(self, params, cache, batch):
+        raise NotImplementedError("encoder-only architecture has no decode step")

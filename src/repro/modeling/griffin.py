@@ -1,0 +1,310 @@
+"""Griffin-style hybrid LM (RecurrentGemma): RG-LRU blocks + local attention.
+
+Layer pattern (rec, rec, attn) repeats; for 38 layers that is 12 full groups
+plus a (rec, rec) tail. Scan-over-groups keeps the HLO small: recurrent-layer
+params are stacked (n_rec, ...) and attention-layer params (n_attn, ...);
+full groups scan over (2 rec + 1 attn) slices, tail layers run unrolled.
+
+The local-attention KV cache is a ring buffer of ``attn_window`` slots (keys
+stored post-RoPE), which is what makes the 500k-token decode cell bounded.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.sharding import shard
+from repro.modeling.attention import attention, decode_attention
+from repro.modeling.layers import apply_norm, norm_specs
+from repro.modeling.lm import (
+    LM,
+    _maybe_remat,
+    attn_qkv,
+    attn_specs,
+    mlp_apply,
+    mlp_specs,
+    subtree_rel,
+)
+from repro.modeling.losses import chunked_softmax_xent
+from repro.modeling.module import (
+    ParamSpec,
+    abstract_params,
+    init_params,
+    param_count,
+    prefix_specs,
+    stacked,
+    subtree,
+)
+from repro.modeling.rglru import rglru_block_apply, rglru_block_specs
+
+
+def _pattern_layout(cfg):
+    pat = cfg.block_pattern or ("rec", "rec", "attn")
+    full = cfg.n_layers // len(pat)
+    tail = tuple(pat[: cfg.n_layers % len(pat)])
+    n_rec = full * pat.count("rec") + tail.count("rec")
+    n_attn = full * pat.count("attn") + tail.count("attn")
+    return pat, full, tail, n_rec, n_attn
+
+
+class GriffinLM(LM):
+    # ------------------------------------------------------------- params
+    def rec_layer_specs(self):
+        cfg = self.cfg
+        s = {}
+        s.update(prefix_specs("ln_mix", norm_specs(cfg.norm, cfg.d_model)))
+        s.update(prefix_specs("mixer", rglru_block_specs(cfg)))
+        s.update(prefix_specs("ln_mlp", norm_specs(cfg.norm, cfg.d_model)))
+        s.update(prefix_specs("mlp", mlp_specs(cfg, cfg.d_ff)))
+        return s
+
+    def attn_layer_specs(self):
+        cfg = self.cfg
+        s = {}
+        s.update(prefix_specs("ln_mix", norm_specs(cfg.norm, cfg.d_model)))
+        s.update(prefix_specs("attn", attn_specs(cfg)))
+        s.update(prefix_specs("ln_mlp", norm_specs(cfg.norm, cfg.d_model)))
+        s.update(prefix_specs("mlp", mlp_specs(cfg, cfg.d_ff)))
+        return s
+
+    def param_specs(self):
+        cfg = self.cfg
+        _, _, _, n_rec, n_attn = _pattern_layout(cfg)
+        specs = {
+            "embed/w": ParamSpec((cfg.vocab, cfg.d_model), ("vocab", "embed"),
+                                 init="embed"),
+        }
+        specs.update(prefix_specs(
+            "rec_layers",
+            {k: stacked(v, n_rec) for k, v in self.rec_layer_specs().items()}))
+        specs.update(prefix_specs(
+            "attn_layers",
+            {k: stacked(v, n_attn) for k, v in self.attn_layer_specs().items()}))
+        specs.update(prefix_specs("ln_f", norm_specs(cfg.norm, cfg.d_model)))
+        if not cfg.tie_embeddings:
+            specs["unembed/w"] = ParamSpec((cfg.d_model, cfg.vocab),
+                                           ("embed", "vocab"),
+                                           scale=cfg.d_model ** -0.5)
+        return specs
+
+    # ------------------------------------------------------------- layers
+    def _rec_layer(self, p, x, state=None, conv=None):
+        cfg = self.cfg
+        h = apply_norm(cfg.norm, x, p, "ln_mix")
+        mix, st, cv = rglru_block_apply(cfg, subtree_rel(p, "mixer"), h,
+                                        state=state, conv_state=conv,
+                                        impl=cfg.attn_impl)
+        # NOTE: no sequence sharding here — the RG-LRU scan is sequential in
+        # S, so sequence-sharded residuals would force an all-gather per rec
+        # layer (measured: collective went UP 40%; EXPERIMENTS.md §Perf H2.2).
+        x = x + shard(mix, ("batch", None, None))
+        h2 = apply_norm(cfg.norm, x, p, "ln_mlp")
+        x = x + shard(mlp_apply(cfg, subtree_rel(p, "mlp"), h2),
+                      ("batch", None, None))
+        return x, st, cv
+
+    def _attn_layer(self, p, x, positions, mode, kc=None, vc=None, pos=None):
+        cfg = self.cfg
+        h = apply_norm(cfg.norm, x, p, "ln_mix")
+        q, k, v = attn_qkv(cfg, subtree_rel(p, "attn"), h, positions)
+        W = cfg.attn_window
+        if mode == "decode":
+            wp = pos % kc.shape[1]
+            kc = jax.lax.dynamic_update_slice(kc, k, (0, wp, 0, 0))
+            vc = jax.lax.dynamic_update_slice(vc, v, (0, wp, 0, 0))
+            B = x.shape[0]
+            length = jnp.minimum(pos + 1, kc.shape[1])
+            att = decode_attention(q, kc, vc, jnp.full((B,), length, jnp.int32),
+                                   impl=cfg.attn_impl)
+        else:
+            if cfg.cp_attn:
+                q = shard(q, ("batch", "seq", None, None))
+            att = attention(q, k, v, causal=True, window=W,
+                            q_chunk=cfg.q_chunk, impl=cfg.attn_impl,
+                            banded=cfg.banded_window)
+            if mode == "prefill":
+                S = k.shape[1]
+                kv_len = min(W, S) if W else S
+                # ring-buffer convention: slot = position % kv_len
+                shift = (S - kv_len) % kv_len
+                kc = jnp.roll(k[:, -kv_len:], shift, axis=1)
+                vc = jnp.roll(v[:, -kv_len:], shift, axis=1)
+        o = jnp.einsum("bshk,hkd->bsd", att, p["attn/o"].astype(x.dtype))
+        x = x + shard(o, ("batch", None, None))
+        if cfg.sp_acts and mode == "train":
+            # SP pays off only around attention+MLP (position-local ops);
+            # the following rec layer re-gathers once instead of per-op.
+            x = shard(x, ("batch", "seq", None))
+        h2 = apply_norm(cfg.norm, x, p, "ln_mlp")
+        x = x + shard(mlp_apply(cfg, subtree_rel(p, "mlp"), h2),
+                      ("batch", None, None))
+        return x, kc, vc
+
+    # ------------------------------------------------------------ forward
+    def _run(self, params, x, positions, mode, cache=None):
+        """Shared trunk for train/prefill/decode; returns (x, new_cache)."""
+        cfg = self.cfg
+        pat, full, tail, n_rec, n_attn = _pattern_layout(cfg)
+        rec_per_group = pat.count("rec")
+        attn_per_group = pat.count("attn")
+        rec_p = subtree(params, "rec_layers")
+        attn_p = subtree(params, "attn_layers")
+        grouped_rec = {k: v[: full * rec_per_group].reshape(
+            full, rec_per_group, *v.shape[1:]) for k, v in rec_p.items()}
+        grouped_attn = {k: v[: full * attn_per_group].reshape(
+            full, attn_per_group, *v.shape[1:]) for k, v in attn_p.items()}
+
+        dec = mode == "decode"
+        if dec:
+            st, cv = cache["state"], cache["conv"]
+            kc, vc = cache["k"], cache["v"]
+            pos = cache["pos"]
+            g_st = st[: full * rec_per_group].reshape(full, rec_per_group, *st.shape[1:])
+            g_cv = cv[: full * rec_per_group].reshape(full, rec_per_group, *cv.shape[1:])
+            g_kc = kc[: full * attn_per_group].reshape(full, attn_per_group, *kc.shape[1:])
+            g_vc = vc[: full * attn_per_group].reshape(full, attn_per_group, *vc.shape[1:])
+
+        def group_body(x, xs):
+            if dec:
+                rec2, attn1, st2, cv2, kc1, vc1 = xs
+            else:
+                rec2, attn1 = xs
+                st2 = cv2 = kc1 = vc1 = None
+            sts, cvs, kcs, vcs = [], [], [], []
+            ri = ai = 0
+            for kind in pat:
+                if kind == "rec":
+                    pi = {k: v[ri] for k, v in rec2.items()}
+                    x, s_new, c_new = self._rec_layer(
+                        pi, x,
+                        state=st2[ri] if dec else None,
+                        conv=cv2[ri] if dec else None)
+                    sts.append(s_new)
+                    cvs.append(c_new)
+                    ri += 1
+                else:
+                    pi = {k: v[ai] for k, v in attn1.items()}
+                    x, kc_new, vc_new = self._attn_layer(
+                        pi, x, positions, mode,
+                        kc=kc1[ai] if dec else None,
+                        vc=vc1[ai] if dec else None,
+                        pos=pos if dec else None)
+                    kcs.append(kc_new)
+                    vcs.append(vc_new)
+                    ai += 1
+            ys = (jnp.stack(sts), jnp.stack(cvs))
+            if mode != "train":
+                ys = ys + (jnp.stack(kcs), jnp.stack(vcs))
+            return x, ys
+
+        body = _maybe_remat(group_body, cfg.remat if mode != "decode" else "none")
+        xs = (grouped_rec, grouped_attn)
+        if dec:
+            xs = xs + (g_st, g_cv, g_kc, g_vc)
+        x, ys = jax.lax.scan(body, x, xs)
+
+        # tail layers (unrolled)
+        tail_out = []
+        for i, kind in enumerate(tail):
+            idx = full * rec_per_group + i  # tails are "rec" for our pattern
+            assert kind == "rec"
+            pi = {k: v[idx] for k, v in rec_p.items()}
+            x, s_new, c_new = self._rec_layer(
+                pi, x,
+                state=cache["state"][idx] if dec else None,
+                conv=cache["conv"][idx] if dec else None)
+            tail_out.append((s_new, c_new))
+
+        new_cache = None
+        if mode != "train":
+            sts = ys[0].reshape(full * rec_per_group, *ys[0].shape[2:])
+            cvs = ys[1].reshape(full * rec_per_group, *ys[1].shape[2:])
+            if tail_out:
+                sts = jnp.concatenate([sts, jnp.stack([t[0] for t in tail_out])])
+                cvs = jnp.concatenate([cvs, jnp.stack([t[1] for t in tail_out])])
+            kcs = ys[2].reshape(n_attn, *ys[2].shape[2:])
+            vcs = ys[3].reshape(n_attn, *ys[3].shape[2:])
+            new_cache = {"state": sts, "conv": cvs, "k": kcs, "v": vcs}
+        return x, new_cache
+
+    def forward(self, params, batch):
+        x = self._embed_inputs(params, batch)
+        positions = jnp.arange(x.shape[1])[None, :]
+        x, _ = self._run(params, x, positions, "train")
+        x = apply_norm(self.cfg.norm, x, params, "ln_f")
+        return x, jnp.zeros((), jnp.float32)
+
+    def loss(self, params, batch):
+        cfg = self.cfg
+        h, _ = self.forward(params, batch)
+        mask = batch.get("loss_mask")
+        if mask is None:
+            mask = jnp.ones_like(batch["targets"], jnp.float32)
+        loss_sum, denom = chunked_softmax_xent(
+            h, self._unembed(params).astype(h.dtype), batch["targets"],
+            mask.astype(jnp.float32), chunk=cfg.loss_chunk,
+            cap=cfg.logits_softcap, impl=cfg.loss_impl)
+        loss = loss_sum / jnp.maximum(denom, 1.0)
+        return loss, {"xent": loss}
+
+    # ------------------------------------------------------------ serving
+    def cache_shape(self, batch_size: int, cache_len: int):
+        cfg = self.cfg
+        _, _, _, n_rec, n_attn = _pattern_layout(cfg)
+        W = cfg.conv_width
+        kv_len = min(cache_len, cfg.attn_window) if cfg.attn_window else cache_len
+        dt = jnp.dtype(cfg.dtype)
+        return {
+            "state": jax.ShapeDtypeStruct((n_rec, batch_size, cfg.d_rnn), jnp.float32),
+            "conv": jax.ShapeDtypeStruct((n_rec, batch_size, W - 1, cfg.d_rnn), dt),
+            "k": jax.ShapeDtypeStruct(
+                (n_attn, batch_size, kv_len, cfg.n_kv_heads, cfg.head_dim), dt),
+            "v": jax.ShapeDtypeStruct(
+                (n_attn, batch_size, kv_len, cfg.n_kv_heads, cfg.head_dim), dt),
+            "pos": jax.ShapeDtypeStruct((), jnp.int32),
+        }
+
+    def cache_axes(self):
+        kv = ("layers", "batch", "kv_seq", "kv_heads", None)
+        return {
+            "state": ("layers", "batch", "rnn"),
+            "conv": ("layers", "batch", None, "rnn"),
+            "k": kv, "v": kv, "pos": (),
+        }
+
+    def prefill(self, params, batch, cache_len: int | None = None):
+        cfg = self.cfg
+        x = self._embed_inputs(params, batch)
+        B, S = x.shape[0], x.shape[1]
+        cache_len = cache_len or S
+        positions = jnp.arange(S)[None, :]
+        x, cache = self._run(params, x, positions, "prefill")
+        x = apply_norm(cfg.norm, x, params, "ln_f")
+        logits = jnp.einsum("bd,dv->bv", x[:, -1, :],
+                            self._unembed(params).astype(x.dtype),
+                            preferred_element_type=jnp.float32)
+        kv_len = min(cache_len, cfg.attn_window) if cfg.attn_window else cache_len
+        cur = cache["k"].shape[2]
+        if kv_len > cur:
+            pad = [(0, 0), (0, 0), (0, kv_len - cur), (0, 0), (0, 0)]
+            cache["k"] = jnp.pad(cache["k"], pad)
+            cache["v"] = jnp.pad(cache["v"], pad)
+        cache["conv"] = cache["conv"].astype(jnp.dtype(cfg.dtype))
+        cache["pos"] = jnp.asarray(S, jnp.int32)
+        return logits, cache
+
+    def decode_step(self, params, cache, batch):
+        cfg = self.cfg
+        dt = jnp.dtype(cfg.dtype)
+        tok = batch["token"]
+        pos = cache["pos"]
+        x = params["embed/w"].astype(dt)[tok][:, None, :]
+        positions = jnp.broadcast_to(pos, (x.shape[0], 1))
+        x, new_cache = self._run(params, x, positions, "decode", cache=cache)
+        x = apply_norm(cfg.norm, x, params, "ln_f")
+        logits = jnp.einsum("bd,dv->bv", x[:, 0, :],
+                            self._unembed(params).astype(x.dtype),
+                            preferred_element_type=jnp.float32)
+        new_cache["pos"] = pos + 1
+        return logits, new_cache

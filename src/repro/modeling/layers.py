@@ -1,0 +1,109 @@
+"""Shared layers: norms, rotary embeddings, activations, positional encodings."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+# --------------------------------------------------------------------- norms
+def rms_norm(x, scale, eps: float = 1e-6):
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    out = x * jax.lax.rsqrt(var + eps)
+    return (out * (1.0 + scale.astype(jnp.float32))).astype(dt)
+
+
+def layer_norm(x, scale, bias, eps: float = 1e-5):
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    mean = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.var(x, axis=-1, keepdims=True)
+    out = (x - mean) * jax.lax.rsqrt(var + eps)
+    if scale is not None:
+        out = out * scale.astype(jnp.float32)
+    if bias is not None:
+        out = out + bias.astype(jnp.float32)
+    return out.astype(dt)
+
+
+def np_layer_norm(x, eps: float = 1e-5):
+    """Non-parametric LayerNorm (OLMo): no learned scale/bias."""
+    return layer_norm(x, None, None, eps)
+
+
+def apply_norm(kind: str, x, params: dict, prefix: str):
+    if kind == "rmsnorm":
+        return rms_norm(x, params[f"{prefix}/scale"])
+    if kind == "layernorm":
+        return layer_norm(x, params[f"{prefix}/scale"], params[f"{prefix}/bias"])
+    if kind == "np_layernorm":
+        return np_layer_norm(x)
+    raise ValueError(f"unknown norm {kind!r}")
+
+
+def norm_specs(kind: str, d: int):
+    from repro.modeling.module import ParamSpec
+
+    if kind == "rmsnorm":
+        return {"scale": ParamSpec((d,), ("embed",), init="zeros")}
+    if kind == "layernorm":
+        return {
+            "scale": ParamSpec((d,), ("embed",), init="ones"),
+            "bias": ParamSpec((d,), ("embed",), init="zeros"),
+        }
+    if kind == "np_layernorm":
+        return {}
+    raise ValueError(f"unknown norm {kind!r}")
+
+
+# ---------------------------------------------------------------- activations
+def activation(kind: str, x, x_gate=None):
+    """Gated activations take (gate_input, linear_input)."""
+    if kind == "swiglu":
+        return jax.nn.silu(x) * x_gate
+    if kind == "geglu":
+        return jax.nn.gelu(x, approximate=True) * x_gate
+    if kind == "sqrelu":  # Nemotron-4: squared ReLU
+        r = jax.nn.relu(x)
+        return r * r
+    if kind == "gelu":
+        return jax.nn.gelu(x, approximate=True)
+    raise ValueError(f"unknown activation {kind!r}")
+
+
+def is_gated(kind: str) -> bool:
+    return kind in ("swiglu", "geglu")
+
+
+# --------------------------------------------------------------------- rotary
+def rope_frequencies(head_dim: int, theta: float):
+    return 1.0 / (theta ** (np.arange(0, head_dim, 2, dtype=np.float32) / head_dim))
+
+
+def apply_rope(x, positions, theta: float = 10000.0):
+    """x: (..., S, H, D) with matching positions (..., S)."""
+    d = x.shape[-1]
+    freqs = jnp.asarray(rope_frequencies(d, theta))  # (d/2,)
+    angles = positions[..., None].astype(jnp.float32) * freqs  # (..., S, d/2)
+    sin = jnp.sin(angles)[..., None, :]  # broadcast over heads
+    cos = jnp.cos(angles)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+def sinusoidal_positions(seq_len: int, d_model: int, dtype=jnp.float32):
+    pos = np.arange(seq_len)[:, None]
+    i = np.arange(d_model // 2)[None, :]
+    angle = pos / np.power(10000.0, 2 * i / d_model)
+    emb = np.concatenate([np.sin(angle), np.cos(angle)], axis=-1)
+    return jnp.asarray(emb, dtype)
+
+
+def softcap(logits, cap: float):
+    if cap and cap > 0:
+        return jnp.tanh(logits / cap) * cap
+    return logits

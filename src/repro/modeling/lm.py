@@ -1,0 +1,481 @@
+"""Decoder-only LM covering the dense / MoE / VLM families.
+
+One composable implementation parameterized by ArchConfig:
+- GQA/MQA/MHA attention with RoPE (optionally local-windowed),
+- gated (SwiGLU/GeGLU) or plain (squared-ReLU/GeLU) MLPs, or Gshard MoE
+  (with optional shared expert, llama4-style),
+- ``moe_every = k``: MoE on every k-th layer (llama4-maverick interleaving),
+  implemented as a grouped scan over (k−1 dense + 1 MoE) parameter stacks,
+- optional vision-prefix input (InternVL-style stub frontend),
+- scan-over-layers with stacked parameters (keeps HLO size O(1) in depth),
+- chunked-vocab cross-entropy loss,
+- prefill (cache build) and single-token decode steps for serving.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.distributed.sharding import axis_ways, shard
+from repro.modeling.attention import attention, decode_attention
+from repro.modeling.layers import (
+    activation,
+    apply_norm,
+    apply_rope,
+    is_gated,
+    norm_specs,
+)
+from repro.modeling.losses import chunked_softmax_xent
+from repro.modeling.moe import moe_apply, moe_specs
+from repro.modeling.module import (
+    ParamSpec,
+    abstract_params,
+    init_params,
+    param_count,
+    prefix_specs,
+    stacked,
+    subtree,
+)
+
+
+def mlp_specs(cfg, d_ff: int) -> dict[str, ParamSpec]:
+    d = cfg.d_model
+    s = {"wo": ParamSpec((d_ff, d), ("mlp", "embed"))}
+    if is_gated(cfg.act):
+        s["wi_0"] = ParamSpec((d, d_ff), ("embed", "mlp"))
+        s["wi_1"] = ParamSpec((d, d_ff), ("embed", "mlp"))
+    else:
+        s["wi"] = ParamSpec((d, d_ff), ("embed", "mlp"))
+    return s
+
+
+def mlp_apply(cfg, p: dict, x):
+    dt = x.dtype
+    if is_gated(cfg.act):
+        h = activation(cfg.act,
+                       jnp.einsum("bsd,df->bsf", x, p["wi_0"].astype(dt)),
+                       jnp.einsum("bsd,df->bsf", x, p["wi_1"].astype(dt)))
+    else:
+        h = activation(cfg.act, jnp.einsum("bsd,df->bsf", x, p["wi"].astype(dt)))
+    h = shard(h, ("batch", None, "mlp_act"))
+    return jnp.einsum("bsf,fd->bsd", h, p["wo"].astype(dt))
+
+
+def attn_specs(cfg) -> dict[str, ParamSpec]:
+    d, h, kv, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    return {
+        "q": ParamSpec((d, h, hd), ("embed", "heads", "head_dim")),
+        "k": ParamSpec((d, kv, hd), ("embed", "kv_heads", "head_dim")),
+        "v": ParamSpec((d, kv, hd), ("embed", "kv_heads", "head_dim")),
+        "o": ParamSpec((h, hd, d), ("heads", "head_dim", "embed")),
+    }
+
+
+def attn_qkv(cfg, p: dict, h, positions):
+    dt = h.dtype
+    q = jnp.einsum("bsd,dhk->bshk", h, p["q"].astype(dt))
+    k = jnp.einsum("bsd,dhk->bshk", h, p["k"].astype(dt))
+    v = jnp.einsum("bsd,dhk->bshk", h, p["v"].astype(dt))
+    if cfg.pos_emb == "rope":
+        q = apply_rope(q, positions, cfg.rope_theta)
+        k = apply_rope(k, positions, cfg.rope_theta)
+    q = shard(q, ("batch", None, "heads", None))
+    k = shard(k, ("batch", None, "kv_heads", None))
+    v = shard(v, ("batch", None, "kv_heads", None))
+    return q, k, v
+
+
+def subtree_rel(p: dict, prefix: str) -> dict:
+    pre = prefix + "/"
+    return {k[len(pre):]: v for k, v in p.items() if k.startswith(pre)}
+
+
+def kv_quantize(x):
+    """(…, hd) bf16 -> (int8 values, fp32 scales with trailing 1-dim)."""
+    scale = jnp.max(jnp.abs(x.astype(jnp.float32)), axis=-1, keepdims=True)
+    scale = jnp.maximum(scale, 1e-6) / 127.0
+    q = jnp.clip(jnp.round(x.astype(jnp.float32) / scale), -127, 127)
+    return q.astype(jnp.int8), scale
+
+
+def kv_dequantize(q, scale, dtype):
+    return (q.astype(jnp.float32) * scale).astype(dtype)
+
+
+def _maybe_remat(fn, remat: str):
+    if remat == "full":
+        return jax.checkpoint(fn)
+    if remat == "dots":
+        return jax.checkpoint(
+            fn, policy=jax.checkpoint_policies.dots_with_no_batch_dims_saveable)
+    return fn
+
+
+class LM:
+    def __init__(self, cfg):
+        self.cfg = cfg
+
+    # ------------------------------------------------------------- layout
+    @property
+    def moe_every(self) -> int:
+        return getattr(self.cfg, "moe_every", 1) if self.cfg.n_experts else 1
+
+    def _layout(self):
+        """Returns (n_groups, dense_per_group) for the grouped-scan layout."""
+        e = self.moe_every
+        if e <= 1:
+            return self.cfg.n_layers, 0
+        assert self.cfg.n_layers % e == 0, (self.cfg.n_layers, e)
+        return self.cfg.n_layers // e, e - 1
+
+    # ------------------------------------------------------------- params
+    def layer_specs(self, moe: bool | None = None) -> dict[str, ParamSpec]:
+        cfg = self.cfg
+        if moe is None:
+            moe = bool(cfg.n_experts)
+        s: dict[str, ParamSpec] = {}
+        s.update(prefix_specs("ln_attn", norm_specs(cfg.norm, cfg.d_model)))
+        s.update(prefix_specs("attn", attn_specs(cfg)))
+        s.update(prefix_specs("ln_mlp", norm_specs(cfg.norm, cfg.d_model)))
+        if moe:
+            s.update(prefix_specs("moe", moe_specs(cfg)))
+            if cfg.shared_expert:
+                s.update(prefix_specs("shared_mlp", mlp_specs(cfg, cfg.d_ff)))
+        else:
+            s.update(prefix_specs("mlp", mlp_specs(cfg, cfg.d_ff)))
+        return s
+
+    def param_specs(self) -> dict[str, ParamSpec]:
+        cfg = self.cfg
+        specs: dict[str, ParamSpec] = {
+            "embed/w": ParamSpec((cfg.vocab, cfg.d_model), ("vocab", "embed"),
+                                 init="embed"),
+        }
+        if cfg.vision_feat_dim:
+            specs["vision_proj/w"] = ParamSpec(
+                (cfg.vision_feat_dim, cfg.d_model), (None, "embed"))
+        G, dpg = self._layout()
+        if dpg == 0:
+            specs.update(prefix_specs(
+                "layers",
+                {k: stacked(v, cfg.n_layers) for k, v in self.layer_specs().items()}))
+        else:
+            specs.update(prefix_specs(
+                "layers_dense",
+                {k: stacked(v, G * dpg) for k, v in self.layer_specs(moe=False).items()}))
+            specs.update(prefix_specs(
+                "layers_moe",
+                {k: stacked(v, G) for k, v in self.layer_specs(moe=True).items()}))
+        specs.update(prefix_specs("ln_f", norm_specs(cfg.norm, cfg.d_model)))
+        if not cfg.tie_embeddings:
+            specs["unembed/w"] = ParamSpec(
+                (cfg.d_model, cfg.vocab), ("embed", "vocab"),
+                scale=cfg.d_model ** -0.5)
+        return specs
+
+    def init(self, key, dtype=None):
+        dtype = dtype or jnp.dtype(self.cfg.param_dtype)
+        return init_params(key, self.param_specs(), dtype)
+
+    def abstract_params(self, dtype=None):
+        dtype = dtype or jnp.dtype(self.cfg.param_dtype)
+        return abstract_params(self.param_specs(), dtype)
+
+    def param_count(self) -> int:
+        return param_count(self.param_specs())
+
+    def active_param_count(self) -> int:
+        """Active params per token (differs from total for MoE)."""
+        cfg = self.cfg
+        total = 0
+        for path, s in self.param_specs().items():
+            n = int(np.prod(s.shape))
+            if "/moe/" in path and "router" not in path:
+                n = n * max(cfg.top_k, 1) // max(cfg.n_experts, 1)
+            total += n
+        return total
+
+    def _unembed(self, params):
+        if self.cfg.tie_embeddings:
+            return params["embed/w"].T
+        return params["unembed/w"]
+
+    # ------------------------------------------------------------ forward
+    def _embed_inputs(self, params, batch):
+        cfg = self.cfg
+        dt = jnp.dtype(cfg.dtype)
+        x = params["embed/w"].astype(dt)[batch["tokens"]]
+        if cfg.vision_feat_dim and "vision_embeds" in batch:
+            ve = jnp.einsum("bvf,fd->bvd", batch["vision_embeds"].astype(dt),
+                            params["vision_proj/w"].astype(dt))
+            x = jnp.concatenate([ve, x], axis=1)
+        x = shard(x, ("batch", None, None))
+        return x
+
+    def _layer(self, p, x, positions, mode, moe, kc=None, vc=None, pos=None,
+               ksc=None, vsc=None):
+        """One transformer layer. p holds this layer's (unstacked) params."""
+        cfg = self.cfg
+        h = apply_norm(cfg.norm, x, p, "ln_attn")
+        q, k, v = attn_qkv(cfg, subtree_rel(p, "attn"), h, positions)
+        if mode == "decode":
+            if cfg.kv_quant:
+                kq, ks = kv_quantize(k)
+                vq, vs = kv_quantize(v)
+                kc = jax.lax.dynamic_update_slice(kc, kq, (0, pos, 0, 0))
+                vc = jax.lax.dynamic_update_slice(vc, vq, (0, pos, 0, 0))
+                ksc = jax.lax.dynamic_update_slice(ksc, ks, (0, pos, 0, 0))
+                vsc = jax.lax.dynamic_update_slice(vsc, vs, (0, pos, 0, 0))
+                k_att = kv_dequantize(kc, ksc, x.dtype)
+                v_att = kv_dequantize(vc, vsc, x.dtype)
+            else:
+                kc = jax.lax.dynamic_update_slice(kc, k, (0, pos, 0, 0))
+                vc = jax.lax.dynamic_update_slice(vc, v, (0, pos, 0, 0))
+                k_att, v_att = kc, vc
+            B = x.shape[0]
+            length = jnp.full((B,), pos + 1, jnp.int32)
+            att = decode_attention(q, k_att, v_att, length,
+                                   window=cfg.attn_window,
+                                   positions=jnp.arange(kc.shape[1]),
+                                   impl=cfg.attn_impl)
+        else:
+            # context parallelism (§Perf H1.2): shard query blocks over the
+            # model axis (ways = what "seq" resolves to). K/V stay replicated
+            # (they already are for MQA/GQA with few KV heads).
+            ways = axis_ways("seq") if cfg.cp_attn else 0
+            att = attention(q, k, v, causal=True, window=cfg.attn_window,
+                            q_chunk=cfg.q_chunk, impl=cfg.attn_impl,
+                            banded=cfg.banded_window, cp_ways=ways,
+                            shard_fn=shard)
+            if mode == "prefill":
+                if cfg.kv_quant:
+                    kc, ksc = kv_quantize(k)
+                    vc, vsc = kv_quantize(v)
+                else:
+                    kc, vc = k, v
+        o = jnp.einsum("bshk,hkd->bsd", att, p["attn/o"].astype(x.dtype))
+        x = x + shard(o, ("batch", None, None))
+        if cfg.sp_acts and mode == "train":
+            # Megatron-style sequence parallelism: keep residuals sequence-
+            # sharded between blocks; GSPMD turns the TP all-reduces into
+            # reduce-scatter + all-gather pairs (half the link bytes).
+            x = shard(x, ("batch", "seq", None))
+
+        h2 = apply_norm(cfg.norm, x, p, "ln_mlp")
+        if moe:
+            y, aux = moe_apply(cfg, subtree_rel(p, "moe"), h2, shard_fn=shard)
+            if cfg.shared_expert:
+                y = y + mlp_apply(cfg, subtree_rel(p, "shared_mlp"), h2)
+        else:
+            y, aux = mlp_apply(cfg, subtree_rel(p, "mlp"), h2), jnp.zeros((), jnp.float32)
+        x = x + shard(y, ("batch", None, None))
+        if cfg.sp_acts and mode == "train":
+            x = shard(x, ("batch", "seq", None))
+        return x, aux, kc, vc, ksc, vsc
+
+    def _trunk(self, params, x, positions, mode, cache=None):
+        """Scan over layers. Returns (x, aux_sum, new_cache or None)."""
+        cfg = self.cfg
+        G, dpg = self._layout()
+        dec = mode == "decode"
+        emit_cache = mode in ("prefill", "decode")
+        pos = cache["pos"] if dec else None
+        kv_len = cache["k"].shape[2] if dec else None
+        write_pos = (pos % kv_len if cfg.attn_window else pos) if dec else None
+
+        quant = bool(cfg.kv_quant)
+        if dpg == 0:
+            stacked_p = subtree(params, "layers")
+            moe = bool(cfg.n_experts)
+
+            def body(x, xs):
+                ksc = vsc = None
+                if dec and quant:
+                    layer_p, kc, vc, ksc, vsc = xs
+                elif dec:
+                    layer_p, kc, vc = xs
+                else:
+                    layer_p, kc, vc = xs, None, None
+                x, aux, kc, vc, ksc, vsc = self._layer(
+                    layer_p, x, positions, mode, moe,
+                    kc=kc, vc=vc, pos=write_pos, ksc=ksc, vsc=vsc)
+                ys = (aux,)
+                if emit_cache:
+                    ys = ys + ((kc, vc, ksc, vsc) if quant else (kc, vc))
+                return x, ys
+
+            body = _maybe_remat(body, cfg.remat if mode != "decode" else "none")
+            if dec and quant:
+                xs = (stacked_p, cache["k"], cache["v"],
+                      cache["k_scale"], cache["v_scale"])
+            elif dec:
+                xs = (stacked_p, cache["k"], cache["v"])
+            else:
+                xs = stacked_p
+            x, ys = jax.lax.scan(body, x, xs)
+            aux = jnp.sum(ys[0])
+            new_cache = None
+            if emit_cache:
+                new_cache = {"k": ys[1], "v": ys[2]}
+                if quant:
+                    new_cache["k_scale"], new_cache["v_scale"] = ys[3], ys[4]
+            return x, aux, new_cache
+
+        # ---- grouped layout: (dpg dense + 1 moe) per group -----------------
+        dense_p = subtree(params, "layers_dense")
+        moe_p = subtree(params, "layers_moe")
+        g_dense = {k: v.reshape(G, dpg, *v.shape[1:]) for k, v in dense_p.items()}
+        if dec:
+            # cache layout: per group, dpg dense layers then the moe layer
+            k_all = cache["k"].reshape(G, dpg + 1, *cache["k"].shape[1:])
+            v_all = cache["v"].reshape(G, dpg + 1, *cache["v"].shape[1:])
+
+        assert not quant, "kv_quant: grouped (moe_every) layout not supported"
+
+        def body(x, xs):
+            if dec:
+                dense_g, moe_g, kg, vg = xs
+            else:
+                dense_g, moe_g = xs
+                kg = vg = [None] * (dpg + 1)
+            auxs = jnp.zeros((), jnp.float32)
+            kcs, vcs = [], []
+            for j in range(dpg):
+                pj = {k: v[j] for k, v in dense_g.items()}
+                x, a, kc, vc, _, _ = self._layer(pj, x, positions, mode, False,
+                                                 kc=kg[j] if dec else None,
+                                                 vc=vg[j] if dec else None,
+                                                 pos=write_pos)
+                auxs += a
+                kcs.append(kc)
+                vcs.append(vc)
+            x, a, kc, vc, _, _ = self._layer(moe_g, x, positions, mode, True,
+                                             kc=kg[dpg] if dec else None,
+                                             vc=vg[dpg] if dec else None,
+                                             pos=write_pos)
+            auxs += a
+            kcs.append(kc)
+            vcs.append(vc)
+            ys = (auxs,)
+            if emit_cache:
+                ys = ys + (jnp.stack(kcs), jnp.stack(vcs))
+            return x, ys
+
+        body = _maybe_remat(body, cfg.remat if mode != "decode" else "none")
+        xs = (g_dense, moe_p) + ((k_all, v_all) if dec else ())
+        x, ys = jax.lax.scan(body, x, xs)
+        aux = jnp.sum(ys[0])
+        new_cache = None
+        if emit_cache:
+            ks = ys[1].reshape(G * (dpg + 1), *ys[1].shape[2:])
+            vs = ys[2].reshape(G * (dpg + 1), *ys[2].shape[2:])
+            new_cache = {"k": ks, "v": vs}
+        return x, aux, new_cache
+
+    def forward(self, params, batch):
+        """Training/scoring forward: returns (hidden (B,S,D), aux_loss)."""
+        x = self._embed_inputs(params, batch)
+        positions = jnp.arange(x.shape[1])[None, :]
+        x, aux, _ = self._trunk(params, x, positions, "train")
+        x = apply_norm(self.cfg.norm, x, params, "ln_f")
+        return x, aux
+
+    # --------------------------------------------------------------- loss
+    def loss(self, params, batch):
+        cfg = self.cfg
+        h, aux = self.forward(params, batch)
+        mask = batch.get("loss_mask")
+        if mask is None:
+            mask = jnp.ones_like(batch["targets"], jnp.float32)
+        loss_sum, denom = chunked_softmax_xent(
+            h, self._unembed(params).astype(h.dtype), batch["targets"],
+            mask.astype(jnp.float32), chunk=cfg.loss_chunk,
+            cap=cfg.logits_softcap, impl=cfg.loss_impl)
+        loss = loss_sum / jnp.maximum(denom, 1.0)
+        xent = loss
+        if cfg.n_experts:
+            G, _ = self._layout()
+            loss = loss + 0.01 * aux / max(G, 1)
+        return loss, {"xent": xent, "aux": aux}
+
+    # ------------------------------------------------------------ serving
+    def cache_shape(self, batch_size: int, cache_len: int):
+        cfg = self.cfg
+        L = cfg.n_layers
+        kv_len = min(cache_len, cfg.attn_window) if cfg.attn_window else cache_len
+        shp = (L, batch_size, kv_len, cfg.n_kv_heads, cfg.head_dim)
+        kv_dt = jnp.int8 if cfg.kv_quant else jnp.dtype(cfg.dtype)
+        out = {
+            "k": jax.ShapeDtypeStruct(shp, kv_dt),
+            "v": jax.ShapeDtypeStruct(shp, kv_dt),
+            "pos": jax.ShapeDtypeStruct((), jnp.int32),
+        }
+        if cfg.kv_quant:
+            sshp = (L, batch_size, kv_len, cfg.n_kv_heads, 1)
+            out["k_scale"] = jax.ShapeDtypeStruct(sshp, jnp.float32)
+            out["v_scale"] = jax.ShapeDtypeStruct(sshp, jnp.float32)
+        return out
+
+    def cache_axes(self):
+        """Logical sharding axes matching cache_shape (for pjit in_shardings).
+
+        The KV sequence axis carries model parallelism when KV heads cannot
+        (GQA/MQA with n_kv_heads < model-axis size): flash-decode style
+        sequence sharding, with GSPMD inserting the softmax all-reduce.
+        """
+        kv = ("layers", "batch", "kv_seq", "kv_heads", None)
+        out = {"k": kv, "v": kv, "pos": ()}
+        if self.cfg.kv_quant:
+            out["k_scale"] = kv
+            out["v_scale"] = kv
+        return out
+
+    def init_cache(self, batch_size: int, cache_len: int):
+        return jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype),
+                            self.cache_shape(batch_size, cache_len))
+
+    def prefill(self, params, batch, cache_len: int | None = None):
+        """Process a full prompt; returns (last-token logits, cache)."""
+        cfg = self.cfg
+        x = self._embed_inputs(params, batch)
+        S = x.shape[1]
+        cache_len = cache_len or S
+        positions = jnp.arange(S)[None, :]
+        x, _, cache = self._trunk(params, x, positions, "prefill")
+        x = apply_norm(cfg.norm, x, params, "ln_f")
+        logits = jnp.einsum("bd,dv->bv", x[:, -1, :],
+                            self._unembed(params).astype(x.dtype),
+                            preferred_element_type=jnp.float32)
+
+        kv_len = min(cache_len, cfg.attn_window) if cfg.attn_window else cache_len
+
+        def fit(arr):
+            if kv_len >= S:
+                pad = [(0, 0), (0, 0), (0, kv_len - S), (0, 0), (0, 0)]
+                return jnp.pad(arr, pad)
+            shift = (S - kv_len) % kv_len
+            return jnp.roll(arr[:, :, -kv_len:], shift, axis=2)
+
+        out = {"k": fit(cache["k"]), "v": fit(cache["v"]),
+               "pos": jnp.asarray(S, jnp.int32)}
+        if cfg.kv_quant:
+            out["k_scale"] = fit(cache["k_scale"])
+            out["v_scale"] = fit(cache["v_scale"])
+        return logits, out
+
+    def decode_step(self, params, cache, batch):
+        """One token for every sequence in the batch (uniform position)."""
+        cfg = self.cfg
+        dt = jnp.dtype(cfg.dtype)
+        x = params["embed/w"].astype(dt)[batch["token"]][:, None, :]
+        x = shard(x, ("batch", None, None))
+        positions = jnp.broadcast_to(cache["pos"], (x.shape[0], 1))
+        x, _, new_cache = self._trunk(params, x, positions, "decode", cache=cache)
+        x = apply_norm(cfg.norm, x, params, "ln_f")
+        logits = jnp.einsum("bd,dv->bv", x[:, 0, :],
+                            self._unembed(params).astype(x.dtype),
+                            preferred_element_type=jnp.float32)
+        new_cache["pos"] = cache["pos"] + 1
+        return logits, new_cache

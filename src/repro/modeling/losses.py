@@ -1,0 +1,71 @@
+"""Loss functions.
+
+``chunked_softmax_xent`` never materializes the full (B, S, V) logits tensor —
+it scans over sequence chunks with a remat'd body, computing (B, chunk, V)
+logits (vocab-sharded) per step. For 256k vocabularies at 4k×256 batch this is
+the difference between ~4 GB and ~100s of MB of peak logits memory per device
+(recorded as a beyond-paper memory optimization in EXPERIMENTS.md §Perf).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.sharding import shard
+from repro.modeling.layers import softcap
+
+
+def chunked_softmax_xent(h, w_unembed, targets, mask, *, chunk: int = 1024,
+                         cap: float = 0.0, impl: str = "onehot"):
+    """h: (B,S,D); w_unembed: (D,V); targets/mask: (B,S). Returns (loss, denom).
+
+    ``impl="gather"`` (§Perf): the target-logit lookup via take_along_axis —
+    avoids the (B, chunk, V) f32 one-hot (3.3 GiB/device at 256k vocab),
+    replacing it with a (B, chunk, 1) gather.
+    """
+    B, S, D = h.shape
+    V = w_unembed.shape[1]
+    c = min(chunk, S)
+    while S % c:  # largest divisor of S not exceeding the requested chunk
+        c -= 1
+    nc = S // c
+
+    hs = h.reshape(B, nc, c, D).transpose(1, 0, 2, 3)
+    ts = targets.reshape(B, nc, c).transpose(1, 0, 2)
+    ms = mask.reshape(B, nc, c).transpose(1, 0, 2)
+
+    @jax.checkpoint
+    def body(carry, xs):
+        h_c, t_c, m_c = xs
+        logits = jnp.einsum("bsd,dv->bsv", h_c, w_unembed,
+                            preferred_element_type=jnp.float32)
+        logits = softcap(logits, cap)
+        logits = shard(logits, ("batch", None, "vocab"))
+        lse = jax.scipy.special.logsumexp(logits, axis=-1)
+        if impl == "gather":
+            lt = jnp.take_along_axis(logits, t_c[..., None], axis=-1)[..., 0]
+        else:
+            onehot = jax.nn.one_hot(t_c, V, dtype=logits.dtype)
+            lt = jnp.sum(logits * onehot, axis=-1)
+        loss_sum = jnp.sum((lse - lt) * m_c)
+        return (carry[0] + loss_sum, carry[1] + jnp.sum(m_c)), None
+
+    init = (jnp.zeros((), jnp.float32), jnp.zeros((), jnp.float32))
+    if nc == 1:
+        (loss_sum, denom), _ = body(init, (hs[0], ts[0], ms[0]))
+    else:
+        (loss_sum, denom), _ = jax.lax.scan(body, init, (hs, ts, ms))
+    return loss_sum, denom
+
+
+def full_softmax_xent(h, w_unembed, targets, mask, cap: float = 0.0):
+    """Reference (unchunked) path — used by tests and the §Perf baseline."""
+    logits = jnp.einsum("bsd,dv->bsv", h, w_unembed,
+                        preferred_element_type=jnp.float32)
+    logits = softcap(logits, cap)
+    logits = shard(logits, ("batch", None, "vocab"))
+    lse = jax.scipy.special.logsumexp(logits, axis=-1)
+    onehot = jax.nn.one_hot(targets, w_unembed.shape[1], dtype=logits.dtype)
+    lt = jnp.sum(logits * onehot, axis=-1)
+    return jnp.sum((lse - lt) * mask), jnp.sum(mask)

@@ -1,0 +1,126 @@
+"""Mamba-2 LM (attention-free, SSD blocks). Decode state is O(1) in context
+length — the long_500k cell runs with a fixed (heads, head_dim, state) cache.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.sharding import shard
+from repro.modeling.layers import apply_norm, norm_specs
+from repro.modeling.lm import LM, _maybe_remat, subtree_rel
+from repro.modeling.module import (
+    ParamSpec,
+    prefix_specs,
+    stacked,
+    subtree,
+)
+from repro.modeling.ssd import ssd_block_apply, ssd_block_specs, ssd_dims
+
+
+class MambaLM(LM):
+    def layer_specs(self):
+        cfg = self.cfg
+        s = {}
+        s.update(prefix_specs("ln", norm_specs(cfg.norm, cfg.d_model)))
+        s.update(prefix_specs("mixer", ssd_block_specs(cfg)))
+        return s
+
+    def param_specs(self):
+        cfg = self.cfg
+        specs = {
+            "embed/w": ParamSpec((cfg.vocab, cfg.d_model), ("vocab", "embed"),
+                                 init="embed"),
+        }
+        specs.update(prefix_specs(
+            "layers", {k: stacked(v, cfg.n_layers) for k, v in self.layer_specs().items()}))
+        specs.update(prefix_specs("ln_f", norm_specs(cfg.norm, cfg.d_model)))
+        if not cfg.tie_embeddings:
+            specs["unembed/w"] = ParamSpec((cfg.d_model, cfg.vocab),
+                                           ("embed", "vocab"),
+                                           scale=cfg.d_model ** -0.5)
+        return specs
+
+    def _layer(self, p, x, positions, mode, state=None, conv=None):
+        cfg = self.cfg
+        h = apply_norm(cfg.norm, x, p, "ln")
+        y, st, cv = ssd_block_apply(cfg, subtree_rel(p, "mixer"), h,
+                                    state=state, conv_state=conv,
+                                    impl=cfg.attn_impl)
+        x = x + shard(y, ("batch", None, None))
+        return x, st, cv
+
+    def forward(self, params, batch):
+        x = self._embed_inputs(params, batch)
+        stacked_p = subtree(params, "layers")
+
+        def body(x, layer_p):
+            x, _, _ = self._layer(layer_p, x, None, "train")
+            return x, None
+
+        body = _maybe_remat(body, self.cfg.remat)
+        x, _ = jax.lax.scan(body, x, stacked_p)
+        x = apply_norm(self.cfg.norm, x, params, "ln_f")
+        return x, jnp.zeros((), jnp.float32)
+
+    # ------------------------------------------------------------ serving
+    def cache_shape(self, batch_size: int, cache_len: int):
+        cfg = self.cfg
+        d_inner, nh, hd, ds = ssd_dims(cfg)
+        conv_dim = d_inner + 2 * ds
+        W = cfg.conv_width
+        dt = jnp.dtype(cfg.dtype)
+        return {
+            "state": jax.ShapeDtypeStruct(
+                (cfg.n_layers, batch_size, nh, hd, ds), jnp.float32),
+            "conv": jax.ShapeDtypeStruct(
+                (cfg.n_layers, batch_size, W - 1, conv_dim), dt),
+            "pos": jax.ShapeDtypeStruct((), jnp.int32),
+        }
+
+    def cache_axes(self):
+        return {
+            "state": ("layers", "batch", "ssm_heads", None, None),
+            "conv": ("layers", "batch", None, "rnn"),
+            "pos": (),
+        }
+
+    def prefill(self, params, batch, cache_len: int | None = None):
+        cfg = self.cfg
+        x = self._embed_inputs(params, batch)
+        stacked_p = subtree(params, "layers")
+
+        def body(x, layer_p):
+            x, st, cv = self._layer(layer_p, x, None, "prefill")
+            return x, (st, cv)
+
+        body = _maybe_remat(body, cfg.remat)
+        x, (sts, cvs) = jax.lax.scan(body, x, stacked_p)
+        x = apply_norm(cfg.norm, x, params, "ln_f")
+        logits = jnp.einsum("bd,dv->bv", x[:, -1, :],
+                            self._unembed(params).astype(x.dtype),
+                            preferred_element_type=jnp.float32)
+        cache = {"state": sts, "conv": cvs.astype(jnp.dtype(cfg.dtype)),
+                 "pos": jnp.asarray(x.shape[1], jnp.int32)}
+        return logits, cache
+
+    def decode_step(self, params, cache, batch):
+        cfg = self.cfg
+        dt = jnp.dtype(cfg.dtype)
+        x = params["embed/w"].astype(dt)[batch["token"]][:, None, :]
+        stacked_p = subtree(params, "layers")
+
+        def body(x, xs):
+            layer_p, st, cv = xs
+            x, st, cv = self._layer(layer_p, x, None, "decode",
+                                    state=st, conv=cv)
+            return x, (st, cv)
+
+        x, (sts, cvs) = jax.lax.scan(
+            body, x, (stacked_p, cache["state"], cache["conv"]))
+        x = apply_norm(cfg.norm, x, params, "ln_f")
+        logits = jnp.einsum("bd,dv->bv", x[:, 0, :],
+                            self._unembed(params).astype(x.dtype),
+                            preferred_element_type=jnp.float32)
+        return logits, {"state": sts, "conv": cvs, "pos": cache["pos"] + 1}

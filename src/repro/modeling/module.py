@@ -1,0 +1,107 @@
+"""Minimal functional parameter substrate (no flax available — built from scratch).
+
+Params live in a flat dict ``{path: jax.Array}``. Each model declares its
+parameters once through ``param_specs(cfg) -> {path: ParamSpec}`` — a single
+source of truth used for initialization, logical-axis sharding, checkpoint
+layout, and abstract (ShapeDtypeStruct) instantiation for the dry-run.
+
+Logical axis names used across the zoo (mapped to mesh axes by
+``repro.distributed.sharding``):
+
+- "batch"     — global batch (→ pod, data)
+- "embed"     — d_model (FSDP-shardable → data for large dense archs)
+- "heads"     — attention query heads (→ model)
+- "kv_heads"  — KV heads (→ model iff divisible)
+- "head_dim"  — per-head dim (replicated)
+- "mlp"       — feed-forward hidden (→ model)
+- "vocab"     — vocabulary (→ model)
+- "experts"   — MoE experts (→ model)
+- "layers"    — stacked scan-over-layers axis (replicated)
+- "rnn"       — recurrent width (→ model)
+- "ssm_state" / "ssm_heads" — SSD dims
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclass(frozen=True)
+class ParamSpec:
+    shape: tuple[int, ...]
+    axes: tuple[str | None, ...]
+    init: str = "normal"  # "normal" | "zeros" | "ones" | "embed" | "output"
+    scale: float | None = None
+
+    def __post_init__(self):
+        assert len(self.shape) == len(self.axes), (self.shape, self.axes)
+
+
+def _fan_in(shape: tuple[int, ...]) -> int:
+    # For projection kernels (..., out) we treat all but the last dim as fan-in.
+    if len(shape) <= 1:
+        return max(shape[0] if shape else 1, 1)
+    return int(np.prod(shape[:-1]))
+
+
+def init_param(key, spec: ParamSpec, dtype) -> jax.Array:
+    if spec.init == "zeros":
+        return jnp.zeros(spec.shape, dtype)
+    if spec.init == "ones":
+        return jnp.ones(spec.shape, dtype)
+    if spec.init == "embed":
+        scale = spec.scale if spec.scale is not None else 1.0
+        return scale * jax.random.normal(key, spec.shape, dtype)
+    # truncated-normal fan-in init for projections
+    scale = spec.scale if spec.scale is not None else 1.0 / np.sqrt(_fan_in(spec.shape))
+    return scale * jax.random.truncated_normal(key, -2.0, 2.0, spec.shape, dtype)
+
+
+def init_params(key, specs: dict[str, ParamSpec], dtype=jnp.float32) -> dict[str, jax.Array]:
+    keys = jax.random.split(key, len(specs))
+    return {
+        path: init_param(k, spec, dtype)
+        for k, (path, spec) in zip(keys, sorted(specs.items()))
+    }
+
+
+def abstract_params(specs: dict[str, ParamSpec], dtype=jnp.float32) -> dict[str, jax.ShapeDtypeStruct]:
+    """ShapeDtypeStruct pytree for .lower() without allocating anything."""
+    return {p: jax.ShapeDtypeStruct(s.shape, dtype) for p, s in specs.items()}
+
+
+def param_axes(specs: dict[str, ParamSpec]) -> dict[str, tuple[str | None, ...]]:
+    return {p: s.axes for p, s in specs.items()}
+
+
+def param_count(specs: dict[str, ParamSpec]) -> int:
+    return int(sum(np.prod(s.shape) for s in specs.values()))
+
+
+def stacked(spec: ParamSpec, n_layers: int) -> ParamSpec:
+    """Stack a per-layer spec along a leading scan axis."""
+    return ParamSpec(
+        shape=(n_layers, *spec.shape),
+        axes=("layers", *spec.axes),
+        init=spec.init,
+        scale=spec.scale,
+    )
+
+
+def prefix_specs(prefix: str, specs: dict[str, ParamSpec]) -> dict[str, ParamSpec]:
+    return {f"{prefix}/{k}": v for k, v in specs.items()}
+
+
+def subtree(params: dict[str, jax.Array], prefix: str) -> dict[str, jax.Array]:
+    """View of a flat param dict under ``prefix`` (keys relativized)."""
+    p = prefix + "/"
+    return {k[len(p):]: v for k, v in params.items() if k.startswith(p)}
+
+
+def layer_slice(stacked_params: dict[str, jax.Array], i) -> dict[str, jax.Array]:
+    """Select layer ``i`` from a stacked (scan) param subtree."""
+    return {k: v[i] for k, v in stacked_params.items()}

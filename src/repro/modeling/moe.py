@@ -1,0 +1,134 @@
+"""Mixture-of-Experts layer (Gshard-style capacity-based dispatch/combine).
+
+The one-hot dispatch einsum formulation is deliberately chosen over sort-based
+routing: under GSPMD it shards cleanly — tokens over ("pod","data"), experts
+over "model" — and the dispatch/combine einsums lower to all-to-alls on the
+expert axis, which is the communication pattern expert parallelism needs.
+
+Memory is controlled by grouping the sequence into ``cfg.moe_group``-token
+groups: capacity C = group·top_k/E·capacity_factor, so the dispatch tensor is
+(B, nG, g, E, C) ≈ tokens × E × C — bounded per group instead of per sequence.
+
+Load-balancing auxiliary loss follows Switch/Gshard: E · Σ_e f_e · P_e.
+"""
+
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.modeling.layers import activation, is_gated
+from repro.modeling.module import ParamSpec
+
+
+def moe_capacity(cfg) -> int:
+    g, k, e = cfg.moe_group, cfg.top_k, cfg.n_experts
+    c = math.ceil(g * k / e * cfg.capacity_factor)
+    return max(4, int(math.ceil(c / 4) * 4))
+
+
+def moe_specs(cfg) -> dict[str, ParamSpec]:
+    d, e, f = cfg.d_model, cfg.n_experts, cfg.d_ff_expert
+    # Expert parallelism shards the expert axis over "model"; the expert-
+    # internal FF dim uses its own logical axis ("expert_mlp") so the two
+    # never map to the same mesh axis (it shards only when experts cannot).
+    specs = {
+        "router/w": ParamSpec((d, e), ("embed", "experts")),
+        "wo": ParamSpec((e, f, d), ("experts", "expert_mlp", "embed")),
+    }
+    if is_gated(cfg.act):
+        specs["wi_0"] = ParamSpec((e, d, f), ("experts", "embed", "expert_mlp"))
+        specs["wi_1"] = ParamSpec((e, d, f), ("experts", "embed", "expert_mlp"))
+    else:
+        specs["wi"] = ParamSpec((e, d, f), ("experts", "embed", "expert_mlp"))
+    return specs
+
+
+def moe_apply(cfg, p: dict, x, shard_fn=None):
+    """x: (B, S, D) -> (y, aux_loss). ``p`` holds this layer's MoE params.
+
+    §Perf (``cfg.moe_batch_groups``): when S is tiny (decode: S=1), per-
+    sequence groups of g=1 token waste E·C−1 of every expert buffer —
+    utilization 1/(E·C). Grouping across the *batch* dim instead packs all
+    B in-flight tokens into one capacity pool (C = ⌈B·K/E·cf⌉), the standard
+    serving layout; per-step expert FLOPs drop ~E·C/(B·K/E·cf)×.
+    """
+    shard = shard_fn or (lambda a, axes: a)
+    B, S, D = x.shape
+    if getattr(cfg, "moe_batch_groups", False) and S < cfg.moe_group and B > 1:
+        y, aux = _moe_apply_grouped(
+            cfg, p, x.reshape(1, B * S, D), shard,
+            batch_in_group=True)
+        return y.reshape(B, S, D), aux
+    return _moe_apply_grouped(cfg, p, x, shard, batch_in_group=False)
+
+
+def _moe_apply_grouped(cfg, p: dict, x, shard, batch_in_group: bool):
+    B, S, D = x.shape
+    g = min(cfg.moe_group, S)
+    while S % g:  # largest divisor of S not exceeding the requested group size
+        g -= 1
+    nG = S // g
+    # with batch_in_group, the flattened token dim keeps the batch sharding
+    tok_axes = (None, None, "batch") if batch_in_group else ("batch", None, None)
+    E, K = cfg.n_experts, cfg.top_k
+    if batch_in_group:
+        # capacity from the ACTUAL pooled-token count (decode: g = B·S)
+        c = math.ceil(g * K / E * cfg.capacity_factor)
+        C = max(2, int(math.ceil(c / 2) * 2))
+    else:
+        C = moe_capacity(cfg)
+
+    xg = x.reshape(B, nG, g, D)
+    logits = jnp.einsum(
+        "bngd,de->bnge", xg, p["router/w"], preferred_element_type=jnp.float32
+    )
+    probs = jax.nn.softmax(logits, axis=-1)  # (B,nG,g,E)
+    gate_vals, expert_idx = jax.lax.top_k(probs, K)  # (B,nG,g,K)
+    if K > 1:
+        gate_vals = gate_vals / jnp.maximum(
+            jnp.sum(gate_vals, axis=-1, keepdims=True), 1e-9
+        )
+
+    # ---- capacity assignment --------------------------------------------
+    eoh = jax.nn.one_hot(expert_idx, E, dtype=jnp.float32)  # (B,nG,g,K,E)
+    # Position of each (token, k) assignment within its expert's buffer:
+    # flatten (g, K) in token-major priority order and cumulative-sum.
+    flat = eoh.reshape(B, nG, g * K, E)
+    pos = jnp.cumsum(flat, axis=2) * flat - 1.0  # (B,nG,g*K,E)
+    pos = pos.reshape(B, nG, g, K, E)
+    within = (pos >= 0) & (pos < C)
+    pos_idx = jnp.sum(pos * eoh, axis=-1)  # (B,nG,g,K) position for chosen expert
+    keep = jnp.any(within & (eoh > 0), axis=-1)  # (B,nG,g,K)
+
+    poh = jax.nn.one_hot(pos_idx, C, dtype=jnp.float32) * keep[..., None]
+    # dispatch: (B,nG,g,E,C); combine adds the gate weight
+    dispatch = jnp.einsum("bngke,bngkc->bngec", eoh, poh)
+    combine = jnp.einsum("bngke,bngkc->bngec", eoh * gate_vals[..., None], poh)
+    dispatch = shard(dispatch, tok_axes[:2] + (tok_axes[2], "experts", None))
+
+    # ---- expert computation (E sharded over the model axis) --------------
+    dt = x.dtype
+    xe = jnp.einsum("bngec,bngd->bnecd", dispatch.astype(dt), xg)
+    xe = shard(xe, (tok_axes[0], None, "experts", None, None))
+    if is_gated(cfg.act):
+        h = activation(
+            cfg.act,
+            jnp.einsum("bnecd,edf->bnecf", xe, p["wi_0"].astype(dt)),
+            jnp.einsum("bnecd,edf->bnecf", xe, p["wi_1"].astype(dt)),
+        )
+    else:
+        h = activation(cfg.act, jnp.einsum("bnecd,edf->bnecf", xe, p["wi"].astype(dt)))
+    ye = jnp.einsum("bnecf,efd->bnecd", h.astype(dt), p["wo"].astype(dt))
+    ye = shard(ye, (tok_axes[0], None, "experts", None, None))
+    y = jnp.einsum("bngec,bnecd->bngd", combine.astype(x.dtype), ye)
+    y = y.reshape(B, S, D)
+
+    # ---- Switch-style load-balancing aux loss ----------------------------
+    frac_tokens = jnp.mean(eoh[..., 0, :] if K == 1 else jnp.max(eoh, axis=3),
+                           axis=(0, 1, 2))  # fraction routed per expert
+    frac_probs = jnp.mean(probs, axis=(0, 1, 2))
+    aux = E * jnp.sum(frac_tokens * frac_probs)
+    return y, aux

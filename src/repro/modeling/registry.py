@@ -1,0 +1,25 @@
+"""Model registry: ArchConfig.family -> model class."""
+
+from __future__ import annotations
+
+from repro.modeling.encoder import AudioEncoder
+from repro.modeling.griffin import GriffinLM
+from repro.modeling.lm import LM
+from repro.modeling.mamba import MambaLM
+
+FAMILIES = {
+    "dense": LM,
+    "moe": LM,
+    "vlm": LM,
+    "hybrid": GriffinLM,
+    "audio": AudioEncoder,
+    "ssm": MambaLM,
+}
+
+
+def build_model(cfg):
+    try:
+        cls = FAMILIES[cfg.family]
+    except KeyError:
+        raise ValueError(f"unknown family {cfg.family!r} for arch {cfg.name!r}")
+    return cls(cfg)

@@ -1,0 +1,147 @@
+"""RG-LRU recurrent block (Griffin / RecurrentGemma).
+
+The Real-Gated Linear Recurrent Unit:
+
+    r_t = sigmoid(W_a x_t + b_a)          (recurrence gate)
+    i_t = sigmoid(W_x x_t + b_x)          (input gate)
+    a_t = exp(-c * softplus(Lambda) * r_t),  c = 8
+    h_t = a_t * h_{t-1} + sqrt(1 - a_t^2) * (i_t * x_t)
+
+The recurrence is elementwise-linear in h, hence associative — training uses
+``jax.lax.associative_scan`` (the XLA path) or the Pallas ``linear_scan``
+chunked kernel; decoding is a single fused state update.
+
+The full Griffin recurrent *block* is: Wx → causal conv1d(width 4) → RG-LRU,
+gated by a parallel GeLU branch, then an output projection.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.modeling.module import ParamSpec
+
+RG_LRU_C = 8.0
+
+
+def rglru_block_specs(cfg) -> dict[str, ParamSpec]:
+    d, dr = cfg.d_model, cfg.d_rnn
+    w = cfg.conv_width
+    nb = getattr(cfg, "rglru_block_gates", 0)
+    if nb:
+        # Griffin §2.4: the recurrence/input gates use BLOCK-DIAGONAL weights.
+        # Beyond fidelity, this kills the gate all-gather under tensor
+        # parallelism: each shard's blocks contract entirely locally (§Perf).
+        assert dr % nb == 0, (dr, nb)
+        gate_a = ParamSpec((nb, dr // nb, dr // nb), ("rnn_blocks", None, None))
+        gate_x = ParamSpec((nb, dr // nb, dr // nb), ("rnn_blocks", None, None))
+    else:
+        # dense (dr, dr) projections: contract over the replicated input dim,
+        # keep the output dim sharded (one mesh axis per spec).
+        gate_a = ParamSpec((dr, dr), (None, "rnn"))
+        gate_x = ParamSpec((dr, dr), (None, "rnn"))
+    return {
+        "wx": ParamSpec((d, dr), ("embed", "rnn")),
+        "wy": ParamSpec((d, dr), ("embed", "rnn")),   # GeLU gate branch
+        "wo": ParamSpec((dr, d), ("rnn", "embed")),
+        "conv/w": ParamSpec((w, dr), (None, "rnn")),
+        "conv/b": ParamSpec((dr,), ("rnn",), init="zeros"),
+        "gate_a/w": gate_a,
+        "gate_a/b": ParamSpec((dr,), ("rnn",), init="zeros"),
+        "gate_x/w": gate_x,
+        "gate_x/b": ParamSpec((dr,), ("rnn",), init="zeros"),
+        "lambda": ParamSpec((dr,), ("rnn",), init="ones"),
+    }
+
+
+def _gate_proj(u, w):
+    """u: (B,S,Dr); w dense (Dr,Dr) or block-diagonal (nb, Dr/nb, Dr/nb)."""
+    if w.ndim == 3:
+        nb = w.shape[0]
+        B, S, Dr = u.shape
+        ub = u.reshape(B, S, nb, Dr // nb)
+        out = jnp.einsum("bsnr,nrq->bsnq", ub, w)
+        return out.reshape(B, S, Dr)
+    return jnp.einsum("bsr,rq->bsq", u, w)
+
+
+def _log_a(lam, r):
+    # a_t = exp(-c · softplus(lambda) · r_t); computed in log space, fp32.
+    return -RG_LRU_C * jax.nn.softplus(lam.astype(jnp.float32)) * r
+
+
+def rglru_scan(x, a):
+    """Associative scan of h_t = a_t h_{t-1} + x_t along axis 1. fp32 I/O."""
+
+    def combine(l, r):
+        a_l, b_l = l
+        a_r, b_r = r
+        return a_l * a_r, a_r * b_l + b_r
+
+    a_out, h = jax.lax.associative_scan(combine, (a, x), axis=1)
+    del a_out
+    return h
+
+
+def causal_conv1d(x, w, b):
+    """Depthwise causal temporal conv. x: (B,S,D); w: (W,D)."""
+    W = w.shape[0]
+    pad = jnp.pad(x, ((0, 0), (W - 1, 0), (0, 0)))
+    out = jnp.zeros_like(x)
+    for i in range(W):
+        out = out + pad[:, i : i + x.shape[1], :] * w[i]
+    return out + b
+
+
+def rglru_block_apply(cfg, p, x, state=None, conv_state=None, impl="xla"):
+    """Griffin recurrent block.
+
+    Train/prefill: x (B,S,D), state None -> (y, final_state, final_conv_state).
+    Decode: x (B,1,D) with carried (state (B,Dr) fp32, conv_state (B,W-1,Dr)).
+    ``impl="pallas"`` runs the recurrence through the chunked linear_scan kernel.
+    """
+    dt = x.dtype
+    u = jnp.einsum("bsd,dr->bsr", x, p["wx"].astype(dt))
+    gate = jax.nn.gelu(jnp.einsum("bsd,dr->bsr", x, p["wy"].astype(dt)),
+                       approximate=True)
+
+    W = p["conv/w"].shape[0]
+    if conv_state is None:
+        u_conv = causal_conv1d(u, p["conv/w"].astype(dt), p["conv/b"].astype(dt))
+        new_conv_state = u[:, -(W - 1):, :] if u.shape[1] >= W - 1 else jnp.pad(
+            u, ((0, 0), (W - 1 - u.shape[1], 0), (0, 0)))
+    else:
+        hist = jnp.concatenate([conv_state, u], axis=1)  # (B, W-1+1, Dr)
+        u_conv = (
+            jnp.einsum("bwr,wr->br", hist, p["conv/w"].astype(dt))
+            + p["conv/b"].astype(dt)
+        )[:, None, :]
+        new_conv_state = hist[:, 1:, :]
+
+    r = jax.nn.sigmoid(
+        _gate_proj(u_conv, p["gate_a/w"]).astype(jnp.float32)
+        + p["gate_a/b"].astype(jnp.float32))
+    i = jax.nn.sigmoid(
+        _gate_proj(u_conv, p["gate_x/w"]).astype(jnp.float32)
+        + p["gate_x/b"].astype(jnp.float32))
+    log_a = _log_a(p["lambda"], r)          # (B,S,Dr) fp32
+    a = jnp.exp(log_a)
+    beta = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-12))
+    inp = beta * i * u_conv.astype(jnp.float32)
+
+    if state is None:
+        if impl == "pallas":
+            from repro.kernels.linear_scan import ops as ls_ops
+
+            h, final_state = ls_ops.linear_scan(inp, a)
+        else:
+            h = rglru_scan(inp, a)                  # (B,S,Dr) fp32
+            final_state = h[:, -1, :]
+    else:
+        h = a * state[:, None, :] + inp             # single step
+        final_state = h[:, -1, :]
+
+    y = (h.astype(dt) * gate)
+    out = jnp.einsum("bsr,rd->bsd", y, p["wo"].astype(dt))
+    return out, final_state, new_conv_state

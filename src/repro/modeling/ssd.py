@@ -1,0 +1,203 @@
+"""Mamba-2 SSD block (state-space duality, arXiv:2405.21060).
+
+Selective state space with scalar-identity A per head:
+
+    h_t = exp(dt_t A) h_{t-1} + dt_t x_t ⊗ B_t        (state: (heads, hd, ds))
+    y_t = C_t · h_t + D x_t
+
+Training/prefill uses the paper's chunked block decomposition — quadratic
+attention-like compute within chunks (MXU-friendly) plus a tiny inter-chunk
+state recurrence — O(S·Q) instead of O(S²). ``ssd_chunked`` is the XLA path;
+``repro.kernels.ssd_scan`` is the Pallas TPU kernel with the same math and
+``ssd_naive`` (the literal recurrence) is the correctness oracle for both.
+
+Decode is a single O(1) state update — this is what makes mamba2 runnable at
+the 500k-token long-context cell.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.modeling.layers import rms_norm
+from repro.modeling.module import ParamSpec
+
+
+def ssd_dims(cfg):
+    d_inner = cfg.ssm_expand * cfg.d_model
+    n_heads = d_inner // cfg.ssm_head_dim
+    return d_inner, n_heads, cfg.ssm_head_dim, cfg.ssm_state
+
+
+def ssd_block_specs(cfg) -> dict[str, ParamSpec]:
+    d = cfg.d_model
+    d_inner, nh, hd, ds = ssd_dims(cfg)
+    w = cfg.conv_width
+    conv_dim = d_inner + 2 * ds
+    return {
+        # in_proj -> [z (d_inner), x (d_inner), B (ds), C (ds), dt (nh)]
+        "in_proj": ParamSpec((d, 2 * d_inner + 2 * ds + nh), ("embed", "rnn")),
+        "conv/w": ParamSpec((w, conv_dim), (None, "rnn")),
+        "conv/b": ParamSpec((conv_dim,), ("rnn",), init="zeros"),
+        "a_log": ParamSpec((nh,), ("ssm_heads",), init="ones"),
+        "d_skip": ParamSpec((nh,), ("ssm_heads",), init="ones"),
+        "dt_bias": ParamSpec((nh,), ("ssm_heads",), init="zeros"),
+        "norm/scale": ParamSpec((d_inner,), ("rnn",), init="zeros"),
+        "out_proj": ParamSpec((d_inner, d), ("rnn", "embed")),
+    }
+
+
+def _segsum(x):
+    """x: (..., Q) -> (..., Q, Q) with out[i,j] = sum_{k=j+1..i} x_k, -inf above diag."""
+    Q = x.shape[-1]
+    cs = jnp.cumsum(x, axis=-1)
+    seg = cs[..., :, None] - cs[..., None, :]
+    i = jnp.arange(Q)
+    mask = i[:, None] >= i[None, :]
+    return jnp.where(mask, seg, -jnp.inf)
+
+
+def ssd_chunked(x, dt, A, B, C, chunk: int):
+    """Chunked SSD. Shapes:
+    x: (b, S, nh, hd); dt: (b, S, nh) (post-softplus, fp32); A: (nh,) negative;
+    B, C: (b, S, ds)  (single group, shared across heads).
+    Returns y: (b, S, nh, hd) and final state (b, nh, hd, ds) fp32.
+    """
+    b, S, nh, hd = x.shape
+    ds = B.shape[-1]
+    Q = min(chunk, S)
+    pad = (-S) % Q
+    if pad:
+        # zero-dt padding is inert: decay exp(0)=1, zero input contribution
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        B = jnp.pad(B, ((0, 0), (0, pad), (0, 0)))
+        C = jnp.pad(C, ((0, 0), (0, pad), (0, 0)))
+    S_p = S + pad
+    nc = S_p // Q
+    dtype = x.dtype
+
+    xq = x.reshape(b, nc, Q, nh, hd)
+    dtq = dt.reshape(b, nc, Q, nh)
+    Bq = B.reshape(b, nc, Q, ds)
+    Cq = C.reshape(b, nc, Q, ds)
+
+    dA = dtq * A  # (b,nc,Q,nh) fp32, negative
+    dA_cum = jnp.cumsum(dA, axis=2)                      # within-chunk cumulative
+    dA_total = dA_cum[:, :, -1, :]                        # (b,nc,nh)
+
+    # ---- intra-chunk (quadratic, attention-like) --------------------------
+    L = jnp.exp(_segsum(dA.transpose(0, 1, 3, 2)))        # (b,nc,nh,Q,Q)
+    scores = jnp.einsum("bcqn,bcsn->bcqs", Cq, Bq,
+                        preferred_element_type=jnp.float32)
+    att = scores[:, :, None, :, :] * L                    # (b,nc,nh,Q,Q)
+    att = att * dtq.transpose(0, 1, 3, 2)[:, :, :, None, :]
+    y_intra = jnp.einsum("bchqs,bcshp->bcqhp", att.astype(dtype), xq)
+
+    # ---- chunk boundary states -------------------------------------------
+    decay_to_end = jnp.exp(dA_total[:, :, None, :] - dA_cum)  # (b,nc,Q,nh)
+    weighted_x = (xq.astype(jnp.float32)
+                  * (dtq * decay_to_end)[..., None])            # (b,nc,Q,nh,hd)
+    states = jnp.einsum("bcqhp,bcqn->bchpn", weighted_x,
+                        Bq.astype(jnp.float32))                  # (b,nc,nh,hd,ds)
+
+    # ---- inter-chunk recurrence (tiny scan over nc) ------------------------
+    def step(h, inp):
+        s_c, g_c = inp  # g_c: (b,nh) total decay of this chunk
+        h_new = h * jnp.exp(g_c)[:, :, None, None] + s_c
+        return h_new, h  # emit state *entering* the chunk
+
+    h0 = jnp.zeros((b, nh, hd, ds), jnp.float32)
+    final, h_prev = jax.lax.scan(
+        step, h0,
+        (states.transpose(1, 0, 2, 3, 4), dA_total.transpose(1, 0, 2)),
+    )
+    h_prev = h_prev.transpose(1, 0, 2, 3, 4)  # (b,nc,nh,hd,ds), state entering chunk
+
+    # ---- inter-chunk output contribution ----------------------------------
+    decay_from_start = jnp.exp(dA_cum)  # (b,nc,Q,nh)
+    y_inter = jnp.einsum("bcqn,bchpn->bcqhp", Cq.astype(jnp.float32), h_prev) \
+        * decay_from_start[..., None]
+
+    y = y_intra.astype(jnp.float32) + y_inter
+    return y.reshape(b, S_p, nh, hd)[:, :S].astype(dtype), final
+
+
+def ssd_naive(x, dt, A, B, C):
+    """Literal recurrence oracle (fp32). Same shapes as ``ssd_chunked``."""
+    b, S, nh, hd = x.shape
+
+    def step(h, inp):
+        x_t, dt_t, B_t, C_t = inp  # (b,nh,hd), (b,nh), (b,ds), (b,ds)
+        decay = jnp.exp(dt_t * A)[:, :, None, None]
+        upd = (dt_t[:, :, None] * x_t)[..., None] * B_t[:, None, None, :]
+        h = h * decay + upd
+        y = jnp.einsum("bhpn,bn->bhp", h, C_t)
+        return h, y
+
+    h0 = jnp.zeros((b, nh, hd, B.shape[-1]), jnp.float32)
+    xs = (x.astype(jnp.float32).transpose(1, 0, 2, 3),
+          dt.transpose(1, 0, 2), B.astype(jnp.float32).transpose(1, 0, 2),
+          C.astype(jnp.float32).transpose(1, 0, 2))
+    h, ys = jax.lax.scan(step, h0, xs)
+    return ys.transpose(1, 0, 2, 3), h
+
+
+def ssd_block_apply(cfg, p, x, state=None, conv_state=None, impl="xla"):
+    """Full Mamba-2 block: in_proj → conv → SSD → gated norm → out_proj.
+
+    Train/prefill: x (B,S,D), state=None.
+    Decode: x (B,1,D), state (B,nh,hd,ds) fp32, conv_state (B,W-1,conv_dim).
+    Returns (y (B,S,D), state, conv_state).
+    """
+    from repro.modeling.rglru import causal_conv1d
+
+    d_inner, nh, hd, ds = ssd_dims(cfg)
+    dtype = x.dtype
+    W = p["conv/w"].shape[0]
+
+    zxbcdt = jnp.einsum("bsd,de->bse", x, p["in_proj"].astype(dtype))
+    z, xin, Bc, Cc, dt_raw = jnp.split(
+        zxbcdt, [d_inner, 2 * d_inner, 2 * d_inner + ds, 2 * d_inner + 2 * ds],
+        axis=-1)
+
+    xBC = jnp.concatenate([xin, Bc, Cc], axis=-1)
+    if conv_state is None:
+        xBC_conv = causal_conv1d(xBC, p["conv/w"].astype(dtype),
+                                 p["conv/b"].astype(dtype))
+        new_conv_state = xBC[:, -(W - 1):, :]
+    else:
+        hist = jnp.concatenate([conv_state, xBC], axis=1)
+        xBC_conv = (jnp.einsum("bwr,wr->br", hist, p["conv/w"].astype(dtype))
+                    + p["conv/b"].astype(dtype))[:, None, :]
+        new_conv_state = hist[:, 1:, :]
+    xBC_conv = jax.nn.silu(xBC_conv)
+
+    xs = xBC_conv[..., :d_inner].reshape(*x.shape[:2], nh, hd)
+    Bs = xBC_conv[..., d_inner : d_inner + ds]
+    Cs = xBC_conv[..., d_inner + ds :]
+    A = -jnp.exp(p["a_log"].astype(jnp.float32))
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32)
+                         + p["dt_bias"].astype(jnp.float32))
+
+    if state is None:
+        if impl == "pallas":
+            from repro.kernels.ssd_scan import ops as ssd_ops
+
+            y, final = ssd_ops.ssd(xs, dt, A, Bs, Cs, chunk=cfg.ssm_chunk)
+        else:
+            y, final = ssd_chunked(xs, dt, A, Bs, Cs, cfg.ssm_chunk)
+    else:
+        decay = jnp.exp(dt[:, 0] * A)[:, :, None, None]          # (B,nh,1,1)
+        upd = (dt[:, 0][:, :, None] * xs[:, 0].astype(jnp.float32))[..., None] \
+            * Bs[:, 0].astype(jnp.float32)[:, None, None, :]
+        final = state * decay + upd
+        y = jnp.einsum("bhpn,bn->bhp", final, Cs[:, 0].astype(jnp.float32))
+        y = y[:, None].astype(dtype)
+
+    y = y + xs * p["d_skip"].astype(dtype)[None, None, :, None]
+    y = y.reshape(*x.shape[:2], d_inner)
+    y = rms_norm(y, p["norm/scale"]) * jax.nn.silu(z)
+    out = jnp.einsum("bse,ed->bsd", y.astype(dtype), p["out_proj"].astype(dtype))
+    return out, final, new_conv_state

@@ -1,0 +1,28 @@
+"""Serving: step builders, live slice executors, and the placement service.
+
+``engine``    — prefill/decode step builders + a batched generation loop.
+``executors`` — the TPU-fleet executor pool: slice configs λ_m with real
+                compiled-executable caching (cold start = real XLA compile),
+                plus the always-on edge executor with a FIFO queue.
+``placement`` — the paper's framework instantiated over the slice catalog:
+                SliceTarget performance models, calibration (fit), and the
+                LivePlacementServer used by the Table-V-analog benchmark.
+"""
+
+from repro.serving.engine import make_decode_step, make_prefill_step, generate
+from repro.serving.executors import SliceSpec, LiveExecutor, ExecutorPool
+from repro.serving.placement import (
+    SliceTarget,
+    SliceCatalog,
+    calibrate_catalog,
+    build_slice_predictor,
+    llm_workload,
+    LivePlacementServer,
+)
+
+__all__ = [
+    "make_decode_step", "make_prefill_step", "generate",
+    "SliceSpec", "LiveExecutor", "ExecutorPool",
+    "SliceTarget", "SliceCatalog", "calibrate_catalog",
+    "build_slice_predictor", "llm_workload", "LivePlacementServer",
+]

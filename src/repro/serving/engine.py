@@ -1,0 +1,73 @@
+"""Serving step builders + batched generation.
+
+``make_prefill_step`` / ``make_decode_step`` return jit-able functions with
+the signatures the dry-run lowers (and the executors compile):
+
+    prefill_step(params, batch)        -> (logits (B, V), cache)
+    decode_step(params, cache, batch)  -> (logits (B, V), cache)
+
+``generate`` runs greedy/temperature decoding for a batch of prompts using
+those steps — the end-to-end path the live serving benchmark measures.
+"""
+
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def make_prefill_step(model, cache_len: int | None = None):
+    def prefill_step(params, batch):
+        return model.prefill(params, batch, cache_len=cache_len)
+
+    return prefill_step
+
+
+def make_decode_step(model):
+    def decode_step(params, cache, batch):
+        return model.decode_step(params, cache, batch)
+
+    return decode_step
+
+
+@partial(jax.jit, static_argnames=("temperature",))
+def _sample(logits, key, temperature: float = 0.0):
+    if temperature and temperature > 0:
+        return jax.random.categorical(key, logits / temperature, axis=-1)
+    return jnp.argmax(logits, axis=-1)
+
+
+def generate(model, params, tokens, *, max_new_tokens: int, cache_len: int,
+             temperature: float = 0.0, seed: int = 0,
+             prefill_fn=None, decode_fn=None):
+    """Greedy/temperature generation. tokens: (B, S) int32 prompt batch.
+
+    Returns (B, max_new_tokens) int32. Pass pre-jitted ``prefill_fn`` /
+    ``decode_fn`` to reuse compiled executables (the executors do).
+    """
+    prefill_fn = prefill_fn or jax.jit(make_prefill_step(model, cache_len))
+    decode_fn = decode_fn or jax.jit(make_decode_step(model))
+    key = jax.random.key(seed)
+
+    logits, cache = prefill_fn(params, {"tokens": tokens})
+    out = []
+    for i in range(max_new_tokens):
+        key, sub = jax.random.split(key)
+        tok = _sample(logits, sub, temperature).astype(jnp.int32)
+        out.append(tok)
+        if i + 1 < max_new_tokens:
+            logits, cache = decode_fn(params, cache, {"token": tok})
+    return jnp.stack(out, axis=1)
+
+
+def batch_prompts(prompts: list[np.ndarray], pad_to: int, pad_id: int = 0):
+    """Left-pad a ragged prompt list into a (B, pad_to) batch."""
+    B = len(prompts)
+    out = np.full((B, pad_to), pad_id, np.int32)
+    for i, p in enumerate(prompts):
+        p = np.asarray(p, np.int32)[-pad_to:]
+        out[i, pad_to - len(p):] = p
+    return out

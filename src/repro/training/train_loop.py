@@ -1,0 +1,207 @@
+"""Fault-tolerant training loop.
+
+Production behaviors implemented (and exercised by tests):
+
+- **train step**: value_and_grad → (optional) gradient compression with error
+  feedback → global-norm clip → AdamW; jitted with donated params/opt state;
+  under a mesh, params/opt are sharded by the logical-axis rules and the batch
+  by ("pod","data").
+- **checkpoint/restart**: atomic keep-k checkpoints every N steps; on start
+  the loop auto-resumes from LATEST (bit-exact: data pipeline is
+  counter-seeded, optimizer state is saved).
+- **failure injection**: ``FailureInjector`` raises at a given step;
+  ``run_with_restarts`` restarts the loop from the last checkpoint — the test
+  asserts the recovered run matches an uninterrupted one.
+- **straggler watchdog**: per-step wall-clock EWMA; steps slower than
+  ``straggler_factor``× the EWMA are counted and logged (on a fleet this
+  signal feeds the re-dispatch hook; in the serving half of this framework the
+  paper's own deadline-based re-placement plays that role).
+"""
+
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.distributed.compression import (
+    CompressionConfig,
+    compress_decompress,
+    init_error_state,
+)
+from repro.training import checkpoint as ckpt
+from repro.training.optimizer import OptimizerConfig, adamw_update, init_opt_state
+
+
+@dataclass
+class LoopConfig:
+    steps: int = 100
+    log_every: int = 10
+    ckpt_every: int = 50
+    ckpt_dir: str | None = None
+    keep: int = 3
+    straggler_factor: float = 3.0
+    compression: CompressionConfig = field(default_factory=CompressionConfig)
+
+
+class SimulatedFailure(RuntimeError):
+    pass
+
+
+class FailureInjector:
+    """Raises SimulatedFailure the first time ``step == fail_at``."""
+
+    def __init__(self, fail_at: int | None):
+        self.fail_at = fail_at
+        self.fired = False
+
+    def maybe_fail(self, step: int):
+        if self.fail_at is not None and step == self.fail_at and not self.fired:
+            self.fired = True
+            raise SimulatedFailure(f"injected failure at step {step}")
+
+
+def make_train_step(model, opt_cfg: OptimizerConfig,
+                    comp_cfg: CompressionConfig | None = None):
+    comp_cfg = comp_cfg or CompressionConfig()
+    microbatch = getattr(model.cfg, "microbatch", 1)
+
+    def grad_fn(params, batch):
+        if microbatch <= 1:
+            return jax.value_and_grad(model.loss, has_aux=True)(params, batch)
+
+        # §Perf: gradient accumulation — k sequential microbatches cut live
+        # activation memory ~k× at the same global batch (math unchanged).
+        def split(x):
+            return x.reshape(microbatch, x.shape[0] // microbatch, *x.shape[1:])
+
+        mbatches = jax.tree.map(split, batch)
+
+        def body(acc, mb):
+            (loss, metrics), grads = jax.value_and_grad(
+                model.loss, has_aux=True)(params, mb)
+            acc = jax.tree.map(lambda a, g: a + g.astype(jnp.float32),
+                               acc, grads)
+            return acc, (loss, metrics)
+
+        zeros = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+        acc, (losses, metrics) = jax.lax.scan(body, zeros, mbatches)
+        grads = jax.tree.map(lambda g: g / microbatch, acc)
+        loss = jnp.mean(losses)
+        metrics = jax.tree.map(lambda m: jnp.mean(m), metrics)
+        return (loss, metrics), grads
+
+    def train_step(params, opt_state, batch):
+        (loss, metrics), grads = grad_fn(params, batch)
+        if comp_cfg.scheme != "none":
+            grads, new_err = compress_decompress(
+                grads, opt_state["err"], comp_cfg, step=opt_state["opt"]["step"])
+            new_params, new_opt, opt_metrics = adamw_update(
+                params, grads, opt_state["opt"], opt_cfg)
+            new_state = {"opt": new_opt, "err": new_err}
+        else:
+            new_params, new_opt, opt_metrics = adamw_update(
+                params, grads, opt_state["opt"], opt_cfg)
+            new_state = {"opt": new_opt}
+        metrics = dict(metrics, loss=loss, **opt_metrics)
+        return new_params, new_state, metrics
+
+    return train_step
+
+
+def init_train_state(model, key, comp_cfg: CompressionConfig | None = None):
+    params = model.init(key)
+    state = {"opt": init_opt_state(params)}
+    if comp_cfg and comp_cfg.scheme != "none":
+        state["err"] = init_error_state(params)
+    return params, state
+
+
+@dataclass
+class TrainResult:
+    losses: list
+    final_step: int
+    straggler_steps: int
+    restarts: int = 0
+
+
+def train(model, pipeline, loop_cfg: LoopConfig, opt_cfg: OptimizerConfig,
+          key=None, injector: FailureInjector | None = None,
+          to_device: Callable | None = None, log: Callable | None = None) -> TrainResult:
+    """Run (or resume) a training loop. ``pipeline.batch(step)`` feeds data."""
+    log = log or (lambda *a: None)
+    key = key if key is not None else jax.random.key(0)
+    step0 = 0
+    comp = loop_cfg.compression
+
+    resumed = None
+    if loop_cfg.ckpt_dir:
+        resumed = ckpt.restore_latest(loop_cfg.ckpt_dir)
+    if resumed is not None:
+        step0, tree = resumed
+        params, state = tree["params"], tree["state"]
+        params = jax.tree.map(jnp.asarray, params)
+        state = jax.tree.map(jnp.asarray, state)
+        # npz round-trips scalars as arrays; restore dtypes
+        state["opt"]["step"] = jnp.asarray(state["opt"]["step"], jnp.int32)
+        log(f"resumed from step {step0}")
+    else:
+        params, state = init_train_state(model, key, comp)
+
+    step_fn = jax.jit(make_train_step(model, opt_cfg, comp), donate_argnums=(0, 1))
+
+    losses, ewma, stragglers = [], None, 0
+    step = step0
+    while step < loop_cfg.steps:
+        batch = pipeline.batch(step)
+        batch = {k: jnp.asarray(v) for k, v in batch.items()}
+        if to_device:
+            batch = to_device(batch)
+        t0 = time.monotonic()
+        params, state, metrics = step_fn(params, state, batch)
+        loss = float(metrics["loss"])
+        dt = time.monotonic() - t0
+        if ewma is None:
+            ewma = dt
+        else:
+            if dt > loop_cfg.straggler_factor * ewma:
+                stragglers += 1
+                log(f"straggler: step {step} took {dt:.3f}s (ewma {ewma:.3f}s)")
+            ewma = 0.9 * ewma + 0.1 * dt
+        losses.append(loss)
+        step += 1
+        if step % loop_cfg.log_every == 0:
+            log(f"step {step}: loss {loss:.4f} ({dt*1e3:.0f} ms)")
+        if loop_cfg.ckpt_dir and step % loop_cfg.ckpt_every == 0:
+            ckpt.save_checkpoint(loop_cfg.ckpt_dir, step,
+                                 {"params": params, "state": state},
+                                 keep=loop_cfg.keep)
+        if injector:
+            injector.maybe_fail(step)
+
+    if loop_cfg.ckpt_dir:
+        ckpt.save_checkpoint(loop_cfg.ckpt_dir, step,
+                             {"params": params, "state": state}, keep=loop_cfg.keep)
+    return TrainResult(losses=losses, final_step=step, straggler_steps=stragglers)
+
+
+def run_with_restarts(model, pipeline, loop_cfg: LoopConfig, opt_cfg: OptimizerConfig,
+                      key=None, injector: FailureInjector | None = None,
+                      max_restarts: int = 3, log: Callable | None = None) -> TrainResult:
+    """Supervisor: restart-from-checkpoint on (simulated) node failure."""
+    restarts = 0
+    while True:
+        try:
+            result = train(model, pipeline, loop_cfg, opt_cfg, key=key,
+                           injector=injector, log=log)
+            result.restarts = restarts
+            return result
+        except SimulatedFailure:
+            restarts += 1
+            if restarts > max_restarts:
+                raise
+            (log or (lambda *a: None))(f"restart #{restarts}")

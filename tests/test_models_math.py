@@ -1,0 +1,173 @@
+"""Model math: chunked vs. naive paths, MoE invariants, prefill/decode parity."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import smoke_config
+from repro.modeling.attention import chunked_attention, decode_attention
+from repro.modeling.losses import chunked_softmax_xent, full_softmax_xent
+from repro.modeling.moe import moe_apply, moe_capacity, moe_specs
+from repro.modeling.registry import build_model
+from repro.modeling.rglru import causal_conv1d, rglru_scan
+from repro.modeling.ssd import ssd_chunked, ssd_naive
+from repro.kernels.flash_attention.ref import attention_ref
+
+
+# ------------------------------------------------------------- attention
+@pytest.mark.parametrize("q_chunk", [8, 32, 512])
+@pytest.mark.parametrize("window", [0, 16])
+def test_chunked_attention_matches_naive(q_chunk, window, rng):
+    B, S, H, Hkv, D = 2, 48, 4, 2, 16
+    q = jnp.asarray(rng.normal(size=(B, S, H, D)), jnp.float32)
+    k = jnp.asarray(rng.normal(size=(B, S, Hkv, D)), jnp.float32)
+    v = jnp.asarray(rng.normal(size=(B, S, Hkv, D)), jnp.float32)
+    out = chunked_attention(q, k, v, causal=True, window=window, q_chunk=q_chunk)
+    ref = attention_ref(q, k, v, causal=True, window=window)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=2e-5, atol=2e-5)
+
+
+def test_decode_attention_matches_full_row(rng):
+    """Decoding position t must reproduce row t of full causal attention."""
+    B, S, H, D = 1, 24, 2, 8
+    q_all = jnp.asarray(rng.normal(size=(B, S, H, D)), jnp.float32)
+    k = jnp.asarray(rng.normal(size=(B, S, H, D)), jnp.float32)
+    v = jnp.asarray(rng.normal(size=(B, S, H, D)), jnp.float32)
+    full = chunked_attention(q_all, k, v, causal=True, q_chunk=8)
+    t = 13
+    dec = decode_attention(q_all[:, t:t + 1], k, v,
+                           jnp.full((B,), t + 1, jnp.int32))
+    np.testing.assert_allclose(np.asarray(dec[:, 0]), np.asarray(full[:, t]),
+                               rtol=2e-5, atol=2e-5)
+
+
+# ------------------------------------------------------------------- loss
+@pytest.mark.parametrize("chunk", [4, 16, 64])
+def test_chunked_loss_matches_full(chunk, rng):
+    B, S, D, V = 2, 32, 16, 50
+    h = jnp.asarray(rng.normal(size=(B, S, D)), jnp.float32)
+    w = jnp.asarray(rng.normal(size=(D, V)), jnp.float32)
+    t = jnp.asarray(rng.integers(0, V, size=(B, S)), jnp.int32)
+    m = jnp.asarray(rng.random((B, S)) > 0.3, jnp.float32)
+    ls, dn = chunked_softmax_xent(h, w, t, m, chunk=chunk)
+    lf, df = full_softmax_xent(h, w, t, m)
+    np.testing.assert_allclose(float(ls), float(lf), rtol=1e-5)
+    np.testing.assert_allclose(float(dn), float(df), rtol=1e-6)
+
+
+def test_chunked_loss_grad_matches_full(rng):
+    B, S, D, V = 1, 16, 8, 20
+    h = jnp.asarray(rng.normal(size=(B, S, D)), jnp.float32)
+    w = jnp.asarray(rng.normal(size=(D, V)), jnp.float32)
+    t = jnp.asarray(rng.integers(0, V, size=(B, S)), jnp.int32)
+    m = jnp.ones((B, S), jnp.float32)
+
+    gc = jax.grad(lambda w: chunked_softmax_xent(h, w, t, m, chunk=4)[0])(w)
+    gf = jax.grad(lambda w: full_softmax_xent(h, w, t, m)[0])(w)
+    np.testing.assert_allclose(np.asarray(gc), np.asarray(gf), rtol=1e-4,
+                               atol=1e-5)
+
+
+# -------------------------------------------------------------------- SSD
+def test_ssd_chunked_matches_naive(rng):
+    b, S, nh, hd, ds = 2, 64, 2, 8, 8
+    x = jnp.asarray(rng.normal(size=(b, S, nh, hd)), jnp.float32)
+    dt = jnp.asarray(np.abs(rng.normal(size=(b, S, nh))) * 0.4, jnp.float32)
+    A = jnp.asarray([-0.3, -0.9], jnp.float32)
+    B_ = jnp.asarray(rng.normal(size=(b, S, ds)), jnp.float32)
+    C = jnp.asarray(rng.normal(size=(b, S, ds)), jnp.float32)
+    yc, sc = ssd_chunked(x, dt, A, B_, C, chunk=16)
+    yn, sn = ssd_naive(x, dt, A, B_, C)
+    np.testing.assert_allclose(np.asarray(yc), np.asarray(yn), rtol=1e-3,
+                               atol=1e-3)
+    np.testing.assert_allclose(np.asarray(sc), np.asarray(sn), rtol=1e-3,
+                               atol=1e-3)
+
+
+# ----------------------------------------------------------------- RG-LRU
+def test_rglru_scan_matches_sequential(rng):
+    B, S, D = 2, 33, 8
+    x = jnp.asarray(rng.normal(size=(B, S, D)), jnp.float32)
+    a = jnp.asarray(rng.uniform(0.1, 1.0, size=(B, S, D)), jnp.float32)
+    h_scan = rglru_scan(x, a)
+    h = np.zeros((B, D), np.float32)
+    for t in range(S):
+        h = np.asarray(a[:, t]) * h + np.asarray(x[:, t])
+        np.testing.assert_allclose(np.asarray(h_scan[:, t]), h, rtol=1e-4,
+                                   atol=1e-5)
+
+
+def test_causal_conv1d_is_causal(rng):
+    B, S, D, W = 1, 16, 4, 4
+    x = jnp.asarray(rng.normal(size=(B, S, D)), jnp.float32)
+    w = jnp.asarray(rng.normal(size=(W, D)), jnp.float32)
+    b = jnp.zeros((D,), jnp.float32)
+    out1 = causal_conv1d(x, w, b)
+    x2 = x.at[:, 10:].set(99.0)  # future perturbation
+    out2 = causal_conv1d(x2, w, b)
+    np.testing.assert_allclose(np.asarray(out1[:, :10]), np.asarray(out2[:, :10]),
+                               rtol=1e-6)
+
+
+# -------------------------------------------------------------------- MoE
+def test_moe_capacity_and_dispatch_invariants(rng):
+    cfg = smoke_config("olmoe-1b-7b")
+    model = build_model(cfg)
+    key = jax.random.key(0)
+    from repro.modeling.module import init_params
+    p = init_params(key, moe_specs(cfg))
+    B, S, D = 2, 32, cfg.d_model
+    x = jnp.asarray(rng.normal(size=(B, S, D)), jnp.float32)
+    y, aux = moe_apply(cfg, p, x)
+    assert y.shape == x.shape
+    assert np.all(np.isfinite(np.asarray(y)))
+    assert float(aux) > 0  # load-balance loss strictly positive for softmax router
+    C = moe_capacity(cfg)
+    assert C >= cfg.moe_group * cfg.top_k / cfg.n_experts  # >= mean load
+
+
+def test_moe_identical_tokens_route_identically(rng):
+    cfg = smoke_config("olmoe-1b-7b")
+    from repro.modeling.module import init_params
+    p = init_params(jax.random.key(0), moe_specs(cfg))
+    x0 = jnp.asarray(rng.normal(size=(1, 1, cfg.d_model)), jnp.float32)
+    x = jnp.tile(x0, (1, 4, 1))
+    y, _ = moe_apply(cfg, p, x)
+    # identical tokens within capacity → identical outputs
+    ref = np.asarray(y[0, 0])
+    for t in range(1, 3):  # later copies may be capacity-dropped; check first rows
+        np.testing.assert_allclose(np.asarray(y[0, t]), ref, rtol=1e-4, atol=1e-5)
+
+
+# -------------------------------------------- prefill/decode == forward parity
+@pytest.mark.parametrize("arch", ["llama3.2-1b", "gemma-2b", "mamba2-780m",
+                                  "recurrentgemma-9b", "olmoe-1b-7b"])
+def test_prefill_then_decode_matches_forward(arch, rng):
+    """Teacher-forced decode must reproduce the training forward logits."""
+    cfg = smoke_config(arch)
+    model = build_model(cfg)
+    params = model.init(jax.random.key(3))
+    B, S = 1, 16
+    toks = jnp.asarray(rng.integers(2, cfg.vocab, size=(B, S)), jnp.int32)
+
+    # full forward logits at every position
+    h, _ = model.forward(params, {"tokens": toks})
+    w = model._unembed(params).astype(h.dtype)
+    full_logits = jnp.einsum("bsd,dv->bsv", h, w)
+
+    # prefill on the first k tokens, then teacher-forced decode
+    k = 8
+    logits, cache = model.prefill(params, {"tokens": toks[:, :k]}, cache_len=S)
+    np.testing.assert_allclose(
+        np.asarray(logits, np.float32), np.asarray(full_logits[:, k - 1], np.float32),
+        rtol=2e-2, atol=2e-3)
+    for t in range(k, S):
+        logits, cache = model.decode_step(params, cache, {"token": toks[:, t]})
+        np.testing.assert_allclose(
+            np.asarray(logits, np.float32), np.asarray(full_logits[:, t], np.float32),
+            rtol=2e-2, atol=2e-3,
+            err_msg=f"{arch}: decode step {t} diverged from forward")

@@ -1,0 +1,120 @@
+"""§Perf knob correctness: every optimization must preserve model math."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import smoke_config
+from repro.modeling.registry import build_model
+from repro.training.data import make_pipeline
+from repro.training.optimizer import OptimizerConfig
+from repro.training.train_loop import init_train_state, make_train_step
+
+
+def _loss_for(cfg, params, batch):
+    model = build_model(cfg)
+    loss, _ = model.loss(params, batch)
+    return float(loss)
+
+
+@pytest.mark.parametrize("arch,updates", [
+    ("llama3.2-1b", {"loss_impl": "gather"}),
+    ("gemma-2b", {"loss_impl": "gather"}),
+    ("llama3.2-1b", {"cp_attn": True}),          # no mesh → ways=0 → plain path
+])
+def test_knobs_loss_invariant(arch, updates, rng):
+    base = smoke_config(arch)
+    model = build_model(base)
+    params = model.init(jax.random.key(0))
+    pipe = make_pipeline(base, 32, 2, 0)
+    batch = {k: jnp.asarray(v) for k, v in pipe.batch(0).items()}
+    l0 = _loss_for(base, params, batch)
+    l1 = _loss_for(base.with_updates(**updates), params, batch)
+    assert abs(l0 - l1) < 1e-5, (arch, updates)
+
+
+def test_banded_window_loss_invariant(rng):
+    base = smoke_config("recurrentgemma-9b").with_updates(attn_window=8,
+                                                          q_chunk=8)
+    model = build_model(base)
+    params = model.init(jax.random.key(0))
+    pipe = make_pipeline(base, 32, 2, 0)
+    batch = {k: jnp.asarray(v) for k, v in pipe.batch(0).items()}
+    l0 = _loss_for(base, params, batch)
+    l1 = _loss_for(base.with_updates(banded_window=True), params, batch)
+    assert abs(l0 - l1) < 1e-5
+
+
+def test_microbatch_bitexact():
+    cfg = smoke_config("llama3.2-1b")
+    model = build_model(cfg)
+    pipe = make_pipeline(cfg, 32, 4, 0)
+    batch = {k: jnp.asarray(v) for k, v in pipe.batch(0).items()}
+
+    def one_step(mb):
+        m = build_model(cfg.with_updates(microbatch=mb))
+        params, state = init_train_state(m, jax.random.key(1))
+        step = make_train_step(m, OptimizerConfig())
+        p, _, metrics = step(params, {"opt": state["opt"]}, batch)
+        return p, float(metrics["loss"])
+
+    p1, l1 = one_step(1)
+    p2, l2 = one_step(2)
+    assert abs(l1 - l2) < 1e-5
+    for k in p1:
+        np.testing.assert_allclose(np.asarray(p1[k]), np.asarray(p2[k]),
+                                   atol=5e-5)
+
+
+def test_moe_batch_groups_routing_consistent(rng):
+    """Decode-time batch grouping must route each token to the same experts
+    it would get in its own group (capacity permitting)."""
+    cfg = smoke_config("olmoe-1b-7b").with_updates(capacity_factor=8.0)
+    cfg_bg = cfg.with_updates(moe_batch_groups=True)
+    m0, m1 = build_model(cfg), build_model(cfg_bg)
+    params = m0.init(jax.random.key(0))
+    B, S = 4, 1
+    batch = {"tokens": jnp.asarray(rng.integers(2, 100, (B, S)), jnp.int32)}
+    l0, c0 = m0.prefill(params, batch, cache_len=8)
+    l1, c1 = m1.prefill(params, batch, cache_len=8)
+    t = jnp.zeros((B,), jnp.int32)
+    d0, _ = m0.decode_step(params, c0, {"token": t})
+    d1, _ = m1.decode_step(params, c1, {"token": t})
+    # generous capacity ⇒ no drops in either layout ⇒ identical logits
+    np.testing.assert_allclose(np.asarray(d0), np.asarray(d1), rtol=2e-4,
+                               atol=2e-4)
+
+
+def test_rglru_block_gates_structure():
+    cfg = smoke_config("recurrentgemma-9b").with_updates(rglru_block_gates=4)
+    model = build_model(cfg)
+    params = model.init(jax.random.key(0))
+    gate_keys = [k for k in params if k.endswith("gate_a/w")]
+    assert gate_keys
+    for k in gate_keys:
+        assert params[k].ndim == 4  # (layers, nb, dr/nb, dr/nb)
+    pipe = make_pipeline(cfg, 32, 2, 0)
+    batch = {k: jnp.asarray(v) for k, v in pipe.batch(0).items()}
+    loss, _ = model.loss(params, batch)
+    assert np.isfinite(float(loss))
+
+
+def test_kv_quant_decode_close(rng):
+    cfg = smoke_config("llama3.2-1b")
+    m0 = build_model(cfg)
+    m1 = build_model(cfg.with_updates(kv_quant=True))
+    params = m0.init(jax.random.key(0))
+    B, S = 2, 12
+    batch = {"tokens": jnp.asarray(rng.integers(2, 100, (B, S)), jnp.int32)}
+    l0, c0 = m0.prefill(params, batch, cache_len=S + 4)
+    l1, c1 = m1.prefill(params, batch, cache_len=S + 4)
+    assert c1["k"].dtype == jnp.int8 and "k_scale" in c1
+    for _ in range(4):
+        tok = jnp.argmax(l0, -1).astype(jnp.int32)
+        l0, c0 = m0.decode_step(params, c0, {"token": tok})
+        l1, c1 = m1.decode_step(params, c1, {"token": tok})
+    scale = float(jnp.max(jnp.abs(l0)))
+    assert float(jnp.max(jnp.abs(l0 - l1))) / scale < 0.02

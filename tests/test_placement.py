@@ -1,0 +1,176 @@
+"""Unit tests for the paper's core: pricing, CIL, Predictor, Decision Engine."""
+
+from __future__ import annotations
+
+import numpy as np
+import pytest
+
+from repro.core.cil import ContainerInfoList
+from repro.core.decision import (
+    DecisionEngine,
+    HedgedPolicy,
+    MinCostPolicy,
+    MinLatencyPolicy,
+)
+from repro.core.perf_models import NormalModel, RidgeModel
+from repro.core.predictor import Prediction, Predictor
+from repro.core.pricing import EdgePricing, LambdaPricing, SlicePricing
+from repro.core.workload import TaskInput
+
+
+# ---------------------------------------------------------------- pricing
+def test_lambda_pricing_quantization():
+    p = LambdaPricing()
+    # paper Sec. VI-A: 98 ms -> billed 100 ms; 101 ms -> billed 200 ms
+    assert p.billed_ms(98) == 100
+    assert p.billed_ms(101) == 200
+    assert p.billed_ms(100) == 100
+    assert p.billed_ms(0.2) == 100  # rounds to 1 ms then up to quantum
+    # cost proportional to memory
+    assert p.cost(100, 2048) == pytest.approx(2 * p.cost(100, 1024))
+
+
+def test_edge_pricing_zero():
+    assert EdgePricing().cost(123456.0) == 0.0
+
+
+def test_slice_pricing_per_second_quantum():
+    sp = SlicePricing(chip_hour_rate=3.6, quantum_s=1.0)
+    # 3.6 $/chip-h = 0.001 $/chip-s; 1.5 s on 4 chips → billed 2 s → $0.008
+    assert sp.cost(1500.0, 4) == pytest.approx(0.008)
+
+
+# -------------------------------------------------------------------- CIL
+def test_cil_warm_cold_lifecycle():
+    cil = ContainerInfoList(t_idl_ms=1000.0)
+    assert not cil.will_warm_start("m", now=0.0)
+    cold = cil.record_dispatch("m", now=0.0, completion_time=50.0)
+    assert cold
+    # while busy: no idle container → another dispatch would cold-start
+    assert not cil.will_warm_start("m", now=25.0)
+    second_cold = cil.record_dispatch("m", now=25.0, completion_time=60.0)
+    assert second_cold
+    assert cil.count("m") == 2
+    # after completion, within T_idl: warm
+    assert cil.will_warm_start("m", now=100.0)
+    assert not cil.record_dispatch("m", now=100.0, completion_time=140.0)
+    # past T_idl: container reaped → cold again
+    assert not cil.will_warm_start("m", now=140.0 + 1001.0)
+    assert cil.record_dispatch("m", now=140.0 + 1001.0, completion_time=2000.0)
+
+
+def test_cil_reuses_most_recent_completion():
+    cil = ContainerInfoList(t_idl_ms=1e9)
+    cil.record_dispatch("m", 0.0, 10.0)
+    cil.record_dispatch("m", 0.0, 20.0)  # second container, completes later
+    idle = cil.idle_containers("m", now=100.0)
+    assert idle[0].last_completion == 20.0  # paper's empirical reuse order
+
+
+# -------------------------------------------------------- predictor helpers
+class _StubTarget:
+    def __init__(self, name, latency, cost, is_edge=False):
+        self.name = name
+        self.is_edge = is_edge
+        self._lat, self._cost = latency, cost
+
+    def predict_components(self, task, cold=False, quantile=None):
+        comps = {"comp": self._lat + (500.0 if cold else 0.0)}
+        return comps
+
+    def cost(self, comp_ms):
+        return self._cost
+
+    def occupancy_ms(self, components):
+        return components["comp"]
+
+
+def _preds(entries):
+    return {
+        name: Prediction(target=name, latency_ms=lat, cost=cost, cold=False,
+                         components={"comp": lat})
+        for name, lat, cost in entries
+    }
+
+
+# ---------------------------------------------------------- decision engine
+def test_min_cost_picks_cheapest_feasible():
+    policy = MinCostPolicy(deadline_ms=100.0)
+    preds = _preds([("a", 90, 5.0), ("b", 80, 3.0), ("c", 200, 1.0),
+                    ("edge", 99, 0.0)])
+    name, feasible, _ = policy.choose(preds)
+    assert name == "edge" and feasible  # cheapest among deadline-feasible
+
+
+def test_min_cost_falls_back_to_edge_queue():
+    policy = MinCostPolicy(deadline_ms=10.0)
+    preds = _preds([("a", 90, 5.0), ("edge", 99, 0.0)])
+    name, feasible, _ = policy.choose(preds)
+    assert name == "edge" and not feasible  # paper Sec. V-B: M = ∅ → queue
+
+
+def test_min_latency_respects_budget_and_banks_surplus():
+    policy = MinLatencyPolicy(c_max=2.0, alpha=0.5)
+    preds = _preds([("fast", 10, 5.0), ("mid", 50, 1.5), ("edge", 100, 0.0)])
+    name, _, allowed = policy.choose(preds)
+    assert name == "mid"           # fast exceeds budget
+    policy.observe(preds[name])
+    assert policy.surplus == pytest.approx(0.5)
+    # banked surplus expands the budget: allowed = 2.0 + 0.5*0.5 = 2.25
+    assert policy.allowed == pytest.approx(2.25)
+
+
+def test_min_latency_alpha_zero_never_expands():
+    policy = MinLatencyPolicy(c_max=1.0, alpha=0.0)
+    preds = _preds([("fast", 10, 1.5), ("edge", 100, 0.0)])
+    for _ in range(10):
+        name, _, allowed = policy.choose(preds)
+        policy.observe(preds[name])
+        assert name == "edge"
+        assert allowed == 1.0
+
+
+def test_min_latency_invalid_alpha():
+    with pytest.raises(ValueError):
+        MinLatencyPolicy(c_max=1.0, alpha=1.5)
+
+
+def test_hedged_policy_hedges_only_over_threshold():
+    inner = MinLatencyPolicy(c_max=10.0, alpha=0.0)
+    policy = HedgedPolicy(inner, hedge_threshold_ms=50.0)
+    preds = _preds([("slow", 100, 1.0), ("primary", 80, 2.0), ("edge", 500, 0.0)])
+    name, _, _ = policy.choose(preds)
+    assert name == "primary"  # min-latency within budget
+    # primary is over the 50 ms hedge threshold → a backup within 1.5× latency
+    # and remaining budget is hedged ("slow": 100 < 120, cost 1 ≤ 8)
+    assert policy.last_hedge is not None and policy.last_hedge[0] == "slow"
+
+    preds_fast = _preds([("fast", 30, 1.0), ("edge", 500, 0.0)])
+    policy.choose(preds_fast)
+    assert policy.last_hedge is None  # under threshold: no hedge
+
+
+# ------------------------------------------------------ predictor integration
+def test_predictor_cold_then_warm_roundtrip():
+    tgt = _StubTarget("m", latency=100.0, cost=1.0)
+    pred = Predictor(cloud_targets=[tgt], edge_target=None,
+                     cil=ContainerInfoList(t_idl_ms=1e6))
+    task = TaskInput(idx=0, arrival_ms=0.0, size=1.0, bytes=1.0)
+    out = pred.predict(task, now=0.0)
+    assert out["m"].cold and out["m"].latency_ms == 600.0
+    pred.update_cil("m", now=0.0, prediction=out["m"])
+    # container released at 600; a dispatch at t=1000 sees it warm
+    out2 = pred.predict(task, now=1000.0)
+    assert not out2["m"].cold and out2["m"].latency_ms == 100.0
+
+
+def test_engine_place_records_decision():
+    tgt = _StubTarget("m", latency=10.0, cost=1.0)
+    edge = _StubTarget("edge", latency=1000.0, cost=0.0, is_edge=True)
+    pred = Predictor(cloud_targets=[tgt], edge_target=edge)
+    eng = DecisionEngine(predictor=pred, policy=MinLatencyPolicy(c_max=5.0))
+    task = TaskInput(idx=7, arrival_ms=0.0, size=1.0, bytes=1.0)
+    d = eng.place(task, now=0.0)
+    assert d.task_idx == 7
+    assert d.target == "m"
+    assert len(eng.decisions) == 1

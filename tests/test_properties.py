@@ -1,0 +1,173 @@
+"""Hypothesis property tests on the system's invariants."""
+
+from __future__ import annotations
+
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core.cil import ContainerInfoList
+from repro.core.decision import MinCostPolicy, MinLatencyPolicy
+from repro.core.gbrt import GBRT, GBRTConfig
+from repro.core.perf_models import NormalModel, RidgeModel, fit_ridge
+from repro.core.predictor import Prediction
+from repro.core.pricing import LambdaPricing
+from repro.distributed.sharding import make_rules, spec_for
+from repro.configs import ARCHS, get_config
+
+import jax
+
+finite = st.floats(min_value=0.0, max_value=1e6, allow_nan=False,
+                   allow_infinity=False)
+
+
+def _mk_preds(costs_lats):
+    preds = {f"c{i}": Prediction(target=f"c{i}", latency_ms=l, cost=c,
+                                 cold=False, components={"comp": l})
+             for i, (c, l) in enumerate(costs_lats)}
+    preds["edge"] = Prediction(target="edge", latency_ms=1e5, cost=0.0,
+                               cold=False, components={"comp": 1e5})
+    return preds
+
+
+# ------------------------------------------------ Alg. 1 budget invariants
+@given(
+    costs=st.lists(st.tuples(finite, finite), min_size=1, max_size=8),
+    tasks=st.integers(min_value=1, max_value=60),
+    c_max=st.floats(min_value=1e-6, max_value=100.0),
+    alpha=st.floats(min_value=0.0, max_value=1.0),
+)
+@settings(max_examples=60, deadline=None)
+def test_surplus_never_negative_and_budget_respected(costs, tasks, c_max, alpha):
+    """Paper Sec. III-B: edge costs 0 ⇒ surplus(k) ≥ 0 ∀k, and every chosen
+    cost respects C(k) ≤ C_max + α·surplus(k)."""
+    policy = MinLatencyPolicy(c_max=c_max, alpha=alpha)
+    preds = _mk_preds(costs)
+    for _ in range(tasks):
+        allowed_before = policy.allowed
+        name, _, allowed = policy.choose(preds)
+        assert allowed == allowed_before
+        assert preds[name].cost <= allowed + 1e-12
+        policy.observe(preds[name])
+        assert policy.surplus >= -1e-12
+
+
+@given(
+    costs=st.lists(st.tuples(finite, finite), min_size=1, max_size=8),
+    deadline=finite,
+)
+@settings(max_examples=60, deadline=None)
+def test_min_cost_choice_is_optimal(costs, deadline):
+    """The chosen config is the min-cost element of the feasible set."""
+    policy = MinCostPolicy(deadline_ms=deadline)
+    preds = _mk_preds(costs)
+    name, feasible, _ = policy.choose(preds)
+    feas = {n: p for n, p in preds.items() if p.latency_ms <= deadline}
+    if not feas:
+        assert name == "edge" and not feasible
+    else:
+        assert preds[name].cost == min(p.cost for p in feas.values())
+
+
+# ------------------------------------------------------------ CIL properties
+@given(
+    events=st.lists(
+        st.tuples(st.floats(min_value=0, max_value=1e5),
+                  st.floats(min_value=0, max_value=1e3)),
+        min_size=1, max_size=40),
+    t_idl=st.floats(min_value=10.0, max_value=1e5),
+)
+@settings(max_examples=50, deadline=None)
+def test_cil_containers_never_double_booked(events, t_idl):
+    """At any dispatch, the reused container must have been idle."""
+    cil = ContainerInfoList(t_idl_ms=t_idl)
+    now = 0.0
+    for gap, dur in events:
+        now += gap
+        idle_before = cil.idle_containers("m", now)
+        cold = cil.record_dispatch("m", now, now + dur)
+        assert cold == (len(idle_before) == 0)
+        for c in cil.containers["m"]:
+            assert c.busy_until <= c.last_completion
+
+
+# --------------------------------------------------------- pricing monotone
+@given(ms=st.floats(min_value=0.1, max_value=1e6),
+       mem=st.sampled_from([640, 1024, 1792, 3008]))
+@settings(max_examples=50, deadline=None)
+def test_billed_never_below_actual(ms, mem):
+    p = LambdaPricing()
+    assert p.billed_ms(ms) >= min(ms, round(ms)) or p.billed_ms(ms) == 100.0
+    assert p.billed_ms(ms) % p.quantum_ms == 0
+    assert p.cost(ms, mem) > 0
+
+
+# ----------------------------------------------------------- model fitting
+@given(
+    theta0=st.floats(min_value=-100, max_value=100),
+    theta1=st.floats(min_value=-10, max_value=10),
+    n=st.integers(min_value=10, max_value=200),
+)
+@settings(max_examples=30, deadline=None)
+def test_ridge_recovers_linear_function(theta0, theta1, n):
+    rng = np.random.default_rng(0)
+    x = rng.uniform(0, 100, n)
+    y = theta0 + theta1 * x
+    m = RidgeModel.fit(x, y)
+    pred = m.predict(x)
+    assert np.allclose(pred, y, rtol=1e-4, atol=1e-3)
+
+
+@given(q=st.floats(min_value=0.05, max_value=0.95))
+@settings(max_examples=30, deadline=None)
+def test_normal_quantiles_monotone(q):
+    m = NormalModel(mean=100.0, std=10.0)
+    assert m.predict_quantile(q) <= m.predict_quantile(min(q + 0.01, 0.96))
+    assert abs(m.predict_quantile(0.5) - 100.0) < 0.1
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(min_value=0, max_value=1000))
+def test_gbrt_beats_constant_predictor(seed):
+    rng = np.random.default_rng(seed)
+    x = rng.uniform(0, 10, size=(300, 2))
+    y = 5 * x[:, 0] + np.square(x[:, 1]) + rng.normal(0, 0.2, 300)
+    m = GBRT.fit(x, y, GBRTConfig(n_trees=40, max_depth=3))
+    sse_model = float(np.sum((m.predict(x) - y) ** 2))
+    sse_const = float(np.sum((y.mean() - y) ** 2))
+    assert sse_model < 0.5 * sse_const
+
+
+def test_gbrt_predict_jax_matches_numpy(rng):
+    x = rng.uniform(0, 10, size=(200, 2))
+    y = x[:, 0] * 3 + x[:, 1]
+    m = GBRT.fit(x, y, GBRTConfig(n_trees=25, max_depth=3))
+    np.testing.assert_allclose(np.asarray(m.predict_jax(x)), m.predict(x),
+                               rtol=1e-4, atol=1e-4)
+
+
+# ------------------------------------------------------- sharding invariants
+def test_rules_always_divisible_for_all_archs():
+    """Every resolved rule must divide the corresponding tensor dims, for
+    every assigned arch on both production mesh shapes (checked abstractly,
+    via axis sizes, since the real 512-device mesh can't exist in tests)."""
+
+    class FakeMesh:
+        def __init__(self, shape):
+            self.shape = shape
+
+    from repro.modeling.registry import build_model
+
+    for mesh in (FakeMesh({"data": 16, "model": 16}),
+                 FakeMesh({"pod": 2, "data": 16, "model": 16})):
+        for arch in ARCHS:
+            cfg = get_config(arch)
+            rules = make_rules(cfg, mesh, fsdp=True)
+            model = build_model(cfg)
+            for path, spec in model.param_specs().items():
+                for dim, ax in zip(spec.shape, spec.axes):
+                    r = rules.get(ax) if ax else None
+                    if r:
+                        size = 1
+                        for a in r:
+                            size *= mesh.shape[a]
+                        assert dim % size == 0, (arch, path, ax, dim, size)

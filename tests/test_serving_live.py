@@ -1,0 +1,115 @@
+"""Live serving path: executors (real compiles), calibration, placement server.
+
+These run REAL XLA compiles, so they're the slowest tests in the suite; sizes
+are kept minimal.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import smoke_config
+from repro.core.decision import MinCostPolicy, MinLatencyPolicy
+from repro.modeling.registry import build_model
+from repro.serving.engine import batch_prompts, generate
+from repro.serving.executors import LiveExecutor, SliceSpec, make_pool
+from repro.serving.placement import (
+    LivePlacementServer,
+    calibrate_catalog,
+    llm_workload,
+)
+
+TINY = dict(n_layers=2, d_model=32, d_ff=64, vocab=64, n_heads=2,
+            n_kv_heads=2, head_dim=16)
+
+
+@pytest.fixture(scope="module")
+def tiny_cfg():
+    return smoke_config("llama3.2-1b").with_updates(**TINY)
+
+
+def test_generate_loop(tiny_cfg):
+    model = build_model(tiny_cfg)
+    params = model.init(jax.random.key(0))
+    toks = jnp.asarray(np.random.default_rng(0).integers(2, 64, size=(2, 8)),
+                       jnp.int32)
+    out = generate(model, params, toks, max_new_tokens=5, cache_len=16)
+    assert out.shape == (2, 5)
+    assert np.all((np.asarray(out) >= 0) & (np.asarray(out) < 64))
+
+
+def test_batch_prompts_left_pads():
+    out = batch_prompts([np.array([1, 2, 3]), np.array([9])], pad_to=5)
+    np.testing.assert_array_equal(out[0], [0, 0, 1, 2, 3])
+    np.testing.assert_array_equal(out[1], [0, 0, 0, 0, 9])
+
+
+def test_executor_cold_then_warm(tiny_cfg):
+    ex = LiveExecutor(SliceSpec("s2", 2), tiny_cfg)
+    r1 = ex.execute(32, 128.0)
+    assert r1.cold and r1.start_ms > 50  # real compile takes real time
+    r2 = ex.execute(32, 128.0)
+    assert not r2.cold and r2.start_ms < 5
+    # eviction forces a true recompile
+    ex.evict()
+    r3 = ex.execute(32, 128.0)
+    assert r3.cold and r3.start_ms > 50
+
+
+def test_more_chips_fewer_steps(tiny_cfg):
+    e1 = LiveExecutor(SliceSpec("s1", 1, tokens_per_step=8), tiny_cfg)
+    e4 = LiveExecutor(SliceSpec("s4", 4, tokens_per_step=8), tiny_cfg)
+    e1.execute(8, 1.0)
+    e4.execute(8, 1.0)  # warm both
+    # 2048 tokens: 256 vs 64 real decode steps — a 4× work gap that stays
+    # ordered even under background-load timing noise; take best-of-3.
+    n = 2048
+    r1 = min(e1.execute(n, 1.0).comp_ms for _ in range(3))
+    r4 = min(e4.execute(n, 1.0).comp_ms for _ in range(3))
+    assert r4 < r1, (r1, r4)
+
+
+def test_pool_virtual_time_warm_cold(tiny_cfg):
+    pool = make_pool(tiny_cfg, [SliceSpec("s2", 2)], t_idl_ms=1000.0)
+    assert pool.probe_cold("s2", now=0.0)
+    rec = pool.execute_cloud("s2", 16, 1.0, now=0.0)
+    assert rec.cold
+    done = rec.start_ms + rec.comp_ms
+    # shortly after completion: warm
+    assert not pool.probe_cold("s2", now=done + 10.0)
+    # long after: provider reclaimed ⇒ cold, and the executable is re-compiled
+    assert pool.probe_cold("s2", now=done + 10_000.0)
+    rec2 = pool.execute_cloud("s2", 16, 1.0, now=done + 10_000.0)
+    assert rec2.cold
+
+
+def test_edge_fifo_queueing(tiny_cfg):
+    pool = make_pool(tiny_cfg, [])
+    r1 = pool.execute_edge(64, 1.0, arrival_ms=0.0)
+    assert r1.queue_ms == 0.0
+    # arrival while the first is (virtually) still running queues behind it
+    r2 = pool.execute_edge(64, 1.0, arrival_ms=0.1)
+    assert r2.queue_ms > 0.0
+
+
+@pytest.mark.slow
+def test_live_placement_server_end_to_end(tiny_cfg):
+    """The Table-V analog at CI scale: placement + real execution + metrics."""
+    specs = [SliceSpec("s2", 2, tokens_per_step=4),
+             SliceSpec("s8", 8, tokens_per_step=4)]
+    cat = calibrate_catalog(tiny_cfg, specs, n_tasks=6, n_cold=1, seed=0)
+    assert cat.start_cold.mean > 100.0
+
+    tasks = llm_workload(25, rate_per_s=40.0, seed=1, mean_tokens=128)
+    srv = LivePlacementServer(cat, MinLatencyPolicy(c_max=0.01, alpha=0.05),
+                              t_idl_ms=30_000.0)
+    res = srv.serve(tasks)
+    assert res.n == 25
+    assert res.total_actual_cost <= 0.01 * 25  # aggregate budget respected
+    assert np.isfinite(res.avg_actual_latency_ms)
+    # the predictor should be in the right ballpark live (paper: 5.65%)
+    assert res.latency_error_pct < 60.0

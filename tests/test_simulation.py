@@ -1,0 +1,145 @@
+"""End-to-end paper reproduction tests: twin → fit → simulate → metrics."""
+
+from __future__ import annotations
+
+import numpy as np
+import pytest
+
+from repro.core.apps import APPS, AWSTwin, collect_measurements
+from repro.core.decision import DecisionEngine, MinCostPolicy, MinLatencyPolicy
+from repro.core.fit import build_predictor, fit_app, fit_models
+from repro.core.simulator import Simulation
+
+# small-but-meaningful sizes for CI speed
+N_INPUTS = 150
+N_TASKS = 200
+CONFIGS = (1280, 1536, 1792)
+
+
+@pytest.fixture(scope="module")
+def fd_setup():
+    twin, models = fit_app("FD", seed=0, n_inputs=N_INPUTS, configs=CONFIGS)
+    return twin, models
+
+
+def test_model_fit_quality(fd_setup):
+    """Paper Table II: end-to-end MAPE below ~16% for FD; edge more accurate."""
+    _, models = fd_setup
+    assert models.cloud_e2e_mape < 20.0
+    assert models.edge_e2e_mape < 10.0
+    assert models.edge_e2e_mape < models.cloud_e2e_mape
+
+
+def test_cold_start_slower_than_warm(fd_setup):
+    _, models = fd_setup
+    assert models.start_cold.mean > 3 * models.start_warm.mean
+
+
+def test_min_latency_simulation(fd_setup):
+    twin, models = fd_setup
+    tasks = twin.workload(N_TASKS, seed=3)
+    pred = build_predictor(models, configs=CONFIGS)
+    eng = DecisionEngine(predictor=pred,
+                         policy=MinLatencyPolicy(c_max=2.97e-5, alpha=0.02))
+    res = Simulation(twin, eng, seed=5).run(tasks)
+    assert res.n == N_TASKS
+    # paper Table IV: latency prediction error is small; budget respected
+    assert res.latency_error_pct < 15.0
+    assert res.total_actual_cost <= 2.97e-5 * N_TASKS  # aggregate budget holds
+    assert res.pct_budget_used < 100.0
+
+
+def test_min_cost_simulation(fd_setup):
+    twin, models = fd_setup
+    tasks = twin.workload(N_TASKS, seed=4)
+    pred = build_predictor(models, configs=CONFIGS)
+    eng = DecisionEngine(predictor=pred, policy=MinCostPolicy(deadline_ms=4500))
+    res = Simulation(twin, eng, seed=6).run(tasks)
+    # paper Table III: few deadline violations, cost prediction close
+    assert res.pct_deadline_violated < 10.0
+    assert res.cost_error_pct < 15.0
+
+
+def test_simulation_deterministic(fd_setup):
+    twin, models = fd_setup
+    tasks = twin.workload(60, seed=9)
+
+    def run():
+        pred = build_predictor(models, configs=CONFIGS)
+        eng = DecisionEngine(predictor=pred,
+                             policy=MinLatencyPolicy(c_max=2.97e-5, alpha=0.02))
+        return Simulation(twin, eng, seed=11).run(tasks)
+
+    a, b = run(), run()
+    assert a.total_actual_cost == b.total_actual_cost
+    assert [r.target for r in a.records] == [r.target for r in b.records]
+
+
+def test_edge_only_queue_collapse(fd_setup):
+    """Paper Sec. VI-B: edge-only execution collapses under queueing (the
+    ~3-orders-of-magnitude latency gap vs. dynamic placement)."""
+    twin, models = fd_setup
+    tasks = twin.workload(N_TASKS, seed=7)
+    # placement framework
+    pred = build_predictor(models, configs=CONFIGS)
+    eng = DecisionEngine(predictor=pred,
+                         policy=MinLatencyPolicy(c_max=2.97e-5, alpha=0.02))
+    res = Simulation(twin, eng, seed=8).run(tasks)
+    # edge-only: min-latency with zero budget and alpha=0 forces the edge
+    pred0 = build_predictor(models, configs=CONFIGS)
+    eng0 = DecisionEngine(predictor=pred0,
+                          policy=MinLatencyPolicy(c_max=0.0, alpha=0.0))
+    res0 = Simulation(twin, eng0, seed=8).run(tasks)
+    assert res0.n_edge == N_TASKS
+    assert res0.avg_actual_latency_ms > 50 * res.avg_actual_latency_ms
+
+
+def test_quantile_prediction_reduces_violations():
+    """Beyond-paper: P95 predictors trade cost for fewer deadline violations.
+
+    Uses STT (the paper's highest-variance app, Table III: ~6-8% violations)
+    with its paper deadline δ = 5.5 s — with a mean predictor some violations
+    occur; the quantile predictor must not increase them. (At overly tight
+    deadlines quantile inflation empties the feasible set and everything
+    falls back to the edge queue — the deadline must leave P95 headroom.)
+    """
+    twin, models = fit_app("STT", seed=0, n_inputs=150,
+                           configs=(768, 1152, 1280, 1664))
+    tasks = twin.workload(N_TASKS, seed=12)
+
+    def run(quantile):
+        pred = build_predictor(models, configs=(768, 1152, 1280, 1664),
+                               quantile=quantile)
+        eng = DecisionEngine(predictor=pred, policy=MinCostPolicy(5500.0))
+        return Simulation(twin, eng, seed=13).run(tasks)
+
+    mean_res = run(None)
+    q_res = run(0.95)
+    assert q_res.pct_deadline_violated <= mean_res.pct_deadline_violated + 1e-9
+
+
+@pytest.mark.parametrize("app", sorted(APPS))
+def test_twin_statistics_match_table1(app):
+    """The AWS twin's component means reproduce paper Table I (±15%)."""
+    spec = APPS[app]
+    twin = AWSTwin(spec=spec, seed=1)
+    rng = np.random.default_rng(2)
+    warm = np.mean([twin.start_ms(False, rng) for _ in range(300)])
+    cold = np.mean([twin.start_ms(True, rng) for _ in range(300)])
+    store = np.mean([twin.store_cloud_ms(rng) for _ in range(300)])
+    table1 = {"IR": (162, 741, 549), "FD": (163, 1500, 584),
+              "STT": (145, 1404, 533)}
+    w, c, s = table1[app]
+    assert abs(warm - w) / w < 0.15
+    assert abs(cold - c) / c < 0.15
+    assert abs(store - s) / s < 0.15
+
+
+def test_collect_measurements_shapes():
+    twin = AWSTwin(spec=APPS["IR"], seed=0)
+    meas = collect_measurements(twin, n_inputs=20, configs=(640, 1792), n_cold=5)
+    assert meas.sizes.shape == (40,)  # 20 inputs × 2 configs
+    assert meas.start_cold.shape == (10,)
+    assert meas.edge_sizes.shape == (20,)
+    models = fit_models(meas)
+    assert np.isfinite(models.cloud_e2e_mape)
