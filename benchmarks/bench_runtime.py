@@ -1,0 +1,83 @@
+"""Decision-loop throughput: batched ``place_many`` vs the per-task loop.
+
+The batched Predictor API evaluates every component model (ridge / normal /
+GBRT) once over all tasks × targets instead of per task — the GBRT compute
+model alone turns N×M Python tree walks into M vectorized ones. This
+microbenchmark places a 10k-task FD workload both ways, verifies the
+decisions are identical, and reports the throughput ratio (the ISSUE-1
+acceptance bar is ≥5x; in practice it is >50x).
+
+    PYTHONPATH=src:. python benchmarks/bench_runtime.py [--n 10000]
+"""
+
+from __future__ import annotations
+
+import argparse
+import time
+
+from repro.core.decision import DecisionEngine, MinLatencyPolicy, PredictedEdgeQueue
+from repro.core.fit import build_predictor, fit_app
+from benchmarks import common
+from benchmarks.common import banner
+
+CONFIGS = (1280, 1536, 1792, 2048)
+C_MAX, ALPHA = 2.97e-5, 0.02
+
+
+def _fresh_engine(models):
+    pred = build_predictor(models, configs=CONFIGS)
+    return DecisionEngine(predictor=pred, policy=MinLatencyPolicy(C_MAX, ALPHA))
+
+
+def run(emit, n: int | None = None):
+    if n is None:
+        n = 2_000 if common.REDUCED else 10_000
+    banner(f"bench_runtime — batched place_many vs per-task place ({n} tasks)")
+    twin, models = fit_app("FD", seed=0, n_inputs=200, configs=CONFIGS)
+    tasks = twin.workload(n, seed=3)
+
+    # --- per-task decision loop (the pre-redesign serve path) --------------
+    eng_loop = _fresh_engine(models)
+    queue = PredictedEdgeQueue()
+    t0 = time.perf_counter()
+    for t in tasks:
+        d = eng_loop.place(t, t.arrival_ms,
+                           edge_queue_wait_ms=queue.wait_ms(t.arrival_ms))
+        if d.target == eng_loop.edge_name:
+            queue.push(t.arrival_ms, d.prediction.comp_ms)
+    loop_s = time.perf_counter() - t0
+
+    # --- batched decision loop --------------------------------------------
+    eng_batch = _fresh_engine(models)
+    t0 = time.perf_counter()
+    decisions = eng_batch.place_many(tasks)
+    batch_s = time.perf_counter() - t0
+
+    mismatches = sum(a.target != b.target
+                     for a, b in zip(eng_loop.decisions, decisions))
+    speedup = loop_s / max(batch_s, 1e-12)
+    print(f"{'path':<22} {'wall s':>10} {'tasks/s':>12}")
+    print(f"{'per-task place()':<22} {loop_s:>10.3f} {n / loop_s:>12.0f}")
+    print(f"{'place_many()':<22} {batch_s:>10.3f} {n / batch_s:>12.0f}")
+    print(f"speedup: {speedup:.1f}x   decision mismatches: {mismatches}/{n}")
+    assert mismatches == 0, "batched decisions diverged from per-task loop"
+    assert speedup >= 5.0, f"expected >=5x, got {speedup:.1f}x"
+
+    emit("runtime/place_per_task", loop_s / n * 1e6, f"n={n}")
+    emit("runtime/place_many", batch_s / n * 1e6,
+         f"n={n};speedup={speedup:.1f}x")
+
+
+def main():
+    p = argparse.ArgumentParser()
+    p.add_argument("--n", type=int, default=None)
+    args = p.parse_args()
+    from benchmarks.common import CsvSink
+
+    sink = CsvSink()
+    run(sink, n=args.n)
+    print(sink.dump())
+
+
+if __name__ == "__main__":
+    main()

@@ -14,7 +14,7 @@ import numpy as np
 
 from repro.core.decision import DecisionEngine
 from repro.core.fit import build_predictor, fit_app
-from repro.core.simulator import Simulation
+from repro.core.runtime import PlacementRuntime, TwinBackend
 
 # Paper Sec. IV-C data sizes (1400 imgs / 3400 clips, 19 configs) are used in
 # full by default; REDUCED=True trims for quick runs (CI) without changing
@@ -45,9 +45,9 @@ def simulate(app: str, policy_factory, configs, seed: int = 5,
     tasks = twin.workload(n or n_tasks(), seed=seed)
     pred = build_predictor(models, configs=tuple(configs), quantile=quantile)
     eng = DecisionEngine(predictor=pred, policy=policy_factory())
-    sim = Simulation(twin, eng, seed=seed + 100)
+    runtime = PlacementRuntime(engine=eng, backend=TwinBackend(twin, seed=seed + 100))
     t0 = time.perf_counter()
-    res = sim.run(tasks)
+    res = runtime.serve(tasks)
     wall = time.perf_counter() - t0
     return res, wall / max(len(tasks), 1) * 1e6
 

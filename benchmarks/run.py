@@ -18,7 +18,7 @@ def main() -> int:
     p.add_argument("--reduced", action="store_true",
                    help="smaller measurement sets (quick run)")
     p.add_argument("--only", default="",
-                   help="comma list: t1,t2,t3,t4,t5,fig5,fig6,beyond,roofline")
+                   help="comma list: t1,t2,t3,t4,t5,fig5,fig6,beyond,runtime,roofline")
     p.add_argument("--skip-live", action="store_true",
                    help="skip the real-compile live prototype (t5)")
     args = p.parse_args()
@@ -28,6 +28,7 @@ def main() -> int:
         common.REDUCED = True
 
     from benchmarks import (
+        bench_runtime,
         beyond_paper,
         fig5_delta_sweep,
         fig6_alpha_sweep,
@@ -52,6 +53,7 @@ def main() -> int:
         "fig5": fig5_delta_sweep.run,
         "fig6": fig6_alpha_sweep.run,
         "beyond": beyond_paper.run,
+        "runtime": bench_runtime.run,
         "roofline": roofline.run,
     }
     selected = [s.strip() for s in args.only.split(",") if s.strip()] or list(modules)

@@ -19,9 +19,9 @@ from repro.configs import smoke_config
 from repro.core.decision import MinLatencyPolicy
 from repro.serving.executors import SliceSpec
 from repro.serving.placement import (
-    LivePlacementServer,
     calibrate_catalog,
     llm_workload,
+    make_live_runtime,
 )
 from benchmarks.common import banner
 
@@ -54,15 +54,15 @@ def run(emit):
                          mean_tokens=MEAN_TOKENS)
 
     t0 = time.perf_counter()
-    srv = LivePlacementServer(cat, MinLatencyPolicy(C_MAX, ALPHA),
-                              t_idl_ms=T_IDL_MS)
-    res = srv.serve(tasks)
+    runtime = make_live_runtime(cat, MinLatencyPolicy(C_MAX, ALPHA),
+                                t_idl_ms=T_IDL_MS)
+    res = runtime.serve(tasks)
     serve_s = time.perf_counter() - t0
 
     # edge-only comparison (paper Sec. VI-B final paragraph)
-    srv0 = LivePlacementServer(cat, MinLatencyPolicy(0.0, 0.0),
-                               t_idl_ms=T_IDL_MS)
-    res0 = srv0.serve(tasks)
+    runtime0 = make_live_runtime(cat, MinLatencyPolicy(0.0, 0.0),
+                                 t_idl_ms=T_IDL_MS)
+    res0 = runtime0.serve(tasks)
     speedup = res0.avg_actual_latency_ms / max(res.avg_actual_latency_ms, 1e-9)
 
     hist = {}

@@ -11,7 +11,7 @@ import numpy as np
 
 from repro.core.decision import DecisionEngine, MinCostPolicy, MinLatencyPolicy
 from repro.core.fit import build_predictor, fit_app
-from repro.core.simulator import Simulation
+from repro.core.runtime import PlacementRuntime, TwinBackend
 
 
 def bar(x, scale, width=40):
@@ -29,7 +29,7 @@ print(f"{'δ (s)':>6} {'cost $':>10} {'edge#':>6}")
 for d in (4500, 5000, 5500, 6000, 6500, 7000):
     pred = build_predictor(models, configs=(768, 1152, 1280, 1664))
     eng = DecisionEngine(predictor=pred, policy=MinCostPolicy(float(d)))
-    res = Simulation(twin, eng, seed=9).run(tasks)
+    res = PlacementRuntime(eng, TwinBackend(twin, seed=9)).serve(tasks)
     print(f"{d/1e3:>6.1f} {res.total_actual_cost:>10.6f} {res.n_edge:>6d} "
           f"|{bar(res.n_edge, 300)}")
 
@@ -39,7 +39,7 @@ for a in (0.0, 0.01, 0.02, 0.03, 0.05, 0.1):
     pred = build_predictor(models, configs=(1152, 1280, 1664))
     eng = DecisionEngine(predictor=pred,
                          policy=MinLatencyPolicy(3.0747e-5, a))
-    res = Simulation(twin, eng, seed=9).run(tasks)
+    res = PlacementRuntime(eng, TwinBackend(twin, seed=9)).serve(tasks)
     rem = 100 - res.pct_budget_used
     print(f"{a:>6.2f} {res.avg_actual_latency_ms/1e3:>8.3f} {rem:>11.1f}% "
           f"|{bar(res.avg_actual_latency_ms, 20e3)}")

@@ -9,7 +9,7 @@ event-driven simulator (Sec. VI-A) and prints the headline metrics.
 
 from repro.core.decision import DecisionEngine, MinCostPolicy, MinLatencyPolicy
 from repro.core.fit import build_predictor, fit_app
-from repro.core.simulator import Simulation
+from repro.core.runtime import PlacementRuntime, TwinBackend
 
 # 1. Collect measurements from the (simulated) AWS environment and fit the
 #    component models: upload/ridge, GBRT compute, normal start/store.
@@ -23,10 +23,12 @@ print(f"  cloud end-to-end MAPE: {models.cloud_e2e_mape:.2f}%   "
 tasks = twin.workload(600, seed=42)
 
 # 3a. Minimize latency subject to a per-task budget (paper Alg. 1).
+#     The unified runtime: ONE serve loop over a pluggable execution backend
+#     (here the AWS twin; repro.serving swaps in the live executor pool).
 predictor = build_predictor(models, configs=(1536, 1664, 2048))
 engine = DecisionEngine(predictor=predictor,
                         policy=MinLatencyPolicy(c_max=2.96997e-5, alpha=0.02))
-res = Simulation(twin, engine, seed=7).run(tasks)
+res = PlacementRuntime(engine, TwinBackend(twin, seed=7)).serve(tasks)
 print(f"\nmin-latency: avg {res.avg_actual_latency_ms/1e3:.3f}s/task, "
       f"pred err {res.latency_error_pct:.2f}%, "
       f"budget used {res.pct_budget_used:.1f}%, "
@@ -35,7 +37,7 @@ print(f"\nmin-latency: avg {res.avg_actual_latency_ms/1e3:.3f}s/task, "
 # 3b. Minimize cost subject to a 4.5 s deadline.
 predictor = build_predictor(models, configs=(1280, 1408, 1664))
 engine = DecisionEngine(predictor=predictor, policy=MinCostPolicy(4500.0))
-res = Simulation(twin, engine, seed=7).run(tasks)
+res = PlacementRuntime(engine, TwinBackend(twin, seed=7)).serve(tasks)
 print(f"min-cost:    total ${res.total_actual_cost:.6f}, "
       f"pred err {res.cost_error_pct:.2f}%, "
       f"deadline violations {res.pct_deadline_violated:.2f}%")
@@ -43,7 +45,7 @@ print(f"min-cost:    total ${res.total_actual_cost:.6f}, "
 # 4. The punchline (paper Sec. VI-B): dynamic placement vs edge-only.
 engine0 = DecisionEngine(predictor=build_predictor(models, configs=(1536,)),
                          policy=MinLatencyPolicy(c_max=0.0, alpha=0.0))
-res0 = Simulation(twin, engine0, seed=7).run(tasks)
+res0 = PlacementRuntime(engine0, TwinBackend(twin, seed=7)).serve(tasks)
 print(f"\nedge-only:   avg {res0.avg_actual_latency_ms/1e3:.1f}s/task "
       f"(queueing collapse) → dynamic placement is "
       f"{res0.avg_actual_latency_ms/res.avg_actual_latency_ms:.0f}x faster")

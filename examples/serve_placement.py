@@ -12,9 +12,9 @@ from repro.configs import smoke_config
 from repro.core.decision import MinLatencyPolicy
 from repro.serving.executors import SliceSpec
 from repro.serving.placement import (
-    LivePlacementServer,
     calibrate_catalog,
     llm_workload,
+    make_live_runtime,
 )
 
 MODEL = "llama3.2-1b"
@@ -40,11 +40,12 @@ print(f"  cold start (compile+init): {cat.start_cold.mean:.0f} ms   "
 
 tasks = llm_workload(N_REQUESTS, rate_per_s=RATE_PER_S, seed=1,
                      mean_tokens=MEAN_TOKENS)
-server = LivePlacementServer(cat, MinLatencyPolicy(C_MAX, ALPHA),
-                             t_idl_ms=10_000.0)
+# The SAME PlacementRuntime serve loop as the simulator, over the live pool.
+runtime = make_live_runtime(cat, MinLatencyPolicy(C_MAX, ALPHA),
+                            t_idl_ms=10_000.0)
 print(f"serving {N_REQUESTS} requests (Poisson {RATE_PER_S}/s) through the "
       "Decision Engine...")
-res = server.serve(tasks)
+res = runtime.serve(tasks)
 
 hist = {}
 for r in res.records:

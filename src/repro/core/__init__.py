@@ -4,28 +4,49 @@ Components (paper section in parens):
 
 - ``perf_models``  — linear/ridge regression, (quantized-)normal component models (IV-A/B)
 - ``gbrt``         — gradient-boosted regression trees, pure JAX/numpy (IV-A compute model)
-- ``pricing``      — AWS Lambda / edge / TPU-slice cost models (II-A)
+- ``pricing``      — AWS Lambda / edge / TPU-slice cost models, scalar + vectorized (II-A)
 - ``cil``          — Container Information List: warm/cold shadow state (V-A)
-- ``predictor``    — Predictor: end-to-end latency+cost prediction per config (V-A)
-- ``decision``     — Decision Engine: min-cost-s.t.-deadline & min-latency-s.t.-cost (III-B, Alg. 1)
+- ``predictor``    — Predictor: end-to-end latency+cost prediction per config, per task
+                     (``predict``) or vectorized over a whole batch
+                     (``predict_batch``/``predict_at``) (V-A)
+- ``decision``     — the formal ``Policy`` protocol (``constraints()``/``choose``/
+                     ``hedge``/``observe``) and the Decision Engine:
+                     min-cost-s.t.-deadline & min-latency-s.t.-cost, per task
+                     (``place``) or batched (``place_many``) (III-B, Alg. 1)
 - ``workload``     — Poisson arrival workload generators (II-B)
 - ``apps``         — AWS digital twin for the paper's IR / FD / STT applications (II-B, IV-C)
-- ``simulator``    — event-driven simulation of the full framework (VI-A)
+- ``records``      — per-task TaskRecord + aggregate SimulationResult metrics (VI)
+- ``runtime``      — the unified serve loop: ``PlacementRuntime`` over pluggable
+                     ``ExecutionBackend``s (``TwinBackend`` here,
+                     ``repro.serving.placement.LiveBackend`` live) (VI-A/B)
+- ``simulator``    — deprecated thin wrapper kept for backward compatibility
 """
 
 from repro.core.pricing import LambdaPricing, EdgePricing, SlicePricing
 from repro.core.perf_models import RidgeModel, NormalModel, fit_ridge
 from repro.core.gbrt import GBRT, GBRTConfig
 from repro.core.cil import ContainerInfoList, ContainerRecord
-from repro.core.predictor import Predictor, Prediction
+from repro.core.predictor import Predictor, Prediction, PredictionBatch
 from repro.core.decision import (
     DecisionEngine,
+    HedgedPolicy,
     MinCostPolicy,
     MinLatencyPolicy,
     PlacementDecision,
+    Policy,
+    PolicyConstraints,
+    PredictedEdgeQueue,
 )
 from repro.core.workload import PoissonWorkload, TaskInput
-from repro.core.simulator import Simulation, SimulationResult
+from repro.core.records import SimulationResult, TaskRecord
+from repro.core.runtime import (
+    ExecutionBackend,
+    ExecutionOutcome,
+    GroundTruthCloud,
+    PlacementRuntime,
+    TwinBackend,
+)
+from repro.core.simulator import Simulation
 
 __all__ = [
     "LambdaPricing",
@@ -40,12 +61,23 @@ __all__ = [
     "ContainerRecord",
     "Predictor",
     "Prediction",
+    "PredictionBatch",
     "DecisionEngine",
+    "HedgedPolicy",
     "MinCostPolicy",
     "MinLatencyPolicy",
     "PlacementDecision",
+    "Policy",
+    "PolicyConstraints",
+    "PredictedEdgeQueue",
     "PoissonWorkload",
     "TaskInput",
-    "Simulation",
     "SimulationResult",
+    "TaskRecord",
+    "ExecutionBackend",
+    "ExecutionOutcome",
+    "GroundTruthCloud",
+    "PlacementRuntime",
+    "TwinBackend",
+    "Simulation",
 ]

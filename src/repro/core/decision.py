@@ -1,6 +1,17 @@
 """The Decision Engine (paper Sec. III-B, V-B, Alg. 1).
 
-Two placement policies:
+``Policy`` is the formal contract every placement policy implements:
+
+- ``choose(preds, edge_name)`` picks a target from per-target predictions;
+- ``constraints()`` exposes the policy's declarative constraints
+  (``PolicyConstraints``: deadline and/or per-task budget) so the runtime can
+  report the right metrics without inspecting policy internals;
+- ``hedge(preds, chosen, allowed, edge_name)`` is a first-class hook for
+  duplicate dispatch: a policy may nominate a backup target after ``choose``;
+- ``observe(chosen)`` feeds the decision back into policy state (Alg. 1's
+  surplus bank).
+
+Two placement policies from the paper:
 
 - ``MinCostPolicy(deadline_ms)``: minimize execution cost subject to a per-task
   end-to-end deadline δ. Feasible set M = targets whose *predicted* latency
@@ -15,14 +26,29 @@ Two placement policies:
 Beyond-paper extension: ``HedgedPolicy`` wraps MinLatency and duplicates the
 dispatch to a second config when the predicted tail latency of the primary
 exceeds a hedging threshold (classic tail-at-scale hedging; evaluated in
-benchmarks as a beyond-paper experiment).
+benchmarks as a beyond-paper experiment). It implements the ``hedge`` hook,
+so composition is explicit — no engine-side introspection.
+
+``DecisionEngine.place()`` handles one task; ``DecisionEngine.place_many()``
+is the batched path: one vectorized ``Predictor.predict_batch`` pass over all
+tasks × targets, then the (cheap) sequential policy/CIL walk.
 """
 
 from __future__ import annotations
 
+import abc
 from dataclasses import dataclass, field
 
+from repro.core.predictor import EDGE as EDGE_NAME
 from repro.core.predictor import Prediction, Predictor
+
+
+@dataclass(frozen=True)
+class PolicyConstraints:
+    """Declarative constraints a policy enforces (``None`` = unconstrained)."""
+
+    deadline_ms: float | None = None
+    c_max: float | None = None
 
 
 @dataclass(frozen=True)
@@ -36,13 +62,43 @@ class PlacementDecision:
     hedge_prediction: Prediction | None = None
 
 
-class MinCostPolicy:
+class Policy(abc.ABC):
+    """The placement-policy contract consumed by ``DecisionEngine``."""
+
+    @abc.abstractmethod
+    def constraints(self) -> PolicyConstraints:
+        """The constraints this policy enforces, for result reporting."""
+
+    @abc.abstractmethod
+    def choose(self, preds: dict[str, Prediction],
+               edge_name: str = EDGE_NAME) -> tuple[str, bool, float]:
+        """Pick a target. Returns (name, feasible, allowed_cost)."""
+
+    def hedge(self, preds: dict[str, Prediction], chosen: str, allowed: float,
+              edge_name: str = EDGE_NAME) -> tuple[str, Prediction] | None:
+        """Optional backup dispatch for the decision just made by ``choose``.
+
+        Called by the engine immediately after ``choose``; returns
+        ``(backup_name, backup_prediction)`` or ``None``. The default policy
+        never hedges.
+        """
+        return None
+
+    @abc.abstractmethod
+    def observe(self, chosen: Prediction) -> None:
+        """Feed the chosen prediction back into policy state."""
+
+
+class MinCostPolicy(Policy):
     """Minimize cost s.t. per-task deadline δ."""
 
     def __init__(self, deadline_ms: float):
         self.deadline_ms = deadline_ms
 
-    def choose(self, preds: dict[str, Prediction], edge_name: str = "edge"):
+    def constraints(self) -> PolicyConstraints:
+        return PolicyConstraints(deadline_ms=self.deadline_ms)
+
+    def choose(self, preds: dict[str, Prediction], edge_name: str = EDGE_NAME):
         feasible = {n: p for n, p in preds.items() if p.latency_ms <= self.deadline_ms}
         if not feasible:
             # No configuration satisfies the deadline: queue on the edge to
@@ -55,7 +111,7 @@ class MinCostPolicy:
         pass
 
 
-class MinLatencyPolicy:
+class MinLatencyPolicy(Policy):
     """Minimize latency s.t. cost ≤ C_max + α·surplus (Alg. 1)."""
 
     def __init__(self, c_max: float, alpha: float = 0.0):
@@ -69,7 +125,10 @@ class MinLatencyPolicy:
     def allowed(self) -> float:
         return self.c_max + self.alpha * self.surplus
 
-    def choose(self, preds: dict[str, Prediction], edge_name: str = "edge"):
+    def constraints(self) -> PolicyConstraints:
+        return PolicyConstraints(c_max=self.c_max)
+
+    def choose(self, preds: dict[str, Prediction], edge_name: str = EDGE_NAME):
         allowed = self.allowed
         feasible = {n: p for n, p in preds.items() if p.cost <= allowed}
         # λ_edge costs 0, so feasible is never empty when an edge target exists.
@@ -83,39 +142,15 @@ class MinLatencyPolicy:
         self.surplus += self.c_max - chosen.cost
 
 
-@dataclass
-class DecisionEngine:
-    """Binds a Predictor to a placement policy; one ``place()`` call per input."""
-
-    predictor: Predictor
-    policy: object
-    edge_name: str = "edge"
-    decisions: list = field(default_factory=list)
-
-    def place(self, task, now: float, edge_queue_wait_ms: float = 0.0) -> PlacementDecision:
-        preds = self.predictor.predict(task, now, edge_queue_wait_ms)
-        name, feasible, allowed = self.policy.choose(preds, self.edge_name)
-        chosen = preds[name]
-        self.policy.observe(chosen)
-        self.predictor.update_cil(name, now, chosen)
-        d = PlacementDecision(
-            task_idx=getattr(task, "idx", -1),
-            target=name,
-            prediction=chosen,
-            feasible=feasible,
-            allowed_cost=allowed,
-        )
-        self.decisions.append(d)
-        return d
-
-
-class HedgedPolicy:
+class HedgedPolicy(Policy):
     """Beyond-paper: hedge high-tail-risk placements with a backup dispatch.
 
     Wraps MinLatencyPolicy. If the chosen target's predicted latency exceeds
     ``hedge_threshold_ms`` and a second, faster-on-tail config fits the
     *remaining* budget, a duplicate dispatch is issued; the effective latency
-    is the min of the two (first-completion-wins).
+    is the min of the two (first-completion-wins). The hedge's cost draws down
+    the surplus bank, so hedging can never spend budget the policy has not
+    earned.
     """
 
     def __init__(self, inner: MinLatencyPolicy, hedge_threshold_ms: float):
@@ -131,7 +166,10 @@ class HedgedPolicy:
     def allowed(self) -> float:
         return self.inner.allowed
 
-    def choose(self, preds: dict[str, Prediction], edge_name: str = "edge"):
+    def constraints(self) -> PolicyConstraints:
+        return self.inner.constraints()
+
+    def choose(self, preds: dict[str, Prediction], edge_name: str = EDGE_NAME):
         name, feasible, allowed = self.inner.choose(preds, edge_name)
         self.last_hedge = None
         primary = preds[name]
@@ -146,8 +184,102 @@ class HedgedPolicy:
                 self.last_hedge = (backup, candidates[backup])
         return name, feasible, allowed
 
+    def hedge(self, preds: dict[str, Prediction], chosen: str, allowed: float,
+              edge_name: str = EDGE_NAME) -> tuple[str, Prediction] | None:
+        return self.last_hedge
+
     def observe(self, chosen: Prediction) -> None:
         self.inner.observe(chosen)
         if self.last_hedge is not None:
             # the hedge's cost also draws down the budget bank
             self.inner.surplus -= self.last_hedge[1].cost
+
+
+@dataclass
+class PredictedEdgeQueue:
+    """The Decision Engine's shadow of the single-slot edge FIFO queue.
+
+    The framework never sees the edge's *actual* queue; it advances a
+    predicted busy-horizon with each predicted compute time it sends there
+    (paper Sec. V-B). Shared by the step-wise and batched decision loops.
+    """
+
+    horizon_ms: float = 0.0
+
+    def wait_ms(self, now: float) -> float:
+        return max(self.horizon_ms - now, 0.0)
+
+    def push(self, now: float, comp_ms: float) -> None:
+        self.horizon_ms = max(self.horizon_ms, now) + comp_ms
+
+
+_POLICY_METHODS = ("choose", "observe", "constraints", "hedge")
+
+
+@dataclass
+class DecisionEngine:
+    """Binds a Predictor to a placement policy; one ``place()`` call per input."""
+
+    predictor: Predictor
+    policy: Policy
+    edge_name: str = EDGE_NAME
+    decisions: list = field(default_factory=list)
+
+    def __post_init__(self):
+        missing = [m for m in _POLICY_METHODS if not hasattr(self.policy, m)]
+        if missing:
+            raise TypeError(
+                f"{type(self.policy).__name__} does not implement the Policy "
+                f"protocol (missing {', '.join(missing)}); subclass "
+                "repro.core.decision.Policy")
+
+    def place(self, task, now: float, edge_queue_wait_ms: float = 0.0) -> PlacementDecision:
+        preds = self.predictor.predict(task, now, edge_queue_wait_ms)
+        return self._decide(task, now, preds)
+
+    def place_many(self, tasks: list,
+                   edge_queue: PredictedEdgeQueue | None = None) -> list[PlacementDecision]:
+        """Batched placement: one vectorized prediction pass over all tasks ×
+        targets, then the sequential policy/CIL/edge-queue walk.
+
+        Decisions are identical to a ``place()`` loop — the models are
+        evaluated in one numpy pass instead of per task, which is what makes
+        large-N workloads fast (see ``benchmarks/bench_runtime.py``).
+        """
+        batch = self.predictor.predict_batch(tasks)
+        queue = edge_queue if edge_queue is not None else PredictedEdgeQueue()
+        out = []
+        for i, task in enumerate(tasks):
+            now = task.arrival_ms
+            preds = self.predictor.predict_at(batch, i, now, queue.wait_ms(now))
+            d = self._decide(task, now, preds)
+            if d.target == self.edge_name:
+                queue.push(now, d.prediction.comp_ms)
+            if d.hedge_target == self.edge_name and d.hedge_prediction is not None:
+                queue.push(now, d.hedge_prediction.comp_ms)
+            out.append(d)
+        return out
+
+    # ------------------------------------------------------------------
+    def _decide(self, task, now: float, preds: dict[str, Prediction]) -> PlacementDecision:
+        name, feasible, allowed = self.policy.choose(preds, self.edge_name)
+        chosen = preds[name]
+        hedge = self.policy.hedge(preds, name, allowed, self.edge_name)
+        if hedge is not None and hedge[0] == name:
+            hedge = None  # a duplicate of the primary is not a hedge
+        self.policy.observe(chosen)
+        self.predictor.update_cil(name, now, chosen)
+        if hedge is not None:
+            # the duplicate dispatch occupies a container too
+            self.predictor.update_cil(hedge[0], now, hedge[1])
+        d = PlacementDecision(
+            task_idx=getattr(task, "idx", -1),
+            target=name,
+            prediction=chosen,
+            feasible=feasible,
+            allowed_cost=allowed,
+            hedge_target=hedge[0] if hedge is not None else None,
+            hedge_prediction=hedge[1] if hedge is not None else None,
+        )
+        self.decisions.append(d)
+        return d

@@ -9,6 +9,18 @@ Targets are pluggable so the same Predictor drives both the AWS reproduction
 (LambdaTarget/EdgeTarget, models from Sec. IV) and the TPU-fleet adaptation
 (``repro.serving.placement.SliceTarget``).
 
+Two prediction paths:
+
+- ``predict(task, now)`` — the paper's per-task call: consult the CIL, return
+  one ``Prediction`` per target;
+- ``predict_batch(tasks)`` + ``predict_at(batch, i, now)`` — the batched API:
+  every component model (ridge/normal/GBRT — all accept arrays) is evaluated
+  ONCE over all tasks × targets, for both the warm and the cold start variant;
+  ``predict_at`` then assembles the per-task view by consulting the CIL, which
+  is the only genuinely sequential part. ``DecisionEngine.place_many`` builds
+  on this; results are identical to per-task ``predict`` (same models, same
+  arithmetic, vectorized).
+
 The ``quantile`` option is a beyond-paper extension (the paper's stated future
 work): predict a latency quantile instead of the mean, so placement can hedge
 against the high variance the paper observed in cloud pipelines.
@@ -18,6 +30,8 @@ from __future__ import annotations
 
 from dataclasses import dataclass, field
 from typing import Mapping, Protocol
+
+import numpy as np
 
 from repro.core.cil import ContainerInfoList
 from repro.core.perf_models import NormalModel, RidgeModel, _norm_ppf
@@ -49,12 +63,257 @@ class ExecutionTarget(Protocol):
         """Latency components in ms. Must include a 'comp' entry."""
         ...
 
+    def predict_components_batch(self, sizes: np.ndarray, nbytes: np.ndarray,
+                                 quantile: float | None) -> tuple[dict, dict | None]:
+        """Vectorized components for n tasks: (warm, cold) dicts of (n,) arrays.
+
+        ``cold`` is ``None`` for always-warm targets (the edge). Optional —
+        ``Predictor.predict_batch`` falls back to per-task calls when absent.
+        """
+        ...
+
     def cost(self, comp_ms: float) -> float:
+        ...
+
+    def cost_batch(self, comp_ms: np.ndarray) -> np.ndarray:
+        """Vectorized ``cost`` over an array of compute times. Optional."""
         ...
 
     def occupancy_ms(self, components: dict[str, float]) -> float:
         """How long the executor/container is held busy (for CIL bookkeeping)."""
         ...
+
+
+@dataclass(frozen=True)
+class TargetBatch:
+    """Vectorized predictions for one target across a batch of tasks."""
+
+    warm: dict[str, np.ndarray]          # component -> (n,) ms
+    cold: dict[str, np.ndarray] | None   # None for always-warm targets
+    warm_latency: np.ndarray             # (n,) — sum of warm components
+    cold_latency: np.ndarray | None
+    cost: np.ndarray                     # (n,) — cost depends on comp only
+
+
+@dataclass(frozen=True)
+class PredictionBatch:
+    """All component-model evaluations for a batch of tasks, both start modes.
+
+    Warm/cold selection and edge queueing are *not* baked in — they depend on
+    sequential CIL / edge-queue state and are resolved per task by
+    ``Predictor.predict_at``.
+    """
+
+    n: int
+    cloud: dict[str, TargetBatch]
+    edge: TargetBatch | None
+    edge_name: str | None
+
+
+def cloud_components_batch(sizes: np.ndarray, nbytes: np.ndarray, *,
+                           comp_feature: float, comp_model, upld_model,
+                           start_warm: NormalModel, start_cold: NormalModel,
+                           store_model: NormalModel, comp_std_frac: float,
+                           quantile: float | None) -> tuple[dict, dict]:
+    """Shared vectorized cloud pipeline: upld + start + comp + store.
+
+    One source of truth for the batch variant of the cloud-target component
+    math (``LambdaTarget`` with ``memory_mb``, ``SliceTarget`` with
+    ``chips``), so the scalar/batch parity guarantee has a single place to
+    break — and a parity test to catch it.
+    """
+    n = sizes.shape[0]
+    feats = np.stack([sizes, np.full(n, comp_feature)], axis=1)
+    comp = np.asarray(comp_model.predict(feats), dtype=np.float64)
+    if quantile is not None:
+        z = _norm_ppf(quantile)
+        comp = comp * (1.0 + z * comp_std_frac)
+        warm_start = start_warm.predict_quantile(quantile)
+        cold_start = start_cold.predict_quantile(quantile)
+        store_ms = store_model.predict_quantile(quantile)
+    else:
+        warm_start = start_warm.predict()
+        cold_start = start_cold.predict()
+        store_ms = store_model.predict()
+    warm = {
+        "upld": np.maximum(np.asarray(upld_model.predict(nbytes)), 0.0),
+        "start": np.full(n, max(warm_start, 0.0)),
+        "comp": np.maximum(comp, 0.0),
+        "store": np.full(n, max(store_ms, 0.0)),
+    }
+    cold = dict(warm, start=np.full(n, max(cold_start, 0.0)))
+    return warm, cold
+
+
+def edge_components_batch(sizes: np.ndarray, *, comp_model,
+                          store_model: NormalModel, comp_std_frac: float,
+                          quantile: float | None,
+                          iotup_model: NormalModel | None = None) -> tuple[dict, None]:
+    """Shared vectorized edge pipeline: comp + iotup + store (always warm).
+
+    ``iotup_model=None`` means the pipeline has no IoT upload leg (the
+    TPU-slice edge); the component is emitted as zeros for shape parity.
+    """
+    n = sizes.shape[0]
+    comp = np.asarray(comp_model.predict(sizes), dtype=np.float64)
+    if quantile is not None:
+        z = _norm_ppf(quantile)
+        comp = comp * (1.0 + z * comp_std_frac)
+        iot = iotup_model.predict_quantile(quantile) if iotup_model else 0.0
+        store = store_model.predict_quantile(quantile)
+    else:
+        iot = iotup_model.predict() if iotup_model else 0.0
+        store = store_model.predict()
+    warm = {"comp": np.maximum(comp, 0.0),
+            "iotup": np.full(n, max(iot, 0.0)),
+            "store": np.full(n, max(store, 0.0))}
+    return warm, None
+
+
+def _stack_components(tgt, sizes: np.ndarray, nbytes: np.ndarray,
+                      quantile: float | None) -> tuple[dict, dict | None]:
+    """Per-task fallback for targets without ``predict_components_batch``."""
+
+    @dataclass
+    class _Row:
+        size: float
+        bytes: float
+
+    def rows(cold: bool) -> dict[str, np.ndarray]:
+        per = [tgt.predict_components(_Row(float(s), float(b)), cold, quantile)
+               for s, b in zip(sizes, nbytes)]
+        return {k: np.array([p[k] for p in per]) for k in per[0]}
+
+    warm = rows(False)
+    cold = None if tgt.is_edge else rows(True)
+    return warm, cold
+
+
+@dataclass
+class Predictor:
+    """predict() + update_cil(), exactly the two methods of paper Sec. V-A —
+    plus the batched ``predict_batch``/``predict_at`` pair."""
+
+    cloud_targets: list
+    edge_target: object | None
+    cil: ContainerInfoList = field(default_factory=ContainerInfoList)
+    quantile: float | None = None  # None = paper-faithful mean prediction
+
+    def __post_init__(self):
+        self._by_name = {t.name: t for t in self.cloud_targets}
+
+    def predict(self, task, now: float, edge_queue_wait_ms: float = 0.0) -> dict[str, Prediction]:
+        """Predicted end-to-end latency and cost for every target."""
+        self.cil.reap(now)
+        out: dict[str, Prediction] = {}
+        for tgt in self.cloud_targets:
+            cold = not self.cil.will_warm_start(tgt.name, now)
+            comps = tgt.predict_components(task, cold, self.quantile)
+            latency = sum(comps.values())
+            out[tgt.name] = Prediction(
+                target=tgt.name,
+                latency_ms=latency,
+                cost=tgt.cost(comps["comp"]),
+                cold=cold,
+                components=comps,
+            )
+        if self.edge_target is not None:
+            comps = self.edge_target.predict_components(task, False, self.quantile)
+            latency = edge_queue_wait_ms + sum(comps.values())
+            comps = dict(comps, queue=edge_queue_wait_ms)
+            out[self.edge_target.name] = Prediction(
+                target=self.edge_target.name,
+                latency_ms=latency,
+                cost=self.edge_target.cost(comps["comp"]),
+                cold=False,
+                components=comps,
+            )
+        return out
+
+    # ----------------------------------------------------------- batched API
+    def predict_batch(self, tasks: list) -> PredictionBatch:
+        """Evaluate every component model over all tasks × targets at once.
+
+        One numpy pass per (target, start-mode) instead of a Python loop per
+        task — the GBRT compute model alone turns N×M tree walks into M.
+        """
+        if not tasks:
+            return PredictionBatch(n=0, cloud={}, edge=None, edge_name=None)
+        sizes = np.array([t.size for t in tasks], dtype=np.float64)
+        nbytes = np.array([t.bytes for t in tasks], dtype=np.float64)
+
+        cloud: dict[str, TargetBatch] = {}
+        for tgt in self.cloud_targets:
+            cloud[tgt.name] = self._target_batch(tgt, sizes, nbytes)
+        edge = (self._target_batch(self.edge_target, sizes, nbytes)
+                if self.edge_target is not None else None)
+        return PredictionBatch(
+            n=len(tasks), cloud=cloud, edge=edge,
+            edge_name=self.edge_target.name if self.edge_target is not None else None,
+        )
+
+    def _target_batch(self, tgt, sizes: np.ndarray, nbytes: np.ndarray) -> TargetBatch:
+        if hasattr(tgt, "predict_components_batch"):
+            warm, cold = tgt.predict_components_batch(sizes, nbytes, self.quantile)
+        else:
+            warm, cold = _stack_components(tgt, sizes, nbytes, self.quantile)
+        if hasattr(tgt, "cost_batch"):
+            cost = np.asarray(tgt.cost_batch(warm["comp"]), dtype=np.float64)
+        else:
+            cost = np.array([tgt.cost(float(c)) for c in warm["comp"]])
+        return TargetBatch(
+            warm=warm, cold=cold,
+            warm_latency=sum(warm.values()),
+            cold_latency=sum(cold.values()) if cold is not None else None,
+            cost=cost,
+        )
+
+    def predict_at(self, batch: PredictionBatch, idx: int, now: float,
+                   edge_queue_wait_ms: float = 0.0) -> dict[str, Prediction]:
+        """Assemble the per-task view of a ``PredictionBatch``: consult the CIL
+        for warm/cold per cloud target, add the predicted edge queue wait.
+
+        Equivalent to ``predict(tasks[idx], now, edge_queue_wait_ms)``."""
+        self.cil.reap(now)
+        out: dict[str, Prediction] = {}
+        for name, tb in batch.cloud.items():
+            cold = not self.cil.will_warm_start(name, now)
+            src = tb.cold if cold else tb.warm
+            lat = tb.cold_latency if cold else tb.warm_latency
+            out[name] = Prediction(
+                target=name,
+                latency_ms=float(lat[idx]),
+                cost=float(tb.cost[idx]),
+                cold=cold,
+                components={k: float(v[idx]) for k, v in src.items()},
+            )
+        if batch.edge is not None:
+            tb = batch.edge
+            comps = {k: float(v[idx]) for k, v in tb.warm.items()}
+            comps["queue"] = edge_queue_wait_ms
+            out[batch.edge_name] = Prediction(
+                target=batch.edge_name,
+                latency_ms=edge_queue_wait_ms + float(tb.warm_latency[idx]),
+                cost=float(tb.cost[idx]),
+                cold=False,
+                components=comps,
+            )
+        return out
+
+    # ------------------------------------------------------------ CIL update
+    def update_cil(self, chosen: str, now: float, prediction: Prediction) -> None:
+        """Record the chosen placement (paper: Predictor.updateCIL)."""
+        if self.edge_target is not None and chosen == self.edge_target.name:
+            return  # edge executor state is tracked by its FIFO queue, not the CIL
+        tgt = self._target(chosen)
+        completion = now + tgt.occupancy_ms(dict(prediction.components))
+        self.cil.record_dispatch(chosen, now, completion)
+
+    def _target(self, name: str):
+        try:
+            return self._by_name[name]
+        except KeyError:
+            raise KeyError(f"unknown target {name!r}") from None
 
 
 @dataclass
@@ -73,8 +332,6 @@ class LambdaTarget:
     is_edge: bool = False
 
     def predict_components(self, task, cold: bool, quantile: float | None = None) -> dict[str, float]:
-        import numpy as np
-
         start = self.start_cold if cold else self.start_warm
         comp = float(self.comp_model.predict(np.array([[task.size, self.memory_mb]]))[0])
         if quantile is not None:
@@ -92,8 +349,20 @@ class LambdaTarget:
             "store": max(store_ms, 0.0),
         }
 
+    def predict_components_batch(self, sizes: np.ndarray, nbytes: np.ndarray,
+                                 quantile: float | None = None) -> tuple[dict, dict]:
+        return cloud_components_batch(
+            sizes, nbytes, comp_feature=self.memory_mb,
+            comp_model=self.comp_model, upld_model=self.upld_model,
+            start_warm=self.start_warm, start_cold=self.start_cold,
+            store_model=self.store_model, comp_std_frac=self.comp_std_frac,
+            quantile=quantile)
+
     def cost(self, comp_ms: float) -> float:
         return self.pricing.cost(comp_ms, self.memory_mb)
+
+    def cost_batch(self, comp_ms: np.ndarray) -> np.ndarray:
+        return self.pricing.cost_batch(comp_ms, self.memory_mb)
 
     def occupancy_ms(self, components: dict[str, float]) -> float:
         # The container is held from dispatch until the function returns:
@@ -125,60 +394,18 @@ class EdgeTarget:
             store = self.store_model.predict()
         return {"comp": max(comp, 0.0), "iotup": max(iot, 0.0), "store": max(store, 0.0)}
 
+    def predict_components_batch(self, sizes: np.ndarray, nbytes: np.ndarray,
+                                 quantile: float | None = None) -> tuple[dict, None]:
+        return edge_components_batch(
+            sizes, comp_model=self.comp_model, store_model=self.store_model,
+            comp_std_frac=self.comp_std_frac, quantile=quantile,
+            iotup_model=self.iotup_model)
+
     def cost(self, comp_ms: float) -> float:
         return self.pricing.cost(comp_ms)
 
+    def cost_batch(self, comp_ms: np.ndarray) -> np.ndarray:
+        return self.pricing.cost_batch(comp_ms)
+
     def occupancy_ms(self, components: dict[str, float]) -> float:
         return components["comp"]
-
-
-@dataclass
-class Predictor:
-    """predict() + update_cil(), exactly the two methods of paper Sec. V-A."""
-
-    cloud_targets: list
-    edge_target: object | None
-    cil: ContainerInfoList = field(default_factory=ContainerInfoList)
-    quantile: float | None = None  # None = paper-faithful mean prediction
-
-    def predict(self, task, now: float, edge_queue_wait_ms: float = 0.0) -> dict[str, Prediction]:
-        """Predicted end-to-end latency and cost for every target."""
-        self.cil.reap(now)
-        out: dict[str, Prediction] = {}
-        for tgt in self.cloud_targets:
-            cold = not self.cil.will_warm_start(tgt.name, now)
-            comps = tgt.predict_components(task, cold, self.quantile)
-            latency = sum(comps.values())
-            out[tgt.name] = Prediction(
-                target=tgt.name,
-                latency_ms=latency,
-                cost=tgt.cost(comps["comp"]),
-                cold=cold,
-                components=comps,
-            )
-        if self.edge_target is not None:
-            comps = self.edge_target.predict_components(task, False, self.quantile)
-            latency = edge_queue_wait_ms + sum(comps.values())
-            comps = dict(comps, queue=edge_queue_wait_ms)
-            out[self.edge_target.name] = Prediction(
-                target=self.edge_target.name,
-                latency_ms=latency,
-                cost=self.edge_target.cost(comps["comp"]),
-                cold=False,
-                components=comps,
-            )
-        return out
-
-    def update_cil(self, chosen: str, now: float, prediction: Prediction) -> None:
-        """Record the chosen placement (paper: Predictor.updateCIL)."""
-        if self.edge_target is not None and chosen == self.edge_target.name:
-            return  # edge executor state is tracked by its FIFO queue, not the CIL
-        tgt = self._target(chosen)
-        completion = now + tgt.occupancy_ms(dict(prediction.components))
-        self.cil.record_dispatch(chosen, now, completion)
-
-    def _target(self, name: str):
-        for t in self.cloud_targets:
-            if t.name == name:
-                return t
-        raise KeyError(f"unknown target {name!r}")

@@ -20,6 +20,8 @@ from __future__ import annotations
 import math
 from dataclasses import dataclass
 
+import numpy as np
+
 # Real AWS Lambda rate (the paper's table values are consistent with this, not
 # with the 1.667e-6 typo in the text).
 AWS_GB_SECOND_RATE = 1.66667e-5
@@ -51,6 +53,19 @@ class LambdaPricing:
             c += self.request_rate
         return c
 
+    def billed_ms_batch(self, comp_ms: np.ndarray) -> np.ndarray:
+        """Vectorized ``billed_ms`` (np.round matches round(): half-to-even)."""
+        ms = np.maximum(np.round(np.asarray(comp_ms, dtype=np.float64)), 1.0)
+        return np.ceil(ms / self.quantum_ms) * self.quantum_ms
+
+    def cost_batch(self, comp_ms: np.ndarray, memory_mb: float) -> np.ndarray:
+        """Vectorized ``cost`` over an array of compute times."""
+        gb = memory_mb / 1024.0
+        c = (self.billed_ms_batch(comp_ms) / 1000.0) * gb * self.gb_second_rate
+        if self.include_request_charge:
+            c = c + self.request_rate
+        return c
+
 
 @dataclass(frozen=True)
 class EdgePricing:
@@ -58,6 +73,9 @@ class EdgePricing:
 
     def cost(self, comp_ms: float) -> float:  # noqa: ARG002 - interface parity
         return 0.0
+
+    def cost_batch(self, comp_ms: np.ndarray) -> np.ndarray:
+        return np.zeros(np.asarray(comp_ms).shape[0], dtype=np.float64)
 
 
 @dataclass(frozen=True)
@@ -74,4 +92,9 @@ class SlicePricing:
 
     def cost(self, comp_ms: float, chips: int) -> float:
         seconds = math.ceil(max(comp_ms, 1.0) / 1000.0 / self.quantum_s) * self.quantum_s
+        return seconds * chips * self.chip_hour_rate / 3600.0
+
+    def cost_batch(self, comp_ms: np.ndarray, chips: int) -> np.ndarray:
+        ms = np.maximum(np.asarray(comp_ms, dtype=np.float64), 1.0)
+        seconds = np.ceil(ms / 1000.0 / self.quantum_s) * self.quantum_s
         return seconds * chips * self.chip_hour_rate / 3600.0

@@ -1,0 +1,124 @@
+"""Per-task records and aggregate results of a placement run.
+
+``TaskRecord`` pairs the Decision Engine's *predicted* view of one task
+(latency, cost, warm/cold) with the execution substrate's *actual* outcome;
+``SimulationResult`` aggregates a run's records into the paper's reported
+metrics (Tables III-V). Both are substrate-agnostic: the same types describe
+an event-driven simulation against the AWS twin and a live prototype run over
+real executors (see ``repro.core.runtime``).
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import numpy as np
+
+from repro.core.workload import TaskInput
+
+
+@dataclass
+class TaskRecord:
+    task: TaskInput
+    target: str
+    predicted_latency_ms: float
+    predicted_cost: float
+    actual_latency_ms: float
+    actual_cost: float
+    predicted_cold: bool
+    actual_cold: bool
+    allowed_cost: float
+    feasible: bool
+    completion_ms: float
+    hedged: bool = False
+
+    @property
+    def warm_cold_mismatch(self) -> bool:
+        return self.target != "edge" and self.predicted_cold != self.actual_cold
+
+
+@dataclass
+class SimulationResult:
+    records: list[TaskRecord]
+    deadline_ms: float | None = None
+    c_max: float | None = None
+    edge_name: str = "edge"
+
+    # ------------------------------------------------------------- totals
+    @property
+    def n(self) -> int:
+        return len(self.records)
+
+    @property
+    def total_actual_cost(self) -> float:
+        return sum(r.actual_cost for r in self.records)
+
+    @property
+    def total_predicted_cost(self) -> float:
+        return sum(r.predicted_cost for r in self.records)
+
+    @property
+    def cost_error_pct(self) -> float:
+        a = self.total_actual_cost
+        return abs(self.total_predicted_cost - a) / max(a, 1e-12) * 100.0
+
+    @property
+    def avg_actual_latency_ms(self) -> float:
+        return float(np.mean([r.actual_latency_ms for r in self.records]))
+
+    @property
+    def avg_predicted_latency_ms(self) -> float:
+        return float(np.mean([r.predicted_latency_ms for r in self.records]))
+
+    @property
+    def latency_error_pct(self) -> float:
+        a = self.avg_actual_latency_ms
+        return abs(self.avg_predicted_latency_ms - a) / max(a, 1e-9) * 100.0
+
+    @property
+    def p95_actual_latency_ms(self) -> float:
+        return float(np.percentile([r.actual_latency_ms for r in self.records], 95))
+
+    @property
+    def p99_actual_latency_ms(self) -> float:
+        return float(np.percentile([r.actual_latency_ms for r in self.records], 99))
+
+    # ------------------------------------------------- deadline (min-cost)
+    @property
+    def pct_deadline_violated(self) -> float:
+        if self.deadline_ms is None:
+            return 0.0
+        v = [r for r in self.records if r.actual_latency_ms > self.deadline_ms]
+        return len(v) / max(self.n, 1) * 100.0
+
+    @property
+    def avg_violation_ms(self) -> float:
+        if self.deadline_ms is None:
+            return 0.0
+        v = [r.actual_latency_ms - self.deadline_ms for r in self.records
+             if r.actual_latency_ms > self.deadline_ms]
+        return float(np.mean(v)) if v else 0.0
+
+    # ---------------------------------------------------- budget (min-lat)
+    @property
+    def pct_cost_violated(self) -> float:
+        v = [r for r in self.records
+             if np.isfinite(r.allowed_cost) and r.actual_cost > r.allowed_cost + 1e-15]
+        return len(v) / max(self.n, 1) * 100.0
+
+    @property
+    def pct_budget_used(self) -> float:
+        if self.c_max is None:
+            return 0.0
+        return self.total_actual_cost / max(self.c_max * self.n, 1e-12) * 100.0
+
+    @property
+    def n_warm_cold_mismatches(self) -> int:
+        return sum(1 for r in self.records if r.warm_cold_mismatch)
+
+    @property
+    def n_edge(self) -> int:
+        return sum(1 for r in self.records if r.target == self.edge_name)
+
+    def configs_used(self) -> set[str]:
+        return {r.target for r in self.records}

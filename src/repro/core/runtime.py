@@ -1,0 +1,251 @@
+"""The unified placement runtime: one serve loop, pluggable execution backends.
+
+The paper's framework is a single Decision Engine driving many execution
+substrates (Greengrass edge devices, Lambda configurations). This module makes
+that architecture literal:
+
+- ``ExecutionBackend`` is the substrate contract — ``execute(task, target,
+  now) -> ExecutionOutcome`` plus a non-mutating ``probe_cold`` — implemented
+  by ``TwinBackend`` (the AWS digital twin: event-driven simulation, paper
+  Sec. VI-A) here and by ``repro.serving.placement.LiveBackend`` (the real
+  executor pool, Sec. VI-B) on the serving side;
+- ``PlacementRuntime`` is the ONE serve loop shared by simulation and the live
+  prototype. It owns the *predicted* edge-queue horizon
+  (``PredictedEdgeQueue``), asks the Decision Engine for placements (batched
+  ``place_many`` by default, per-task ``step`` otherwise), executes them
+  through the backend, and merges hedged duplicates
+  (first-completion-wins, both billed);
+- policies are consumed only through the formal ``Policy`` protocol —
+  constraints for result reporting come from ``policy.constraints()``, hedges
+  from the ``hedge`` hook carried on the ``PlacementDecision``.
+
+Placement is non-blocking (paper Sec. III-A): decisions happen at ingestion
+time from *predicted* state only, so the decision loop factors cleanly out of
+execution — which is what lets ``serve`` run the vectorized batched path
+without changing any observable behavior.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Protocol, runtime_checkable
+
+import numpy as np
+
+from repro.core.apps import AWSTwin
+from repro.core.decision import DecisionEngine, PlacementDecision, PredictedEdgeQueue
+from repro.core.predictor import Prediction
+from repro.core.pricing import LambdaPricing
+from repro.core.records import SimulationResult, TaskRecord
+from repro.core.workload import TaskInput
+
+
+@dataclass(frozen=True)
+class ExecutionOutcome:
+    """What actually happened when a backend ran one task on one target."""
+
+    latency_ms: float    # end-to-end, including any actual queueing
+    cost: float          # billed $ for this execution
+    cold: bool           # did the substrate actually cold-start?
+    completion_ms: float  # absolute completion time on the arrival clock
+
+
+@runtime_checkable
+class ExecutionBackend(Protocol):
+    """An execution substrate: the AWS twin, a live executor pool, ..."""
+
+    def probe_cold(self, target: str, now: float) -> bool:
+        """Would a function *triggered* at ``now`` cold-start? (No mutation.)
+
+        ``now`` is the trigger time, not the task arrival time: on the twin,
+        the actual cold/warm outcome of a dispatch is judged after the upload
+        leg (``arrival + upld``), so pass that time to anticipate it. Not
+        consumed by the serve loop itself — exposed for external warm-state
+        introspection (dashboards, calibration probes).
+        """
+        ...
+
+    def execute(self, task: TaskInput, target: str, now: float) -> ExecutionOutcome:
+        """Run ``task`` on ``target``, mutating substrate state (queues, pools)."""
+        ...
+
+
+# ----------------------------------------------------------------- twin side
+@dataclass
+class GTContainer:
+    busy_until: float
+    last_completion: float
+    expires_at: float  # actual reclamation time, sampled per idle period
+
+
+class GroundTruthCloud:
+    """The provider's actual container state (what AWS really does)."""
+
+    def __init__(self, twin: AWSTwin, seed: int = 0):
+        self.twin = twin
+        self.rng = np.random.default_rng(seed)
+        self.pools: dict[str, list[GTContainer]] = {}
+
+    def probe(self, config: str, trigger_time: float) -> bool:
+        """Would a function triggered now cold-start? (No mutation.)"""
+        pool = self.pools.get(config, [])
+        idle = [c for c in pool if c.busy_until <= trigger_time and trigger_time <= c.expires_at]
+        return len(idle) == 0
+
+    def commit(self, config: str, trigger_time: float, busy_ms: float) -> bool:
+        """Trigger a function occupying a container for ``busy_ms``.
+        Returns True if this was an actual cold start."""
+        pool = self.pools.setdefault(config, [])
+        # reap actually-expired idle containers
+        pool[:] = [c for c in pool if c.busy_until > trigger_time or trigger_time <= c.expires_at]
+        idle = [c for c in pool if c.busy_until <= trigger_time and trigger_time <= c.expires_at]
+        completion = trigger_time + busy_ms
+        expiry = completion + self.twin.t_idl_ms(self.rng)
+        if idle:
+            c = max(idle, key=lambda c: c.last_completion)
+            c.busy_until = completion
+            c.last_completion = completion
+            c.expires_at = expiry
+            return False
+        pool.append(GTContainer(busy_until=completion, last_completion=completion,
+                                expires_at=expiry))
+        return True
+
+
+class TwinBackend:
+    """ExecutionBackend over the AWS digital twin (paper Sec. VI-A).
+
+    Actual latencies, billed costs, and warm/cold outcomes come from the
+    twin's generative ground truth: a stochastic-lifetime container pool per
+    configuration and a single-slot FIFO edge executor whose *actual* queueing
+    emerges from actual compute times.
+    """
+
+    def __init__(self, twin: AWSTwin, seed: int = 0,
+                 pricing: LambdaPricing | None = None, edge_name: str = "edge"):
+        self.twin = twin
+        self.pricing = pricing or LambdaPricing()
+        self.gt_cloud = GroundTruthCloud(twin, seed=seed)
+        self.rng = np.random.default_rng(seed + 7)
+        self.edge_name = edge_name
+        # edge executor state (single-slot FIFO)
+        self.edge_free_at_actual = 0.0
+
+    def probe_cold(self, target: str, now: float) -> bool:
+        return self.gt_cloud.probe(target, now)
+
+    def execute(self, task: TaskInput, target: str, now: float) -> ExecutionOutcome:
+        if target == self.edge_name:
+            return self._execute_edge(task, now)
+        return self._execute_cloud(task, target, now)
+
+    def _execute_cloud(self, task: TaskInput, config: str, now: float) -> ExecutionOutcome:
+        twin, rng = self.twin, self.rng
+        upld = twin.upld_ms(task.bytes, rng)
+        trigger = now + upld
+        cold = self.gt_cloud.probe(config, trigger)
+        start = twin.start_ms(cold, rng)
+        comp = twin.comp_cloud_ms(task.size, float(config), rng)
+        self.gt_cloud.commit(config, trigger, start + comp)
+        store = twin.store_cloud_ms(rng)
+        latency = upld + start + comp + store
+        return ExecutionOutcome(
+            latency_ms=latency,
+            cost=self.pricing.cost(comp, float(config)),
+            cold=cold,
+            completion_ms=now + latency,
+        )
+
+    def _execute_edge(self, task: TaskInput, now: float) -> ExecutionOutcome:
+        twin, rng = self.twin, self.rng
+        comp = twin.comp_edge_ms(task.size, rng)
+        start_exec = max(self.edge_free_at_actual, now)
+        self.edge_free_at_actual = start_exec + comp
+        iot = twin.iotup_ms(rng)
+        store = twin.store_edge_ms(rng)
+        latency = (start_exec - now) + comp + iot + store
+        return ExecutionOutcome(
+            latency_ms=latency, cost=0.0, cold=False, completion_ms=now + latency,
+        )
+
+
+# -------------------------------------------------------------- the runtime
+class PlacementRuntime:
+    """ONE serve loop over any (DecisionEngine, ExecutionBackend) pair.
+
+    ``Simulation`` (twin backend) and ``LivePlacementServer`` (live executor
+    pool) are thin wrappers over this class.
+    """
+
+    def __init__(self, engine: DecisionEngine, backend: ExecutionBackend):
+        self.engine = engine
+        self.backend = backend
+        self.edge_queue = PredictedEdgeQueue()
+
+    @property
+    def edge_name(self) -> str:
+        return self.engine.edge_name
+
+    def serve(self, tasks: list[TaskInput], batched: bool = True) -> SimulationResult:
+        """Place and execute a workload; aggregate the per-task records.
+
+        ``batched=True`` (default) runs all component-model predictions in one
+        vectorized pass (``DecisionEngine.place_many``); ``batched=False``
+        interleaves per-task placement and execution. The two paths make
+        identical decisions — placement is non-blocking, so execution never
+        feeds back into decision state.
+        """
+        if batched:
+            decisions = self.engine.place_many(tasks, edge_queue=self.edge_queue)
+            records = [self._run_decision(t, d) for t, d in zip(tasks, decisions)]
+        else:
+            records = [self.step(t) for t in tasks]
+        return self.result(records)
+
+    def step(self, task: TaskInput) -> TaskRecord:
+        """Place and execute one task (the per-task serve path)."""
+        now = task.arrival_ms
+        d = self.engine.place(task, now,
+                              edge_queue_wait_ms=self.edge_queue.wait_ms(now))
+        if d.target == self.edge_name:
+            self.edge_queue.push(now, d.prediction.comp_ms)
+        if d.hedge_target == self.edge_name and d.hedge_prediction is not None:
+            self.edge_queue.push(now, d.hedge_prediction.comp_ms)
+        return self._run_decision(task, d)
+
+    def result(self, records: list[TaskRecord]) -> SimulationResult:
+        cons = self.engine.policy.constraints()
+        return SimulationResult(records=records, deadline_ms=cons.deadline_ms,
+                                c_max=cons.c_max, edge_name=self.edge_name)
+
+    # ------------------------------------------------------------------
+    def _run_decision(self, task: TaskInput, d: PlacementDecision) -> TaskRecord:
+        now = task.arrival_ms
+        rec = self._record(task, d, d.target, d.prediction,
+                           self.backend.execute(task, d.target, now))
+        # Hedged duplicate (beyond-paper): first completion wins, both billed.
+        if d.hedge_target is not None and d.hedge_target != d.target:
+            backup = d.hedge_prediction
+            dup = self.backend.execute(task, d.hedge_target, now)
+            rec = TaskRecord(
+                task=task, target=rec.target,
+                predicted_latency_ms=min(rec.predicted_latency_ms, backup.latency_ms),
+                predicted_cost=rec.predicted_cost + backup.cost,
+                actual_latency_ms=min(rec.actual_latency_ms, dup.latency_ms),
+                actual_cost=rec.actual_cost + dup.cost,
+                predicted_cold=rec.predicted_cold, actual_cold=rec.actual_cold,
+                allowed_cost=rec.allowed_cost, feasible=rec.feasible,
+                completion_ms=min(rec.completion_ms, dup.completion_ms), hedged=True,
+            )
+        return rec
+
+    def _record(self, task: TaskInput, d: PlacementDecision, target: str,
+                pred: Prediction, out: ExecutionOutcome) -> TaskRecord:
+        return TaskRecord(
+            task=task, target=target,
+            predicted_latency_ms=pred.latency_ms, predicted_cost=pred.cost,
+            actual_latency_ms=out.latency_ms, actual_cost=out.cost,
+            predicted_cold=pred.cold, actual_cold=out.cold,
+            allowed_cost=d.allowed_cost, feasible=d.feasible,
+            completion_ms=out.completion_ms,
+        )

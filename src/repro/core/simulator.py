@@ -1,270 +1,52 @@
 """Event-driven simulation of the placement framework (paper Sec. VI-A).
 
-The simulation feeds a Poisson workload into the Decision Engine. Predictions
-come from the fitted models (the framework's view); *actual* execution
-latencies, billed costs, and container warm/cold outcomes come from the AWS
-digital twin (the provider's ground truth), including:
+Deprecated thin wrapper: the simulation loop now lives in
+``repro.core.runtime`` — ``PlacementRuntime`` over a ``TwinBackend`` is the
+same serve loop that drives the live prototype. ``Simulation`` is kept so
+existing call sites (``Simulation(twin, engine, seed).run(tasks)``) keep
+working; new code should construct the runtime directly:
 
-- a ground-truth container pool per configuration with stochastic per-container
-  idle lifetimes — so the Predictor's CIL can mispredict warm/cold starts,
-  which is one of the paper's reported metrics;
-- a single-slot FIFO edge executor (Greengrass long-lived function model):
-  actual queueing delays emerge from actual compute times, while the Decision
-  Engine only sees *predicted* queue state.
+    runtime = PlacementRuntime(engine, TwinBackend(twin, seed=seed))
+    result = runtime.serve(tasks)
 
-The Decision Engine is non-blocking (paper Sec. III-A): placement happens at
-ingestion time; execution proceeds asynchronously.
+``TaskRecord``/``SimulationResult`` moved to ``repro.core.records`` and
+``GroundTruthCloud`` to ``repro.core.runtime``; both are re-exported here for
+backward compatibility.
 """
 
 from __future__ import annotations
 
-from dataclasses import dataclass
-
-import numpy as np
-
-from repro.core.apps import AWSTwin
 from repro.core.decision import DecisionEngine
+from repro.core.apps import AWSTwin
 from repro.core.pricing import LambdaPricing
+from repro.core.records import SimulationResult, TaskRecord
+from repro.core.runtime import GroundTruthCloud, GTContainer, PlacementRuntime, TwinBackend
 from repro.core.workload import TaskInput
 
-
-@dataclass
-class GTContainer:
-    busy_until: float
-    last_completion: float
-    expires_at: float  # actual reclamation time, sampled per idle period
-
-
-class GroundTruthCloud:
-    """The provider's actual container state (what AWS really does)."""
-
-    def __init__(self, twin: AWSTwin, seed: int = 0):
-        self.twin = twin
-        self.rng = np.random.default_rng(seed)
-        self.pools: dict[str, list[GTContainer]] = {}
-
-    def probe(self, config: str, trigger_time: float) -> bool:
-        """Would a function triggered now cold-start? (No mutation.)"""
-        pool = self.pools.get(config, [])
-        idle = [c for c in pool if c.busy_until <= trigger_time and trigger_time <= c.expires_at]
-        return len(idle) == 0
-
-    def commit(self, config: str, trigger_time: float, busy_ms: float) -> bool:
-        """Trigger a function occupying a container for ``busy_ms``.
-        Returns True if this was an actual cold start."""
-        pool = self.pools.setdefault(config, [])
-        # reap actually-expired idle containers
-        pool[:] = [c for c in pool if c.busy_until > trigger_time or trigger_time <= c.expires_at]
-        idle = [c for c in pool if c.busy_until <= trigger_time and trigger_time <= c.expires_at]
-        completion = trigger_time + busy_ms
-        expiry = completion + self.twin.t_idl_ms(self.rng)
-        if idle:
-            c = max(idle, key=lambda c: c.last_completion)
-            c.busy_until = completion
-            c.last_completion = completion
-            c.expires_at = expiry
-            return False
-        pool.append(GTContainer(busy_until=completion, last_completion=completion,
-                                expires_at=expiry))
-        return True
-
-
-@dataclass
-class TaskRecord:
-    task: TaskInput
-    target: str
-    predicted_latency_ms: float
-    predicted_cost: float
-    actual_latency_ms: float
-    actual_cost: float
-    predicted_cold: bool
-    actual_cold: bool
-    allowed_cost: float
-    feasible: bool
-    completion_ms: float
-    hedged: bool = False
-
-    @property
-    def warm_cold_mismatch(self) -> bool:
-        return self.target != "edge" and self.predicted_cold != self.actual_cold
-
-
-@dataclass
-class SimulationResult:
-    records: list[TaskRecord]
-    deadline_ms: float | None = None
-    c_max: float | None = None
-
-    # ------------------------------------------------------------- totals
-    @property
-    def n(self) -> int:
-        return len(self.records)
-
-    @property
-    def total_actual_cost(self) -> float:
-        return sum(r.actual_cost for r in self.records)
-
-    @property
-    def total_predicted_cost(self) -> float:
-        return sum(r.predicted_cost for r in self.records)
-
-    @property
-    def cost_error_pct(self) -> float:
-        a = self.total_actual_cost
-        return abs(self.total_predicted_cost - a) / max(a, 1e-12) * 100.0
-
-    @property
-    def avg_actual_latency_ms(self) -> float:
-        return float(np.mean([r.actual_latency_ms for r in self.records]))
-
-    @property
-    def avg_predicted_latency_ms(self) -> float:
-        return float(np.mean([r.predicted_latency_ms for r in self.records]))
-
-    @property
-    def latency_error_pct(self) -> float:
-        a = self.avg_actual_latency_ms
-        return abs(self.avg_predicted_latency_ms - a) / max(a, 1e-9) * 100.0
-
-    @property
-    def p95_actual_latency_ms(self) -> float:
-        return float(np.percentile([r.actual_latency_ms for r in self.records], 95))
-
-    @property
-    def p99_actual_latency_ms(self) -> float:
-        return float(np.percentile([r.actual_latency_ms for r in self.records], 99))
-
-    # ------------------------------------------------- deadline (min-cost)
-    @property
-    def pct_deadline_violated(self) -> float:
-        if self.deadline_ms is None:
-            return 0.0
-        v = [r for r in self.records if r.actual_latency_ms > self.deadline_ms]
-        return len(v) / max(self.n, 1) * 100.0
-
-    @property
-    def avg_violation_ms(self) -> float:
-        if self.deadline_ms is None:
-            return 0.0
-        v = [r.actual_latency_ms - self.deadline_ms for r in self.records
-             if r.actual_latency_ms > self.deadline_ms]
-        return float(np.mean(v)) if v else 0.0
-
-    # ---------------------------------------------------- budget (min-lat)
-    @property
-    def pct_cost_violated(self) -> float:
-        v = [r for r in self.records
-             if np.isfinite(r.allowed_cost) and r.actual_cost > r.allowed_cost + 1e-15]
-        return len(v) / max(self.n, 1) * 100.0
-
-    @property
-    def pct_budget_used(self) -> float:
-        if self.c_max is None:
-            return 0.0
-        return self.total_actual_cost / max(self.c_max * self.n, 1e-12) * 100.0
-
-    @property
-    def n_warm_cold_mismatches(self) -> int:
-        return sum(1 for r in self.records if r.warm_cold_mismatch)
-
-    @property
-    def n_edge(self) -> int:
-        return sum(1 for r in self.records if r.target == "edge")
-
-    def configs_used(self) -> set[str]:
-        return {r.target for r in self.records}
+__all__ = [
+    "GTContainer",
+    "GroundTruthCloud",
+    "Simulation",
+    "SimulationResult",
+    "TaskRecord",
+]
 
 
 class Simulation:
-    """Drives one workload through the Decision Engine against the twin."""
+    """Drives one workload through the Decision Engine against the twin.
+
+    Deprecated: thin wrapper over ``PlacementRuntime`` + ``TwinBackend``.
+    """
 
     def __init__(self, twin: AWSTwin, engine: DecisionEngine, seed: int = 0,
                  pricing: LambdaPricing | None = None):
         self.twin = twin
         self.engine = engine
-        self.pricing = pricing or LambdaPricing()
-        self.gt_cloud = GroundTruthCloud(twin, seed=seed)
-        self.rng = np.random.default_rng(seed + 7)
-        # edge executor state (single-slot FIFO)
-        self.edge_free_at_actual = 0.0
-        self.edge_free_at_predicted = 0.0
+        self.backend = TwinBackend(twin, seed=seed, pricing=pricing,
+                                   edge_name=engine.edge_name)
+        self.runtime = PlacementRuntime(engine=engine, backend=self.backend)
+        self.gt_cloud = self.backend.gt_cloud  # back-compat alias
+        self.pricing = self.backend.pricing
 
-    def run(self, tasks: list[TaskInput]) -> SimulationResult:
-        records = [self._process(t) for t in tasks]
-        policy = self.engine.policy
-        deadline = getattr(policy, "deadline_ms", None)
-        c_max = getattr(policy, "c_max", None)
-        if c_max is None:
-            c_max = getattr(getattr(policy, "inner", None), "c_max", None)
-        return SimulationResult(records=records, deadline_ms=deadline, c_max=c_max)
-
-    # ------------------------------------------------------------------
-    def _process(self, task: TaskInput) -> TaskRecord:
-        now = task.arrival_ms
-        pred_wait = max(self.edge_free_at_predicted - now, 0.0)
-        decision = self.engine.place(task, now, edge_queue_wait_ms=pred_wait)
-        hedge = getattr(self.engine.policy, "last_hedge", None)
-
-        if decision.target == "edge":
-            rec = self._execute_edge(task, decision.prediction, decision, now)
-        else:
-            rec = self._execute_cloud(task, decision.prediction, decision, now, decision.target)
-
-        # Hedged duplicate (beyond-paper): first completion wins, both billed.
-        if hedge is not None and decision.target != hedge[0]:
-            backup_name, backup_pred = hedge
-            if backup_name == "edge":
-                dup = self._execute_edge(task, backup_pred, decision, now)
-            else:
-                dup = self._execute_cloud(task, backup_pred, decision, now, backup_name)
-            rec = TaskRecord(
-                task=task, target=rec.target,
-                predicted_latency_ms=min(rec.predicted_latency_ms, backup_pred.latency_ms),
-                predicted_cost=rec.predicted_cost + backup_pred.cost,
-                actual_latency_ms=min(rec.actual_latency_ms, dup.actual_latency_ms),
-                actual_cost=rec.actual_cost + dup.actual_cost,
-                predicted_cold=rec.predicted_cold, actual_cold=rec.actual_cold,
-                allowed_cost=rec.allowed_cost, feasible=rec.feasible,
-                completion_ms=min(rec.completion_ms, dup.completion_ms), hedged=True,
-            )
-        return rec
-
-    def _execute_cloud(self, task, pred, decision, now, config) -> TaskRecord:
-        twin, rng = self.twin, self.rng
-        upld = twin.upld_ms(task.bytes, rng)
-        trigger = now + upld
-        cold = self.gt_cloud.probe(config, trigger)
-        start = twin.start_ms(cold, rng)
-        comp = twin.comp_cloud_ms(task.size, float(config), rng)
-        self.gt_cloud.commit(config, trigger, start + comp)
-        store = twin.store_cloud_ms(rng)
-        latency = upld + start + comp + store
-        cost = self.pricing.cost(comp, float(config))
-        return TaskRecord(
-            task=task, target=config,
-            predicted_latency_ms=pred.latency_ms, predicted_cost=pred.cost,
-            actual_latency_ms=latency, actual_cost=cost,
-            predicted_cold=pred.cold, actual_cold=cold,
-            allowed_cost=decision.allowed_cost, feasible=decision.feasible,
-            completion_ms=now + latency,
-        )
-
-    def _execute_edge(self, task, pred, decision, now) -> TaskRecord:
-        twin, rng = self.twin, self.rng
-        comp = twin.comp_edge_ms(task.size, rng)
-        start_exec = max(self.edge_free_at_actual, now)
-        self.edge_free_at_actual = start_exec + comp
-        # advance the *predicted* queue horizon with the predicted comp time
-        pred_comp = pred.components.get("comp", comp)
-        self.edge_free_at_predicted = max(self.edge_free_at_predicted, now) + pred_comp
-        iot = twin.iotup_ms(rng)
-        store = twin.store_edge_ms(rng)
-        latency = (start_exec - now) + comp + iot + store
-        return TaskRecord(
-            task=task, target="edge",
-            predicted_latency_ms=pred.latency_ms, predicted_cost=pred.cost,
-            actual_latency_ms=latency, actual_cost=0.0,
-            predicted_cold=False, actual_cold=False,
-            allowed_cost=decision.allowed_cost, feasible=decision.feasible,
-            completion_ms=now + latency,
-        )
+    def run(self, tasks: list[TaskInput], batched: bool = True) -> SimulationResult:
+        return self.runtime.serve(tasks, batched=batched)

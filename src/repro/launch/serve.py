@@ -18,9 +18,9 @@ from repro.configs import smoke_config
 from repro.core.decision import HedgedPolicy, MinCostPolicy, MinLatencyPolicy
 from repro.serving.executors import SliceSpec
 from repro.serving.placement import (
-    LivePlacementServer,
     calibrate_catalog,
     llm_workload,
+    make_live_runtime,
 )
 
 
@@ -61,9 +61,9 @@ def main() -> int:
 
     tasks = llm_workload(args.n, rate_per_s=args.rate, seed=args.seed + 1,
                          mean_tokens=args.mean_tokens)
-    server = LivePlacementServer(cat, policy, t_idl_ms=args.t_idl_s * 1e3,
-                                 quantile=args.quantile)
-    res = server.serve(tasks)
+    runtime = make_live_runtime(cat, policy, t_idl_ms=args.t_idl_s * 1e3,
+                                quantile=args.quantile)
+    res = runtime.serve(tasks)
 
     print(f"\nserved n={res.n}")
     print(f"  avg actual latency   : {res.avg_actual_latency_ms:.1f} ms "

@@ -5,8 +5,11 @@
                 compiled-executable caching (cold start = real XLA compile),
                 plus the always-on edge executor with a FIFO queue.
 ``placement`` — the paper's framework instantiated over the slice catalog:
-                SliceTarget performance models, calibration (fit), and the
-                LivePlacementServer used by the Table-V-analog benchmark.
+                SliceTarget performance models, calibration (fit), the
+                ``LiveBackend`` execution backend, and ``make_live_runtime``
+                which wires it all into the unified
+                ``repro.core.runtime.PlacementRuntime`` serve loop (the
+                Table-V-analog benchmark path).
 """
 
 from repro.serving.engine import make_decode_step, make_prefill_step, generate
@@ -17,12 +20,15 @@ from repro.serving.placement import (
     calibrate_catalog,
     build_slice_predictor,
     llm_workload,
+    LiveBackend,
     LivePlacementServer,
+    make_live_runtime,
 )
 
 __all__ = [
     "make_decode_step", "make_prefill_step", "generate",
     "SliceSpec", "LiveExecutor", "ExecutorPool",
     "SliceTarget", "SliceCatalog", "calibrate_catalog",
-    "build_slice_predictor", "llm_workload", "LivePlacementServer",
+    "build_slice_predictor", "llm_workload", "LiveBackend",
+    "LivePlacementServer", "make_live_runtime",
 ]

@@ -8,10 +8,16 @@ the same Predictor / CIL / Decision Engine — ``repro.core`` is target-agnostic
   executions: warm runs per (task, slice config) for the comp GBRT, a few real
   compile cycles per config for the cold-start model, feed/store samples;
 - ``SliceTarget`` predicts the end-to-end latency components
-  (feed → start → comp → store) and slice-seconds cost;
-- ``LivePlacementServer`` is the live prototype (paper Sec. VI-B analog):
-  placement decisions against predictions, execution against the real
-  executor pool, one TaskRecord per request — Table V falls out.
+  (feed → start → comp → store) and slice-seconds cost, per task or in one
+  vectorized pass over a whole batch (``predict_components_batch``);
+- ``LiveBackend`` implements the ``repro.core.runtime.ExecutionBackend``
+  contract over the real executor pool: ``execute(task, target, now)`` runs a
+  genuine compiled execution and bills slice-seconds; ``probe_cold`` asks the
+  pool whether a dispatch would pay a real XLA compile;
+- ``make_live_runtime`` wires catalog → predictor → Decision Engine →
+  ``PlacementRuntime`` over a ``LiveBackend``: the SAME serve loop as the
+  simulator, against real executions (paper Sec. VI-B analog — Table V falls
+  out). ``LivePlacementServer`` is the deprecated thin wrapper around it.
 """
 
 from __future__ import annotations
@@ -21,12 +27,18 @@ from dataclasses import dataclass, field
 import numpy as np
 
 from repro.core.cil import ContainerInfoList
-from repro.core.decision import DecisionEngine
+from repro.core.decision import DecisionEngine, Policy
 from repro.core.gbrt import GBRT, GBRTConfig
 from repro.core.perf_models import NormalModel, RidgeModel, _norm_ppf
-from repro.core.predictor import EDGE, Prediction, Predictor
+from repro.core.predictor import (
+    EDGE,
+    Predictor,
+    cloud_components_batch,
+    edge_components_batch,
+)
 from repro.core.pricing import SlicePricing
-from repro.core.simulator import SimulationResult, TaskRecord
+from repro.core.records import SimulationResult, TaskRecord  # noqa: F401 — re-export
+from repro.core.runtime import ExecutionOutcome, PlacementRuntime
 from repro.core.workload import PoissonWorkload, TaskInput
 from repro.serving.executors import ExecutorPool, LiveExecutor, SliceSpec, make_pool
 
@@ -70,8 +82,20 @@ class SliceTarget:
             "store": max(store_ms, 0.0),
         }
 
+    def predict_components_batch(self, sizes: np.ndarray, nbytes: np.ndarray,
+                                 quantile: float | None = None) -> tuple[dict, dict]:
+        return cloud_components_batch(
+            sizes, nbytes, comp_feature=float(self.chips),
+            comp_model=self.comp_model, upld_model=self.feed_model,
+            start_warm=self.start_warm, start_cold=self.start_cold,
+            store_model=self.store_model, comp_std_frac=self.comp_std_frac,
+            quantile=quantile)
+
     def cost(self, comp_ms: float) -> float:
         return self.pricing.cost(comp_ms, self.chips)
+
+    def cost_batch(self, comp_ms: np.ndarray) -> np.ndarray:
+        return self.pricing.cost_batch(comp_ms, self.chips)
 
     def occupancy_ms(self, components: dict[str, float]) -> float:
         return components["upld"] + components["start"] + components["comp"]
@@ -98,8 +122,17 @@ class EdgeSliceTarget:
             store = self.store_model.predict()
         return {"comp": max(comp, 0.0), "iotup": 0.0, "store": max(store, 0.0)}
 
+    def predict_components_batch(self, sizes: np.ndarray, nbytes: np.ndarray,
+                                 quantile: float | None = None) -> tuple[dict, None]:
+        return edge_components_batch(
+            sizes, comp_model=self.comp_model, store_model=self.store_model,
+            comp_std_frac=self.comp_std_frac, quantile=quantile)
+
     def cost(self, comp_ms: float) -> float:  # noqa: ARG002
         return 0.0  # amortized to zero, paper Sec. II-A.2b
+
+    def cost_batch(self, comp_ms: np.ndarray) -> np.ndarray:
+        return np.zeros(np.asarray(comp_ms).shape[0], dtype=np.float64)
 
     def occupancy_ms(self, components: dict[str, float]) -> float:
         return components["comp"]
@@ -235,58 +268,66 @@ def build_slice_predictor(cat: SliceCatalog, t_idl_ms: float = 120_000.0,
                      quantile=quantile)
 
 
+# ------------------------------------------------------------- live backend
+class LiveBackend:
+    """ExecutionBackend over the real executor pool (paper Sec. VI-B analog).
+
+    Every ``execute`` runs genuine compiled steps: cloud dispatches bill
+    slice-seconds and may pay a real XLA compile (cold start); edge dispatches
+    are free and queue on the single-slot FIFO edge executor.
+    """
+
+    def __init__(self, pool: ExecutorPool, pricing: SlicePricing,
+                 edge_name: str = EDGE):
+        self.pool = pool
+        self.pricing = pricing
+        self.edge_name = edge_name
+
+    def probe_cold(self, target: str, now: float) -> bool:
+        return self.pool.probe_cold(target, now)
+
+    def execute(self, task: TaskInput, target: str, now: float) -> ExecutionOutcome:
+        if target == self.edge_name:
+            rec = self.pool.execute_edge(int(task.size), task.bytes, now)
+            return ExecutionOutcome(latency_ms=rec.total_ms, cost=0.0,
+                                    cold=False, completion_ms=now + rec.total_ms)
+        cold = self.pool.probe_cold(target, now)
+        rec = self.pool.execute_cloud(target, int(task.size), task.bytes, now)
+        chips = self.pool.specs[target].chips
+        return ExecutionOutcome(latency_ms=rec.total_ms,
+                                cost=self.pricing.cost(rec.comp_ms, chips),
+                                cold=cold, completion_ms=now + rec.total_ms)
+
+
+def make_live_runtime(cat: SliceCatalog, policy: Policy,
+                      t_idl_ms: float = 120_000.0,
+                      quantile: float | None = None) -> PlacementRuntime:
+    """Wire a calibrated catalog into the unified serve loop: catalog →
+    Predictor → DecisionEngine → ``PlacementRuntime`` over a ``LiveBackend``."""
+    pool = make_pool(cat.model_cfg, [s for s in cat.specs if not s.is_edge],
+                     t_idl_ms=t_idl_ms, edge_spec=EDGE_SPEC)
+    predictor = build_slice_predictor(cat, t_idl_ms=t_idl_ms, quantile=quantile)
+    engine = DecisionEngine(predictor=predictor, policy=policy, edge_name=EDGE)
+    return PlacementRuntime(engine=engine, backend=LiveBackend(pool, cat.pricing))
+
+
 # --------------------------------------------------------------- live server
 class LivePlacementServer:
-    """The live prototype: real placement over real executions (Table V)."""
+    """The live prototype: real placement over real executions (Table V).
 
-    def __init__(self, cat: SliceCatalog, policy, t_idl_ms: float = 120_000.0,
-                 quantile: float | None = None):
+    Deprecated: thin wrapper over ``make_live_runtime`` — the serve loop is
+    ``repro.core.runtime.PlacementRuntime``, shared with the simulator.
+    """
+
+    def __init__(self, cat: SliceCatalog, policy: Policy,
+                 t_idl_ms: float = 120_000.0, quantile: float | None = None):
         self.cat = cat
-        self.pool = make_pool(cat.model_cfg,
-                              [s for s in cat.specs if not s.is_edge],
-                              t_idl_ms=t_idl_ms, edge_spec=EDGE_SPEC)
-        self.predictor = build_slice_predictor(cat, t_idl_ms=t_idl_ms,
-                                               quantile=quantile)
-        self.engine = DecisionEngine(predictor=self.predictor, policy=policy)
-        self.edge_free_at_predicted = 0.0
+        self.runtime = make_live_runtime(cat, policy, t_idl_ms=t_idl_ms,
+                                         quantile=quantile)
+        # back-compat aliases
+        self.pool = self.runtime.backend.pool
+        self.predictor = self.runtime.engine.predictor
+        self.engine = self.runtime.engine
 
-    def serve(self, tasks: list[TaskInput]) -> SimulationResult:
-        records = []
-        for task in tasks:
-            records.append(self._serve_one(task))
-        policy = self.engine.policy
-        deadline = getattr(policy, "deadline_ms", None)
-        c_max = getattr(policy, "c_max", None)
-        if c_max is None:
-            c_max = getattr(getattr(policy, "inner", None), "c_max", None)
-        return SimulationResult(records=records, deadline_ms=deadline, c_max=c_max)
-
-    def _serve_one(self, task: TaskInput) -> TaskRecord:
-        now = task.arrival_ms
-        pred_wait = max(self.edge_free_at_predicted - now, 0.0)
-        decision = self.engine.place(task, now, edge_queue_wait_ms=pred_wait)
-        pred: Prediction = decision.prediction
-
-        if decision.target == EDGE:
-            rec = self.pool.execute_edge(int(task.size), task.bytes, now)
-            self.edge_free_at_predicted = (
-                max(self.edge_free_at_predicted, now) + pred.comp_ms)
-            actual_cost = 0.0
-            actual_cold = False
-        else:
-            actual_cold = self.pool.probe_cold(decision.target, now)
-            rec = self.pool.execute_cloud(decision.target, int(task.size),
-                                          task.bytes, now)
-            chips = self.pool.specs[decision.target].chips
-            actual_cost = self.cat.pricing.cost(rec.comp_ms, chips)
-
-        return TaskRecord(
-            task=task, target=decision.target,
-            predicted_latency_ms=pred.latency_ms,
-            predicted_cost=pred.cost,
-            actual_latency_ms=rec.total_ms,
-            actual_cost=actual_cost,
-            predicted_cold=pred.cold, actual_cold=actual_cold,
-            allowed_cost=decision.allowed_cost, feasible=decision.feasible,
-            completion_ms=now + rec.total_ms,
-        )
+    def serve(self, tasks: list[TaskInput], batched: bool = True) -> SimulationResult:
+        return self.runtime.serve(tasks, batched=batched)

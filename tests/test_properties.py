@@ -3,7 +3,10 @@
 from __future__ import annotations
 
 import numpy as np
-from hypothesis import given, settings, strategies as st
+import pytest
+
+pytest.importorskip("hypothesis")
+from hypothesis import given, settings, strategies as st  # noqa: E402
 
 from repro.core.cil import ContainerInfoList
 from repro.core.decision import MinCostPolicy, MinLatencyPolicy

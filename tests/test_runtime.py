@@ -1,0 +1,280 @@
+"""The unified placement runtime (ISSUE 1): backend/policy/batch contracts.
+
+Covers:
+- ``Predictor.predict_batch``/``predict_at`` parity with per-task ``predict``;
+- ``DecisionEngine.place_many`` parity with a ``place()`` loop;
+- ``PlacementRuntime`` batched vs step-wise equivalence, and the ``Simulation``
+  shim being a faithful thin wrapper;
+- the formal ``Policy`` protocol (``constraints()``, engine validation);
+- ``HedgedPolicy`` budget accounting: the hedge draws down surplus, surplus
+  never underflows, and hedged duplicates show up in the cost metrics.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+import pytest
+
+from repro.core.decision import (
+    DecisionEngine,
+    HedgedPolicy,
+    MinCostPolicy,
+    MinLatencyPolicy,
+    PolicyConstraints,
+    PredictedEdgeQueue,
+)
+from repro.core.fit import build_predictor, fit_app
+from repro.core.predictor import Prediction
+from repro.core.runtime import PlacementRuntime, TwinBackend
+from repro.core.simulator import Simulation
+
+CONFIGS = (1280, 1536, 1792)
+N_TASKS = 150
+
+
+@pytest.fixture(scope="module")
+def fd_setup():
+    return fit_app("FD", seed=0, n_inputs=120, configs=CONFIGS)
+
+
+# ------------------------------------------------------------ batched predict
+@pytest.mark.parametrize("quantile", [None, 0.95])
+def test_predict_batch_matches_per_task(fd_setup, quantile):
+    """predict_at(batch, i) must equal predict(task) — including after CIL
+    state makes some targets warm and some cold."""
+    twin, models = fd_setup
+    tasks = twin.workload(40, seed=1)
+
+    pred_a = build_predictor(models, configs=CONFIGS, quantile=quantile)
+    pred_b = build_predictor(models, configs=CONFIGS, quantile=quantile)
+    batch = pred_b.predict_batch(tasks)
+
+    for i, task in enumerate(tasks):
+        now = task.arrival_ms
+        per = pred_a.predict(task, now, edge_queue_wait_ms=12.5)
+        bat = pred_b.predict_at(batch, i, now, edge_queue_wait_ms=12.5)
+        assert per.keys() == bat.keys()
+        for name in per:
+            assert per[name].cold == bat[name].cold
+            np.testing.assert_allclose(bat[name].latency_ms, per[name].latency_ms,
+                                       rtol=1e-12)
+            np.testing.assert_allclose(bat[name].cost, per[name].cost, rtol=1e-12)
+            assert per[name].components.keys() == bat[name].components.keys()
+        # dispatch to a config on both predictors: later tasks see it warm
+        if i % 3 == 0:
+            chosen = str(CONFIGS[0])
+            pred_a.update_cil(chosen, now, per[chosen])
+            pred_b.update_cil(chosen, now, bat[chosen])
+
+
+def test_place_many_matches_place_loop(fd_setup):
+    twin, models = fd_setup
+    tasks = twin.workload(N_TASKS, seed=2)
+
+    eng_loop = DecisionEngine(predictor=build_predictor(models, configs=CONFIGS),
+                              policy=MinLatencyPolicy(c_max=2.97e-5, alpha=0.02))
+    queue = PredictedEdgeQueue()
+    for t in tasks:
+        d = eng_loop.place(t, t.arrival_ms,
+                           edge_queue_wait_ms=queue.wait_ms(t.arrival_ms))
+        if d.target == eng_loop.edge_name:
+            queue.push(t.arrival_ms, d.prediction.comp_ms)
+
+    eng_batch = DecisionEngine(predictor=build_predictor(models, configs=CONFIGS),
+                               policy=MinLatencyPolicy(c_max=2.97e-5, alpha=0.02))
+    decisions = eng_batch.place_many(tasks)
+
+    assert [d.target for d in decisions] == [d.target for d in eng_loop.decisions]
+    for a, b in zip(decisions, eng_loop.decisions):
+        np.testing.assert_allclose(a.prediction.latency_ms, b.prediction.latency_ms,
+                                   rtol=1e-12)
+        np.testing.assert_allclose(a.allowed_cost, b.allowed_cost, rtol=1e-12)
+        assert a.prediction.cold == b.prediction.cold
+
+
+def test_empty_workload_serves_cleanly(fd_setup):
+    twin, models = fd_setup
+    eng = DecisionEngine(predictor=build_predictor(models, configs=CONFIGS),
+                         policy=MinLatencyPolicy(c_max=2.97e-5, alpha=0.02))
+    res = PlacementRuntime(eng, TwinBackend(twin, seed=0)).serve([])
+    assert res.n == 0 and res.c_max == 2.97e-5
+
+
+# -------------------------------------------------------------- unified loop
+def test_runtime_batched_equals_stepwise(fd_setup):
+    twin, models = fd_setup
+    tasks = twin.workload(N_TASKS, seed=3)
+
+    def run(batched):
+        eng = DecisionEngine(predictor=build_predictor(models, configs=CONFIGS),
+                             policy=MinLatencyPolicy(c_max=2.97e-5, alpha=0.02))
+        rt = PlacementRuntime(eng, TwinBackend(twin, seed=11))
+        return rt.serve(tasks, batched=batched)
+
+    a, b = run(True), run(False)
+    assert [r.target for r in a.records] == [r.target for r in b.records]
+    assert a.total_actual_cost == b.total_actual_cost
+    assert a.avg_actual_latency_ms == b.avg_actual_latency_ms
+
+
+def test_simulation_shim_is_thin_wrapper(fd_setup):
+    """Simulation(...).run must equal driving PlacementRuntime directly."""
+    twin, models = fd_setup
+    tasks = twin.workload(80, seed=4)
+
+    eng1 = DecisionEngine(predictor=build_predictor(models, configs=CONFIGS),
+                          policy=MinCostPolicy(deadline_ms=4500.0))
+    res1 = Simulation(twin, eng1, seed=13).run(tasks)
+
+    eng2 = DecisionEngine(predictor=build_predictor(models, configs=CONFIGS),
+                          policy=MinCostPolicy(deadline_ms=4500.0))
+    res2 = PlacementRuntime(eng2, TwinBackend(twin, seed=13)).serve(tasks)
+
+    assert [r.target for r in res1.records] == [r.target for r in res2.records]
+    assert res1.total_actual_cost == res2.total_actual_cost
+    assert res1.deadline_ms == 4500.0 and res2.deadline_ms == 4500.0
+
+
+# ------------------------------------------------------------ Policy protocol
+def test_policy_constraints_accessors():
+    assert MinCostPolicy(4500.0).constraints() == PolicyConstraints(deadline_ms=4500.0)
+    assert MinLatencyPolicy(2e-5, 0.1).constraints() == PolicyConstraints(c_max=2e-5)
+    hedged = HedgedPolicy(MinLatencyPolicy(2e-5, 0.1), hedge_threshold_ms=100.0)
+    assert hedged.constraints() == PolicyConstraints(c_max=2e-5)  # composition-safe
+
+
+def test_engine_rejects_non_policy(fd_setup):
+    _, models = fd_setup
+
+    class NotAPolicy:
+        pass
+
+    with pytest.raises(TypeError, match="Policy"):
+        DecisionEngine(predictor=build_predictor(models, configs=CONFIGS),
+                       policy=NotAPolicy())
+
+
+# ------------------------------------------------- hedged budget accounting
+def _preds(entries):
+    return {
+        name: Prediction(target=name, latency_ms=lat, cost=cost, cold=False,
+                         components={"comp": lat})
+        for name, lat, cost in entries
+    }
+
+
+def test_hedged_surplus_never_underflows_and_trails_baseline():
+    """The hedge's cost draws down the surplus bank; the bank must stay ≥ 0 at
+    every step (any α — a hedge only ever spends the *remaining* allowance),
+    and with α=0 (identical choices) it can never exceed the non-hedged bank."""
+    rng = np.random.default_rng(0)
+    base0 = MinLatencyPolicy(c_max=2.0, alpha=0.0)
+    hedged0 = HedgedPolicy(MinLatencyPolicy(c_max=2.0, alpha=0.0),
+                           hedge_threshold_ms=50.0)
+    hedged_bank = HedgedPolicy(MinLatencyPolicy(c_max=2.0, alpha=0.5),
+                               hedge_threshold_ms=50.0)
+    n_hedges = 0
+    for _ in range(200):
+        entries = [(f"c{i}", float(rng.uniform(10, 200)), float(rng.uniform(0, 4)))
+                   for i in range(4)]
+        preds = _preds(entries + [("edge", 500.0, 0.0)])
+        for policy in (base0, hedged0, hedged_bank):
+            name, _, _ = policy.choose(preds)
+            policy.observe(preds[name])
+        n_hedges += hedged0.last_hedge is not None
+        assert hedged0.surplus >= -1e-12
+        assert hedged_bank.surplus >= -1e-12
+        assert hedged0.surplus <= base0.surplus + 1e-12
+    assert n_hedges > 0, "scenario must actually trigger hedges"
+
+
+class _StubTarget:
+    def __init__(self, name, latency, cost, is_edge=False):
+        self.name = name
+        self.is_edge = is_edge
+        self._lat, self._cost = latency, cost
+
+    def predict_components(self, task, cold=False, quantile=None):
+        return {"comp": self._lat}
+
+    def cost(self, comp_ms):
+        return self._cost
+
+    def occupancy_ms(self, components):
+        return components["comp"]
+
+
+class _StubBackend:
+    """Deterministic backend: actual == predicted latency, fixed costs."""
+
+    def __init__(self, latencies, costs):
+        self.latencies, self.costs = latencies, costs
+        self.executed: list[str] = []
+
+    def probe_cold(self, target, now):
+        return False
+
+    def execute(self, task, target, now):
+        from repro.core.runtime import ExecutionOutcome
+
+        self.executed.append(target)
+        lat = self.latencies[target]
+        return ExecutionOutcome(latency_ms=lat, cost=self.costs[target],
+                                cold=False, completion_ms=now + lat)
+
+
+def test_hedged_duplicate_merged_into_record():
+    """Both legs billed, first completion wins, violations see combined cost."""
+    from repro.core.predictor import Predictor
+    from repro.core.workload import TaskInput
+
+    # primary "fast" (lat 100, cost 2.0) is over the 50ms hedge threshold;
+    # backup "slow" (lat 120, cost 1.5) fits the remaining budget (4 - 2).
+    targets = [_StubTarget("fast", 100.0, 2.0), _StubTarget("slow", 120.0, 1.5)]
+    edge = _StubTarget("edge", 5000.0, 0.0, is_edge=True)
+    policy = HedgedPolicy(MinLatencyPolicy(c_max=4.0, alpha=0.0),
+                          hedge_threshold_ms=50.0)
+    eng = DecisionEngine(predictor=Predictor(cloud_targets=targets, edge_target=edge),
+                         policy=policy)
+    backend = _StubBackend(latencies={"fast": 100.0, "slow": 80.0, "edge": 5000.0},
+                           costs={"fast": 2.0, "slow": 1.5, "edge": 0.0})
+    rt = PlacementRuntime(eng, backend)
+    task = TaskInput(idx=0, arrival_ms=0.0, size=1.0, bytes=1.0)
+    res = rt.serve([task])
+
+    assert backend.executed == ["fast", "slow"]  # duplicate dispatch happened
+    rec = res.records[0]
+    assert rec.hedged and rec.target == "fast"
+    assert rec.actual_cost == pytest.approx(3.5)        # both legs billed
+    assert rec.predicted_cost == pytest.approx(3.5)
+    assert rec.actual_latency_ms == pytest.approx(80.0)  # first completion wins
+    assert rec.predicted_latency_ms == pytest.approx(100.0)
+    # the hedge's cost drew down the surplus bank: 4 - 2 (primary) - 1.5 (dup)
+    assert policy.surplus == pytest.approx(0.5)
+    # budget violations are judged on the COMBINED cost of both legs
+    assert rec.allowed_cost == pytest.approx(4.0)
+    assert res.pct_cost_violated == 0.0
+
+
+def test_hedged_run_bills_duplicates_end_to_end(fd_setup):
+    """A hedged FD run must actually hedge, and every hedged record carries
+    the combined (two-leg) cost against its decision-time budget."""
+    twin, models = fd_setup
+    tasks = twin.workload(N_TASKS, seed=5)
+    c_max = 8e-5  # leave headroom so backups fit the remaining budget
+
+    policy = HedgedPolicy(MinLatencyPolicy(c_max=c_max, alpha=0.0),
+                          hedge_threshold_ms=1500.0)
+    eng = DecisionEngine(predictor=build_predictor(models, configs=CONFIGS),
+                         policy=policy)
+    res = PlacementRuntime(eng, TwinBackend(twin, seed=17)).serve(tasks)
+
+    n_hedged = sum(r.hedged for r in res.records)
+    assert n_hedged > 0, "scenario must actually trigger hedges"
+    assert policy.surplus >= -1e-12  # the bank never underflows (α=0 ⇒ ≥ 0)
+    hedged_decisions = [d for d in eng.decisions if d.hedge_target is not None]
+    assert len(hedged_decisions) == n_hedged
+    for d in hedged_decisions:
+        # the hedge hook only nominates backups that fit the remaining budget
+        assert d.hedge_target != d.target
+        assert d.prediction.cost + d.hedge_prediction.cost <= d.allowed_cost + 1e-12
