@@ -21,11 +21,24 @@ def main() -> int:
                    help="comma list: t1,t2,t3,t4,t5,fig5,fig6,beyond,runtime,roofline")
     p.add_argument("--skip-live", action="store_true",
                    help="skip the real-compile live prototype (t5)")
+    p.add_argument("--smoke", action="store_true",
+                   help="seconds-long fleet perf smoke (CI): vectorized twin "
+                        "execution + fleet-vs-single-edge scenario only")
     args = p.parse_args()
 
     from benchmarks import common
-    if args.reduced:
+    if args.reduced or args.smoke:
         common.REDUCED = True
+
+    if args.smoke:
+        from benchmarks import bench_runtime
+
+        sink = common.CsvSink()
+        t0 = time.time()
+        bench_runtime.run_smoke(sink)
+        print(f"\n# smoke wall: {time.time() - t0:.1f}s")
+        print(sink.dump())
+        return 0
 
     from benchmarks import (
         bench_runtime,

@@ -23,22 +23,26 @@ Components (paper section in parens):
 """
 
 from repro.core.pricing import LambdaPricing, EdgePricing, SlicePricing
-from repro.core.perf_models import RidgeModel, NormalModel, fit_ridge
+from repro.core.perf_models import RidgeModel, NormalModel, ScaledModel, fit_ridge
 from repro.core.gbrt import GBRT, GBRTConfig
 from repro.core.cil import ContainerInfoList, ContainerRecord
-from repro.core.predictor import Predictor, Prediction, PredictionBatch
+from repro.core.predictor import EdgeFleet, Predictor, Prediction, PredictionBatch
 from repro.core.decision import (
     DecisionEngine,
+    EdgeBalancer,
     HedgedPolicy,
+    LeastPredictedWaitBalancer,
     MinCostPolicy,
     MinLatencyPolicy,
     PlacementDecision,
     Policy,
     PolicyConstraints,
     PredictedEdgeQueue,
+    RandomBalancer,
+    RoundRobinBalancer,
 )
-from repro.core.workload import PoissonWorkload, TaskInput
-from repro.core.records import SimulationResult, TaskRecord
+from repro.core.workload import BurstyWorkload, PoissonWorkload, TaskInput
+from repro.core.records import DeviceSummary, SimulationResult, TaskRecord
 from repro.core.runtime import (
     ExecutionBackend,
     ExecutionOutcome,
@@ -54,7 +58,15 @@ __all__ = [
     "SlicePricing",
     "RidgeModel",
     "NormalModel",
+    "ScaledModel",
     "fit_ridge",
+    "EdgeFleet",
+    "EdgeBalancer",
+    "LeastPredictedWaitBalancer",
+    "RoundRobinBalancer",
+    "RandomBalancer",
+    "BurstyWorkload",
+    "DeviceSummary",
     "GBRT",
     "GBRTConfig",
     "ContainerInfoList",

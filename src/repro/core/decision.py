@@ -32,12 +32,23 @@ so composition is explicit — no engine-side introspection.
 ``DecisionEngine.place()`` handles one task; ``DecisionEngine.place_many()``
 is the batched path: one vectorized ``Predictor.predict_batch`` pass over all
 tasks × targets, then the (cheap) sequential policy/CIL walk.
+
+Fleet placement: when the Predictor carries a multi-device ``EdgeFleet``, an
+``EdgeBalancer`` first nominates ONE device to stand in as "the edge" for the
+policy (the paper's policies are defined against a single λ_edge), from the
+per-device predicted queue waits. ``LeastPredictedWaitBalancer`` is the
+default; ``RoundRobinBalancer``/``RandomBalancer`` are the classic baselines
+it is benchmarked against. The engine then runs the unchanged paper policy
+over {cloud configs} ∪ {nominated device}.
 """
 
 from __future__ import annotations
 
 import abc
 from dataclasses import dataclass, field
+from typing import Mapping, Sequence
+
+import numpy as np
 
 from repro.core.predictor import EDGE as EDGE_NAME
 from repro.core.predictor import Prediction, Predictor
@@ -60,6 +71,7 @@ class PlacementDecision:
     allowed_cost: float  # budget in force at decision time (min-latency)
     hedge_target: str | None = None
     hedge_prediction: Prediction | None = None
+    edge_device: str | None = None  # the balancer's nominated edge device
 
 
 class Policy(abc.ABC):
@@ -197,11 +209,12 @@ class HedgedPolicy(Policy):
 
 @dataclass
 class PredictedEdgeQueue:
-    """The Decision Engine's shadow of the single-slot edge FIFO queue.
+    """The Decision Engine's shadow of one single-slot edge FIFO queue.
 
     The framework never sees the edge's *actual* queue; it advances a
     predicted busy-horizon with each predicted compute time it sends there
-    (paper Sec. V-B). Shared by the step-wise and batched decision loops.
+    (paper Sec. V-B). Shared by the step-wise and batched decision loops;
+    fleets keep one of these per device.
     """
 
     horizon_ms: float = 0.0
@@ -213,16 +226,65 @@ class PredictedEdgeQueue:
         self.horizon_ms = max(self.horizon_ms, now) + comp_ms
 
 
+# ------------------------------------------------------------- edge balancing
+class EdgeBalancer(abc.ABC):
+    """Nominates ONE fleet device to stand in as "the edge" for the policy."""
+
+    @abc.abstractmethod
+    def pick(self, names: Sequence[str], waits: Mapping[str, float],
+             preds: Mapping[str, Prediction]) -> str:
+        """Pick a device name. ``names`` is the fleet order; ``waits`` maps
+        device → predicted FIFO queue wait (ms); ``preds`` holds the full
+        per-target predictions for richer strategies."""
+
+
+class LeastPredictedWaitBalancer(EdgeBalancer):
+    """Default: the device with the smallest predicted queue wait (ties break
+    by fleet order, so a single-device fleet reduces to the paper exactly)."""
+
+    def pick(self, names, waits, preds):
+        return min(names, key=lambda n: waits.get(n, 0.0))
+
+
+class RoundRobinBalancer(EdgeBalancer):
+    """Classic baseline: cycle through devices regardless of backlog."""
+
+    def __init__(self):
+        self._i = 0
+
+    def pick(self, names, waits, preds):
+        name = names[self._i % len(names)]
+        self._i += 1
+        return name
+
+
+class RandomBalancer(EdgeBalancer):
+    """Classic baseline: uniform random device (deterministic per seed)."""
+
+    def __init__(self, seed: int = 0):
+        self.rng = np.random.default_rng(seed)
+
+    def pick(self, names, waits, preds):
+        return names[int(self.rng.integers(len(names)))]
+
+
 _POLICY_METHODS = ("choose", "observe", "constraints", "hedge")
 
 
 @dataclass
 class DecisionEngine:
-    """Binds a Predictor to a placement policy; one ``place()`` call per input."""
+    """Binds a Predictor to a placement policy; one ``place()`` call per input.
+
+    With a multi-device edge fleet, ``balancer`` nominates the device the
+    policy sees as "the edge" (default: least predicted queue wait).
+    ``edge_name`` survives as the deprecated single-device convenience — it is
+    only consulted when the Predictor carries no edge fleet at all.
+    """
 
     predictor: Predictor
     policy: Policy
     edge_name: str = EDGE_NAME
+    balancer: EdgeBalancer = field(default_factory=LeastPredictedWaitBalancer)
     decisions: list = field(default_factory=list)
 
     def __post_init__(self):
@@ -232,39 +294,78 @@ class DecisionEngine:
                 f"{type(self.policy).__name__} does not implement the Policy "
                 f"protocol (missing {', '.join(missing)}); subclass "
                 "repro.core.decision.Policy")
+        names = self.edge_names
+        if len(names) == 1:
+            self.edge_name = names[0]
 
-    def place(self, task, now: float, edge_queue_wait_ms: float = 0.0) -> PlacementDecision:
-        preds = self.predictor.predict(task, now, edge_queue_wait_ms)
-        return self._decide(task, now, preds)
+    @property
+    def edge_names(self) -> tuple[str, ...]:
+        """Fleet device names (empty when the Predictor has no edge)."""
+        return self.predictor.edge_names
+
+    def place(self, task, now: float, edge_queue_wait_ms: float = 0.0,
+              edge_waits: Mapping[str, float] | None = None) -> PlacementDecision:
+        waits = (dict(edge_waits) if edge_waits is not None
+                 else {n: edge_queue_wait_ms for n in self.edge_names})
+        preds = self.predictor.predict(task, now, edge_waits=waits)
+        return self._decide(task, now, preds, waits)
 
     def place_many(self, tasks: list,
-                   edge_queue: PredictedEdgeQueue | None = None) -> list[PlacementDecision]:
+                   edge_queue: PredictedEdgeQueue | None = None,
+                   edge_queues: dict[str, PredictedEdgeQueue] | None = None,
+                   ) -> list[PlacementDecision]:
         """Batched placement: one vectorized prediction pass over all tasks ×
         targets, then the sequential policy/CIL/edge-queue walk.
 
         Decisions are identical to a ``place()`` loop — the models are
         evaluated in one numpy pass instead of per task, which is what makes
         large-N workloads fast (see ``benchmarks/bench_runtime.py``).
+
+        ``edge_queues`` maps device → ``PredictedEdgeQueue`` (one per fleet
+        device, created fresh when omitted); ``edge_queue`` is the deprecated
+        single-device spelling.
         """
         batch = self.predictor.predict_batch(tasks)
-        queue = edge_queue if edge_queue is not None else PredictedEdgeQueue()
+        names = self.edge_names
+        if edge_queues is None:
+            if edge_queue is not None:
+                if len(names) != 1:
+                    raise ValueError(
+                        "edge_queue is single-device only; pass edge_queues "
+                        f"for a {len(names)}-device fleet")
+                edge_queues = {names[0]: edge_queue}
+            else:
+                edge_queues = {n: PredictedEdgeQueue() for n in names}
         out = []
         for i, task in enumerate(tasks):
             now = task.arrival_ms
-            preds = self.predictor.predict_at(batch, i, now, queue.wait_ms(now))
-            d = self._decide(task, now, preds)
-            if d.target == self.edge_name:
-                queue.push(now, d.prediction.comp_ms)
-            if d.hedge_target == self.edge_name and d.hedge_prediction is not None:
-                queue.push(now, d.hedge_prediction.comp_ms)
+            waits = {n: q.wait_ms(now) for n, q in edge_queues.items()}
+            preds = self.predictor.predict_at(batch, i, now, edge_waits=waits)
+            d = self._decide(task, now, preds, waits)
+            if d.target in edge_queues:
+                edge_queues[d.target].push(now, d.prediction.comp_ms)
+            if d.hedge_target is not None and d.hedge_target in edge_queues \
+                    and d.hedge_prediction is not None:
+                edge_queues[d.hedge_target].push(now, d.hedge_prediction.comp_ms)
             out.append(d)
         return out
 
     # ------------------------------------------------------------------
-    def _decide(self, task, now: float, preds: dict[str, Prediction]) -> PlacementDecision:
-        name, feasible, allowed = self.policy.choose(preds, self.edge_name)
+    def _decide(self, task, now: float, preds: dict[str, Prediction],
+                waits: Mapping[str, float] | None = None) -> PlacementDecision:
+        names = self.edge_names
+        if len(names) > 1:
+            edge_choice = self.balancer.pick(names, waits or {}, preds)
+            # the policy is defined against ONE λ_edge: it sees the cloud
+            # configs plus the balancer's nominated device only
+            policy_view = {n: p for n, p in preds.items()
+                           if n == edge_choice or n not in names}
+        else:
+            edge_choice = names[0] if names else self.edge_name
+            policy_view = preds
+        name, feasible, allowed = self.policy.choose(policy_view, edge_choice)
         chosen = preds[name]
-        hedge = self.policy.hedge(preds, name, allowed, self.edge_name)
+        hedge = self.policy.hedge(policy_view, name, allowed, edge_choice)
         if hedge is not None and hedge[0] == name:
             hedge = None  # a duplicate of the primary is not a hedge
         self.policy.observe(chosen)
@@ -280,6 +381,7 @@ class DecisionEngine:
             allowed_cost=allowed,
             hedge_target=hedge[0] if hedge is not None else None,
             hedge_prediction=hedge[1] if hedge is not None else None,
+            edge_device=edge_choice if names else None,
         )
         self.decisions.append(d)
         return d

@@ -12,7 +12,7 @@ from repro.core.apps import AWSTwin, Measurements, MEMORY_CONFIGS_MB, collect_me
 from repro.core.cil import ContainerInfoList, DEFAULT_T_IDL_MS
 from repro.core.gbrt import GBRT, GBRTConfig
 from repro.core.perf_models import NormalModel, RidgeModel, mape
-from repro.core.predictor import EdgeTarget, LambdaTarget, Predictor
+from repro.core.predictor import EdgeFleet, EdgeTarget, LambdaTarget, Predictor
 from repro.core.pricing import LambdaPricing
 
 
@@ -124,6 +124,33 @@ def build_predictor(
         cloud_targets=cloud_targets, edge_target=edge_target,
         cil=ContainerInfoList(t_idl_ms=t_idl_ms), quantile=quantile,
     )
+
+
+def build_fleet_predictor(
+    models: FittedModels,
+    edge_devices: int | dict[str, float],
+    configs: tuple[int, ...] = MEMORY_CONFIGS_MB,
+    pricing: LambdaPricing | None = None,
+    t_idl_ms: float = DEFAULT_T_IDL_MS,
+    quantile: float | None = None,
+    prefix: str = "edge",
+) -> Predictor:
+    """``build_predictor`` over a multi-device edge fleet.
+
+    ``edge_devices`` is either a device count (homogeneous fleet named
+    ``{prefix}0..{prefix}{n-1}``) or a mapping ``name -> relative speed``
+    (arbitrary device names; a device at speed ``s`` predicts ``comp/s``).
+    The matching twin is ``TwinBackend(..., edge_names=..., edge_speed=...)``.
+    """
+    base = build_predictor(models, configs=configs, pricing=pricing,
+                           t_idl_ms=t_idl_ms, quantile=quantile)
+    template = base.edge_target
+    if isinstance(edge_devices, int):
+        fleet = EdgeFleet.replicate(template, edge_devices, prefix=prefix)
+    else:
+        fleet = EdgeFleet.from_speeds(template, edge_devices)
+    return Predictor(cloud_targets=base.cloud_targets, edge_fleet=fleet,
+                     cil=ContainerInfoList(t_idl_ms=t_idl_ms), quantile=quantile)
 
 
 def fit_app(app_name: str, seed: int = 0, n_inputs: int | None = None,

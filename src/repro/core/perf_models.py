@@ -128,3 +128,23 @@ def mape(pred: np.ndarray, actual: np.ndarray) -> float:
     pred = np.asarray(pred, dtype=np.float64)
     actual = np.asarray(actual, dtype=np.float64)
     return float(np.mean(np.abs(pred - actual) / np.maximum(np.abs(actual), 1e-9))) * 100.0
+
+
+@dataclass(frozen=True)
+class ScaledModel:
+    """A component model whose predictions are multiplied by a constant factor.
+
+    Heterogeneous edge fleets reuse one fitted compute model per device class:
+    a device running at relative speed ``s`` predicts ``base.predict(x) / s``
+    (``scale = 1/s``). Works for scalars and arrays, so both the per-task and
+    the batched prediction paths stay in parity.
+    """
+
+    base: object
+    scale: float = 1.0
+
+    def predict(self, x):
+        out = self.base.predict(x)
+        if np.ndim(out) == 0:
+            return float(out) * self.scale
+        return np.asarray(out) * self.scale

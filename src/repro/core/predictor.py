@@ -1,13 +1,19 @@
-"""The Predictor (paper Sec. V-A).
+"""The Predictor (paper Sec. V-A), generalized to multi-device edge fleets.
 
 Given an input, the Predictor returns predicted end-to-end latency and cost for
-every execution target: the N cloud configurations Φ = {λ_m} and the edge
-executor λ_edge. Cold-vs-warm start is decided by consulting the CIL. The
+every execution target: the N cloud configurations Φ = {λ_m} and every device
+of the edge fleet. Cold-vs-warm start is decided by consulting the CIL. The
 Decision Engine then calls ``update_cil`` with the chosen configuration.
 
 Targets are pluggable so the same Predictor drives both the AWS reproduction
 (LambdaTarget/EdgeTarget, models from Sec. IV) and the TPU-fleet adaptation
 (``repro.serving.placement.SliceTarget``).
+
+The paper assumes ONE smart edge device per application; ``EdgeFleet`` lifts
+that to N named devices, each with its own compute model (heterogeneous fleets
+via ``repro.core.perf_models.ScaledModel``) and its own predicted FIFO queue.
+``Predictor(edge_target=...)`` survives as the single-device convenience and
+builds a one-device fleet.
 
 Two prediction paths:
 
@@ -21,6 +27,12 @@ Two prediction paths:
   on this; results are identical to per-task ``predict`` (same models, same
   arithmetic, vectorized).
 
+On the batched path the GBRT compute model can additionally be routed through
+the ``repro.kernels.gbrt_predict`` Pallas kernel (see ``GBRT_KERNEL_MODE``):
+on a TPU backend, batches of ≥ ``GBRT_KERNEL_MIN_BATCH`` rows run the one-hot
+matmul ensemble kernel; everywhere else the vectorized numpy tree walk is the
+fallback (it is both exact and faster than interpret-mode Pallas on CPU).
+
 The ``quantile`` option is a beyond-paper extension (the paper's stated future
 work): predict a latency quantile instead of the mean, so placement can hedge
 against the high variance the paper observed in cloud pipelines.
@@ -28,16 +40,53 @@ against the high variance the paper observed in cloud pipelines.
 
 from __future__ import annotations
 
+import dataclasses
 from dataclasses import dataclass, field
 from typing import Mapping, Protocol
 
 import numpy as np
 
 from repro.core.cil import ContainerInfoList
-from repro.core.perf_models import NormalModel, RidgeModel, _norm_ppf
+from repro.core.perf_models import NormalModel, RidgeModel, ScaledModel, _norm_ppf
 from repro.core.pricing import EdgePricing, LambdaPricing
 
 EDGE = "edge"
+
+# GBRT-on-Pallas routing for the batched path (ROADMAP item):
+#   "auto"  — use the kernel when a real TPU backend is attached and the batch
+#             has at least GBRT_KERNEL_MIN_BATCH rows; numpy tree walk
+#             otherwise (CPU interpret-mode Pallas is slower than numpy, and
+#             the f32 kernel would break exact scalar/batch decision parity);
+#   "force" — always use the kernel (tests / TPU microbenchmarks);
+#   "off"   — always use the numpy tree walk.
+GBRT_KERNEL_MODE = "auto"
+GBRT_KERNEL_MIN_BATCH = 4096
+
+
+def _tpu_backend() -> bool:
+    try:
+        import jax
+
+        return jax.default_backend() == "tpu"
+    except Exception:
+        return False
+
+
+def gbrt_batch_predict(model, feats: np.ndarray) -> np.ndarray:
+    """Batched GBRT evaluation: Pallas ensemble kernel when it pays off,
+    vectorized numpy tree walk as the always-available fallback."""
+    mode = GBRT_KERNEL_MODE
+    if (mode != "off" and hasattr(model, "thresholds")
+            and (mode == "force"
+                 or (feats.shape[0] >= GBRT_KERNEL_MIN_BATCH and _tpu_backend()))):
+        try:
+            from repro.kernels.gbrt_predict.ops import gbrt_predict
+
+            return np.asarray(gbrt_predict(model, feats), dtype=np.float64)
+        except Exception:
+            if mode == "force":
+                raise
+    return np.asarray(model.predict(feats), dtype=np.float64)
 
 
 @dataclass(frozen=True)
@@ -84,6 +133,79 @@ class ExecutionTarget(Protocol):
         ...
 
 
+@dataclass
+class EdgeFleet:
+    """Named edge devices — the multi-device generalization of λ_edge.
+
+    Every device is an edge execution target (``EdgeTarget``,
+    ``EdgeSliceTarget``, any ``is_edge`` target) with a unique name. Devices
+    may carry distinct compute models, so heterogeneous fleets (a fast hub
+    plus slow sensor nodes) are first-class: see ``replicate(speeds=...)``.
+    """
+
+    devices: list
+
+    def __post_init__(self):
+        names = [d.name for d in self.devices]
+        if len(set(names)) != len(names):
+            raise ValueError(f"duplicate edge device names: {names}")
+        for d in self.devices:
+            if not getattr(d, "is_edge", False):
+                raise ValueError(f"edge device {d.name!r} must have is_edge=True")
+        self._by_name = {d.name: d for d in self.devices}
+
+    @property
+    def names(self) -> tuple[str, ...]:
+        return tuple(d.name for d in self.devices)
+
+    def __len__(self) -> int:
+        return len(self.devices)
+
+    def __iter__(self):
+        return iter(self.devices)
+
+    def __bool__(self) -> bool:
+        return bool(self.devices)
+
+    def __contains__(self, name: str) -> bool:
+        return name in self._by_name
+
+    def __getitem__(self, name: str):
+        return self._by_name[name]
+
+    @classmethod
+    def single(cls, target) -> "EdgeFleet":
+        """The paper's one-device special case."""
+        return cls([target])
+
+    @classmethod
+    def replicate(cls, target, n: int, prefix: str = "edge",
+                  speeds: Mapping[str, float] | None = None) -> "EdgeFleet":
+        """N copies of ``target`` named ``{prefix}0..{prefix}{n-1}``.
+
+        ``speeds`` maps device name → relative compute speed (1.0 = the base
+        device); a device at speed ``s`` gets ``comp_model`` wrapped in
+        ``ScaledModel(base, 1/s)``.
+        """
+        speeds = speeds or {}
+        return cls.from_speeds(
+            target, {f"{prefix}{i}": float(speeds.get(f"{prefix}{i}", 1.0))
+                     for i in range(n)})
+
+    @classmethod
+    def from_speeds(cls, target, speeds: Mapping[str, float]) -> "EdgeFleet":
+        """One device per ``speeds`` entry (arbitrary names, fleet order =
+        mapping order); a device at speed ``s`` predicts ``comp / s``."""
+        devices = []
+        for name, speed in speeds.items():
+            dev = dataclasses.replace(target, name=name)
+            if float(speed) != 1.0:
+                dev = dataclasses.replace(
+                    dev, comp_model=ScaledModel(dev.comp_model, 1.0 / float(speed)))
+            devices.append(dev)
+        return cls(devices)
+
+
 @dataclass(frozen=True)
 class TargetBatch:
     """Vectorized predictions for one target across a batch of tasks."""
@@ -106,8 +228,16 @@ class PredictionBatch:
 
     n: int
     cloud: dict[str, TargetBatch]
-    edge: TargetBatch | None
-    edge_name: str | None
+    edges: dict[str, TargetBatch]        # device name -> batch (fleet order)
+
+    # ------------------------- deprecated single-edge convenience accessors
+    @property
+    def edge(self) -> TargetBatch | None:
+        return next(iter(self.edges.values()), None)
+
+    @property
+    def edge_name(self) -> str | None:
+        return next(iter(self.edges), None)
 
 
 def cloud_components_batch(sizes: np.ndarray, nbytes: np.ndarray, *,
@@ -124,7 +254,7 @@ def cloud_components_batch(sizes: np.ndarray, nbytes: np.ndarray, *,
     """
     n = sizes.shape[0]
     feats = np.stack([sizes, np.full(n, comp_feature)], axis=1)
-    comp = np.asarray(comp_model.predict(feats), dtype=np.float64)
+    comp = gbrt_batch_predict(comp_model, feats)
     if quantile is not None:
         z = _norm_ppf(quantile)
         comp = comp * (1.0 + z * comp_std_frac)
@@ -192,19 +322,48 @@ def _stack_components(tgt, sizes: np.ndarray, nbytes: np.ndarray,
 @dataclass
 class Predictor:
     """predict() + update_cil(), exactly the two methods of paper Sec. V-A —
-    plus the batched ``predict_batch``/``predict_at`` pair."""
+    plus the batched ``predict_batch``/``predict_at`` pair.
+
+    ``edge_fleet`` is the first-class multi-device form; ``edge_target`` is
+    the deprecated single-device convenience (it becomes a one-device fleet).
+    """
 
     cloud_targets: list
-    edge_target: object | None
+    edge_target: object | None = None
     cil: ContainerInfoList = field(default_factory=ContainerInfoList)
     quantile: float | None = None  # None = paper-faithful mean prediction
+    edge_fleet: EdgeFleet | None = None
 
     def __post_init__(self):
         self._by_name = {t.name: t for t in self.cloud_targets}
+        if self.edge_fleet is not None and self.edge_target is not None:
+            raise ValueError("pass either edge_fleet or edge_target, not both")
+        if self.edge_fleet is None and self.edge_target is not None:
+            self.edge_fleet = EdgeFleet.single(self.edge_target)
+        elif self.edge_fleet is not None and self.edge_target is None:
+            # deprecated convenience alias: "the edge" = the fleet's first device
+            self.edge_target = self.edge_fleet.devices[0] if self.edge_fleet else None
 
-    def predict(self, task, now: float, edge_queue_wait_ms: float = 0.0) -> dict[str, Prediction]:
-        """Predicted end-to-end latency and cost for every target."""
+    @property
+    def edge_names(self) -> tuple[str, ...]:
+        return self.edge_fleet.names if self.edge_fleet is not None else ()
+
+    def _edge_waits(self, edge_queue_wait_ms: float,
+                    edge_waits: Mapping[str, float] | None) -> Mapping[str, float]:
+        if edge_waits is not None:
+            return edge_waits
+        return {name: edge_queue_wait_ms for name in self.edge_names}
+
+    def predict(self, task, now: float, edge_queue_wait_ms: float = 0.0,
+                edge_waits: Mapping[str, float] | None = None) -> dict[str, Prediction]:
+        """Predicted end-to-end latency and cost for every target.
+
+        ``edge_waits`` maps device name → predicted FIFO queue wait; the
+        scalar ``edge_queue_wait_ms`` is the deprecated single-edge spelling
+        (applied to every device when ``edge_waits`` is not given).
+        """
         self.cil.reap(now)
+        waits = self._edge_waits(edge_queue_wait_ms, edge_waits)
         out: dict[str, Prediction] = {}
         for tgt in self.cloud_targets:
             cold = not self.cil.will_warm_start(tgt.name, now)
@@ -217,14 +376,15 @@ class Predictor:
                 cold=cold,
                 components=comps,
             )
-        if self.edge_target is not None:
-            comps = self.edge_target.predict_components(task, False, self.quantile)
-            latency = edge_queue_wait_ms + sum(comps.values())
-            comps = dict(comps, queue=edge_queue_wait_ms)
-            out[self.edge_target.name] = Prediction(
-                target=self.edge_target.name,
+        for dev in (self.edge_fleet or ()):
+            wait = float(waits.get(dev.name, 0.0))
+            comps = dev.predict_components(task, False, self.quantile)
+            latency = wait + sum(comps.values())
+            comps = dict(comps, queue=wait)
+            out[dev.name] = Prediction(
+                target=dev.name,
                 latency_ms=latency,
-                cost=self.edge_target.cost(comps["comp"]),
+                cost=dev.cost(comps["comp"]),
                 cold=False,
                 components=comps,
             )
@@ -232,25 +392,25 @@ class Predictor:
 
     # ----------------------------------------------------------- batched API
     def predict_batch(self, tasks: list) -> PredictionBatch:
-        """Evaluate every component model over all tasks × targets at once.
+        """Evaluate every component model over all (tasks × targets) at once —
+        cloud configs AND every edge device of the fleet.
 
         One numpy pass per (target, start-mode) instead of a Python loop per
-        task — the GBRT compute model alone turns N×M tree walks into M.
+        task — the GBRT compute model alone turns N×M tree walks into M (and
+        can run on the Pallas ensemble kernel, see ``gbrt_batch_predict``).
         """
         if not tasks:
-            return PredictionBatch(n=0, cloud={}, edge=None, edge_name=None)
+            return PredictionBatch(n=0, cloud={}, edges={})
         sizes = np.array([t.size for t in tasks], dtype=np.float64)
         nbytes = np.array([t.bytes for t in tasks], dtype=np.float64)
 
         cloud: dict[str, TargetBatch] = {}
         for tgt in self.cloud_targets:
             cloud[tgt.name] = self._target_batch(tgt, sizes, nbytes)
-        edge = (self._target_batch(self.edge_target, sizes, nbytes)
-                if self.edge_target is not None else None)
-        return PredictionBatch(
-            n=len(tasks), cloud=cloud, edge=edge,
-            edge_name=self.edge_target.name if self.edge_target is not None else None,
-        )
+        edges: dict[str, TargetBatch] = {}
+        for dev in (self.edge_fleet or ()):
+            edges[dev.name] = self._target_batch(dev, sizes, nbytes)
+        return PredictionBatch(n=len(tasks), cloud=cloud, edges=edges)
 
     def _target_batch(self, tgt, sizes: np.ndarray, nbytes: np.ndarray) -> TargetBatch:
         if hasattr(tgt, "predict_components_batch"):
@@ -269,12 +429,14 @@ class Predictor:
         )
 
     def predict_at(self, batch: PredictionBatch, idx: int, now: float,
-                   edge_queue_wait_ms: float = 0.0) -> dict[str, Prediction]:
+                   edge_queue_wait_ms: float = 0.0,
+                   edge_waits: Mapping[str, float] | None = None) -> dict[str, Prediction]:
         """Assemble the per-task view of a ``PredictionBatch``: consult the CIL
-        for warm/cold per cloud target, add the predicted edge queue wait.
+        for warm/cold per cloud target, add each device's predicted queue wait.
 
-        Equivalent to ``predict(tasks[idx], now, edge_queue_wait_ms)``."""
+        Equivalent to ``predict(tasks[idx], now, ...)``."""
         self.cil.reap(now)
+        waits = self._edge_waits(edge_queue_wait_ms, edge_waits)
         out: dict[str, Prediction] = {}
         for name, tb in batch.cloud.items():
             cold = not self.cil.will_warm_start(name, now)
@@ -287,13 +449,13 @@ class Predictor:
                 cold=cold,
                 components={k: float(v[idx]) for k, v in src.items()},
             )
-        if batch.edge is not None:
-            tb = batch.edge
+        for name, tb in batch.edges.items():
+            wait = float(waits.get(name, 0.0))
             comps = {k: float(v[idx]) for k, v in tb.warm.items()}
-            comps["queue"] = edge_queue_wait_ms
-            out[batch.edge_name] = Prediction(
-                target=batch.edge_name,
-                latency_ms=edge_queue_wait_ms + float(tb.warm_latency[idx]),
+            comps["queue"] = wait
+            out[name] = Prediction(
+                target=name,
+                latency_ms=wait + float(tb.warm_latency[idx]),
                 cost=float(tb.cost[idx]),
                 cold=False,
                 components=comps,
@@ -303,7 +465,7 @@ class Predictor:
     # ------------------------------------------------------------ CIL update
     def update_cil(self, chosen: str, now: float, prediction: Prediction) -> None:
         """Record the chosen placement (paper: Predictor.updateCIL)."""
-        if self.edge_target is not None and chosen == self.edge_target.name:
+        if self.edge_fleet is not None and chosen in self.edge_fleet:
             return  # edge executor state is tracked by its FIFO queue, not the CIL
         tgt = self._target(chosen)
         completion = now + tgt.occupancy_ms(dict(prediction.components))

@@ -31,10 +31,26 @@ class TaskRecord:
     feasible: bool
     completion_ms: float
     hedged: bool = False
+    queue_wait_ms: float = 0.0  # actual FIFO wait on the executor (edge)
+    exec_ms: float = 0.0        # executor busy occupancy (utilization)
+    hedge_target: str | None = None  # where the duplicate dispatch ran
+    hedge_exec_ms: float = 0.0       # its busy occupancy (for device load)
 
     @property
     def warm_cold_mismatch(self) -> bool:
         return self.target != "edge" and self.predicted_cold != self.actual_cold
+
+
+@dataclass(frozen=True)
+class DeviceSummary:
+    """Per-device load view of a fleet run (imbalance, not just aggregates)."""
+
+    device: str
+    n_tasks: int
+    utilization: float        # busy occupancy / workload makespan
+    queue_wait_mean_ms: float
+    queue_wait_p50_ms: float
+    queue_wait_p99_ms: float
 
 
 @dataclass
@@ -43,6 +59,7 @@ class SimulationResult:
     deadline_ms: float | None = None
     c_max: float | None = None
     edge_name: str = "edge"
+    edge_names: tuple[str, ...] | None = None  # fleet devices (None = single)
 
     # ------------------------------------------------------------- totals
     @property
@@ -118,7 +135,56 @@ class SimulationResult:
 
     @property
     def n_edge(self) -> int:
-        return sum(1 for r in self.records if r.target == self.edge_name)
+        edge = set(self.edge_names) if self.edge_names else {self.edge_name}
+        return sum(1 for r in self.records if r.target in edge)
 
     def configs_used(self) -> set[str]:
         return {r.target for r in self.records}
+
+    # ------------------------------------------------- per-device (fleet) view
+    @property
+    def makespan_ms(self) -> float:
+        """First arrival to last completion — the run's wall-clock horizon."""
+        if not self.records:
+            return 0.0
+        t0 = min(r.task.arrival_ms for r in self.records)
+        t1 = max(r.completion_ms for r in self.records)
+        return max(t1 - t0, 0.0)
+
+    def device_summaries(self) -> dict[str, DeviceSummary]:
+        """Utilization and queue-wait distribution per edge device, so fleet
+        benchmarks can report imbalance instead of just aggregate latency.
+
+        Hedged duplicate dispatches count toward the device they ran on —
+        both in ``n_tasks`` and in the busy time behind ``utilization`` —
+        since they occupy its executor exactly like a primary dispatch.
+        Queue-wait percentiles are over primary dispatches only.
+        """
+        devices = self.edge_names if self.edge_names else (self.edge_name,)
+        span = self.makespan_ms
+        out: dict[str, DeviceSummary] = {}
+        for dev in devices:
+            recs = [r for r in self.records if r.target == dev]
+            hedges = [r for r in self.records if r.hedge_target == dev]
+            waits = np.array([r.queue_wait_ms for r in recs]) if recs else np.zeros(1)
+            busy = sum(r.exec_ms for r in recs) + sum(r.hedge_exec_ms for r in hedges)
+            out[dev] = DeviceSummary(
+                device=dev,
+                n_tasks=len(recs) + len(hedges),
+                utilization=busy / span if span > 0 else 0.0,
+                queue_wait_mean_ms=float(np.mean(waits)),
+                queue_wait_p50_ms=float(np.percentile(waits, 50)),
+                queue_wait_p99_ms=float(np.percentile(waits, 99)),
+            )
+        return out
+
+    def device_table(self) -> str:
+        """Human-readable per-device summary (benchmarks and examples)."""
+        rows = [f"{'device':<10} {'tasks':>6} {'util':>6} "
+                f"{'wait_mean':>10} {'wait_p50':>9} {'wait_p99':>9}"]
+        for s in self.device_summaries().values():
+            rows.append(
+                f"{s.device:<10} {s.n_tasks:>6d} {s.utilization:>6.1%} "
+                f"{s.queue_wait_mean_ms:>10.0f} {s.queue_wait_p50_ms:>9.0f} "
+                f"{s.queue_wait_p99_ms:>9.0f}")
+        return "\n".join(rows)

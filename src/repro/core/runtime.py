@@ -10,10 +10,10 @@ that architecture literal:
   Sec. VI-A) here and by ``repro.serving.placement.LiveBackend`` (the real
   executor pool, Sec. VI-B) on the serving side;
 - ``PlacementRuntime`` is the ONE serve loop shared by simulation and the live
-  prototype. It owns the *predicted* edge-queue horizon
-  (``PredictedEdgeQueue``), asks the Decision Engine for placements (batched
-  ``place_many`` by default, per-task ``step`` otherwise), executes them
-  through the backend, and merges hedged duplicates
+  prototype. It owns the *predicted* edge-queue horizons — one
+  ``PredictedEdgeQueue`` per fleet device — asks the Decision Engine for
+  placements (batched ``place_many`` by default, per-task ``step`` otherwise),
+  executes them through the backend, and merges hedged duplicates
   (first-completion-wins, both billed);
 - policies are consumed only through the formal ``Policy`` protocol —
   constraints for result reporting come from ``policy.constraints()``, hedges
@@ -23,16 +23,32 @@ Placement is non-blocking (paper Sec. III-A): decisions happen at ingestion
 time from *predicted* state only, so the decision loop factors cleanly out of
 execution — which is what lets ``serve`` run the vectorized batched path
 without changing any observable behavior.
+
+``TwinBackend`` additionally implements ``execute_many``: the whole ground
+truth is sampled in batched numpy (upload / start / compute / store legs as
+one ``standard_normal`` block per substrate stream) instead of per-task scalar
+draws, BIT-IDENTICAL to the sequential ``execute`` loop — numpy Generators
+produce the same stream whether normals are drawn one at a time or in a block,
+and every leg is an affine/exp transform of a standard normal. Only the
+container-pool and per-device FIFO recurrences stay sequential (cheap Python,
+no model math). This is what makes 100k-task fleet workloads fast — see
+``benchmarks/bench_runtime.py``.
 """
 
 from __future__ import annotations
 
+import zlib
 from dataclasses import dataclass
-from typing import Protocol, runtime_checkable
+from typing import Protocol, Sequence, runtime_checkable
 
 import numpy as np
 
-from repro.core.apps import AWSTwin
+from repro.core.apps import (
+    AWSTwin,
+    FULL_VCPU_MB,
+    T_IDL_ACTUAL_MEAN_MS,
+    T_IDL_ACTUAL_STD_MS,
+)
 from repro.core.decision import DecisionEngine, PlacementDecision, PredictedEdgeQueue
 from repro.core.predictor import Prediction
 from repro.core.pricing import LambdaPricing
@@ -48,6 +64,39 @@ class ExecutionOutcome:
     cost: float          # billed $ for this execution
     cold: bool           # did the substrate actually cold-start?
     completion_ms: float  # absolute completion time on the arrival clock
+    queue_wait_ms: float = 0.0  # actual FIFO wait (edge executors)
+    exec_ms: float = 0.0        # executor busy occupancy (utilization metric)
+
+
+@dataclass
+class ExecutionBatch:
+    """Struct-of-arrays form of N ``ExecutionOutcome``s — what a vectorized
+    backend naturally produces (``TwinBackend.execute_many``). ``outcomes()``
+    or indexing recovers the per-dispatch view."""
+
+    latency_ms: np.ndarray
+    cost: np.ndarray
+    cold: np.ndarray          # bool
+    completion_ms: np.ndarray
+    queue_wait_ms: np.ndarray
+    exec_ms: np.ndarray
+
+    def __len__(self) -> int:
+        return self.latency_ms.shape[0]
+
+    def __getitem__(self, i: int) -> ExecutionOutcome:
+        return ExecutionOutcome(
+            latency_ms=float(self.latency_ms[i]), cost=float(self.cost[i]),
+            cold=bool(self.cold[i]), completion_ms=float(self.completion_ms[i]),
+            queue_wait_ms=float(self.queue_wait_ms[i]),
+            exec_ms=float(self.exec_ms[i]))
+
+    def outcomes(self) -> list[ExecutionOutcome]:
+        return [ExecutionOutcome(lat, c, k, m, q, e)
+                for lat, c, k, m, q, e in zip(
+                    self.latency_ms.tolist(), self.cost.tolist(),
+                    self.cold.tolist(), self.completion_ms.tolist(),
+                    self.queue_wait_ms.tolist(), self.exec_ms.tolist())]
 
 
 @runtime_checkable
@@ -70,8 +119,58 @@ class ExecutionBackend(Protocol):
         ...
 
 
+def edge_stream_key(name: str) -> int:
+    """Stable per-device RNG stream offset: adding or removing a device can
+    never perturb another device's draws (crc32 is process-independent)."""
+    return zlib.crc32(name.encode("utf-8"))
+
+
+CLOUD_LEGS = ("upld", "start", "comp", "store")
+EDGE_LEGS = ("comp", "iot", "store")
+
+
+def _fifo_starts(free: float, nows: np.ndarray,
+                 comp: np.ndarray) -> tuple[np.ndarray, float]:
+    """Execution start times on one single-slot FIFO executor.
+
+    Bitwise-identical to the scalar recurrence ``start_j = max(F, now_j);
+    F = start_j + comp_j``: between idle periods the busy horizon is a plain
+    running sum, and ``np.cumsum`` accumulates in the same sequential order,
+    so each busy segment is one vectorized pass. Falls back to the scalar
+    loop if the device goes idle many times (quiet workloads — cheap anyway).
+    """
+    nd = nows.shape[0]
+    start = np.empty(nd)
+    pos = 0
+    segments = 0
+    while pos < nd and segments < 32:
+        segments += 1
+        f_trial = np.cumsum(np.concatenate(([free], comp[pos:])))
+        viol = np.nonzero(nows[pos:] > f_trial[:-1])[0]
+        if viol.size == 0:  # never idle again: the trial horizon is exact
+            start[pos:] = f_trial[:-1]
+            return start, float(f_trial[-1])
+        k = int(viol[0])  # first idle gap: horizon resets to the arrival
+        if k:
+            start[pos:pos + k] = f_trial[:k]
+        j = pos + k
+        s = float(nows[j])
+        start[j] = s
+        free = s + float(comp[j])
+        pos = j + 1
+    if pos < nd:  # many idle periods: scalar recurrence for the tail
+        nows_l = nows[pos:].tolist()
+        comp_l = comp[pos:].tolist()
+        for j in range(nd - pos):
+            now_j = nows_l[j]
+            s = free if free > now_j else now_j
+            start[pos + j] = s
+            free = s + comp_l[j]
+    return start, float(free)
+
+
 # ----------------------------------------------------------------- twin side
-@dataclass
+@dataclass(slots=True)
 class GTContainer:
     busy_until: float
     last_completion: float
@@ -94,7 +193,14 @@ class GroundTruthCloud:
 
     def commit(self, config: str, trigger_time: float, busy_ms: float) -> bool:
         """Trigger a function occupying a container for ``busy_ms``.
-        Returns True if this was an actual cold start."""
+        Returns True if this was an actual cold start.
+
+        NOTE: ``TwinBackend.execute_many`` runs this reap / MRU-idle-select /
+        occupy-or-append walk inline over parallel float lists (with the
+        lifetime draws pre-batched from this object's ``rng``) — any change
+        to the pool semantics here must be mirrored there; the bit-parity
+        tests in ``tests/test_fleet.py`` catch divergence.
+        """
         pool = self.pools.setdefault(config, [])
         # reap actually-expired idle containers
         pool[:] = [c for c in pool if c.busy_until > trigger_time or trigger_time <= c.expires_at]
@@ -117,87 +223,308 @@ class TwinBackend:
 
     Actual latencies, billed costs, and warm/cold outcomes come from the
     twin's generative ground truth: a stochastic-lifetime container pool per
-    configuration and a single-slot FIFO edge executor whose *actual* queueing
-    emerges from actual compute times.
+    configuration and N single-slot FIFO edge executors (one per fleet
+    device) whose *actual* queueing emerges from actual compute times.
+
+    One RNG stream per (substrate, latency leg): the cloud pipeline draws
+    upld/start/comp/store each from its own stream, and each edge device
+    draws comp/iot/store from streams seeded ``(seed, edge_stream_key(name),
+    leg)`` — deterministic and independent of fleet composition, so adding a
+    device never perturbs another device's ground truth, and the batched
+    sampler can draw each leg as one contiguous block that is bit-identical
+    to the per-task scalar draws. ``edge_speed`` maps device → relative
+    compute speed (heterogeneous fleets; actual compute is divided by it).
     """
 
     def __init__(self, twin: AWSTwin, seed: int = 0,
-                 pricing: LambdaPricing | None = None, edge_name: str = "edge"):
+                 pricing: LambdaPricing | None = None, edge_name: str = "edge",
+                 edge_names: Sequence[str] | None = None,
+                 edge_speed: dict[str, float] | None = None):
         self.twin = twin
         self.pricing = pricing or LambdaPricing()
         self.gt_cloud = GroundTruthCloud(twin, seed=seed)
-        self.rng = np.random.default_rng(seed + 7)
-        self.edge_name = edge_name
-        # edge executor state (single-slot FIFO)
-        self.edge_free_at_actual = 0.0
+        self.cloud_rngs = {leg: np.random.default_rng([seed, 7, i])
+                           for i, leg in enumerate(CLOUD_LEGS)}
+        names = tuple(edge_names) if edge_names is not None else (edge_name,)
+        self.edge_names = names
+        self.edge_name = names[0] if names else edge_name
+        self.edge_speed = {n: float((edge_speed or {}).get(n, 1.0)) for n in names}
+        self.edge_rngs = {
+            n: {leg: np.random.default_rng([seed, edge_stream_key(n), i])
+                for i, leg in enumerate(EDGE_LEGS)}
+            for n in names}
+        # per-device edge executor state (single-slot FIFO)
+        self.edge_free_at = {n: 0.0 for n in names}
+
+    @property
+    def edge_free_at_actual(self) -> float:
+        """Deprecated single-edge alias for ``edge_free_at[edge_name]``."""
+        return self.edge_free_at[self.edge_name]
+
+    @edge_free_at_actual.setter
+    def edge_free_at_actual(self, value: float) -> None:
+        self.edge_free_at[self.edge_name] = value
 
     def probe_cold(self, target: str, now: float) -> bool:
         return self.gt_cloud.probe(target, now)
 
     def execute(self, task: TaskInput, target: str, now: float) -> ExecutionOutcome:
-        if target == self.edge_name:
-            return self._execute_edge(task, now)
+        if target in self.edge_free_at:
+            return self._execute_edge(task, now, target)
         return self._execute_cloud(task, target, now)
 
     def _execute_cloud(self, task: TaskInput, config: str, now: float) -> ExecutionOutcome:
-        twin, rng = self.twin, self.rng
-        upld = twin.upld_ms(task.bytes, rng)
+        twin, rngs = self.twin, self.cloud_rngs
+        upld = twin.upld_ms(task.bytes, rngs["upld"])
         trigger = now + upld
         cold = self.gt_cloud.probe(config, trigger)
-        start = twin.start_ms(cold, rng)
-        comp = twin.comp_cloud_ms(task.size, float(config), rng)
+        start = twin.start_ms(cold, rngs["start"])
+        comp = twin.comp_cloud_ms(task.size, float(config), rngs["comp"])
         self.gt_cloud.commit(config, trigger, start + comp)
-        store = twin.store_cloud_ms(rng)
+        store = twin.store_cloud_ms(rngs["store"])
         latency = upld + start + comp + store
         return ExecutionOutcome(
             latency_ms=latency,
             cost=self.pricing.cost(comp, float(config)),
             cold=cold,
             completion_ms=now + latency,
+            exec_ms=start + comp,
         )
 
-    def _execute_edge(self, task: TaskInput, now: float) -> ExecutionOutcome:
-        twin, rng = self.twin, self.rng
-        comp = twin.comp_edge_ms(task.size, rng)
-        start_exec = max(self.edge_free_at_actual, now)
-        self.edge_free_at_actual = start_exec + comp
-        iot = twin.iotup_ms(rng)
-        store = twin.store_edge_ms(rng)
+    def _execute_edge(self, task: TaskInput, now: float,
+                      device: str | None = None) -> ExecutionOutcome:
+        device = device if device is not None else self.edge_name
+        twin, rngs = self.twin, self.edge_rngs[device]
+        comp = twin.comp_edge_ms(task.size, rngs["comp"]) / self.edge_speed[device]
+        start_exec = max(self.edge_free_at[device], now)
+        self.edge_free_at[device] = start_exec + comp
+        iot = twin.iotup_ms(rngs["iot"])
+        store = twin.store_edge_ms(rngs["store"])
         latency = (start_exec - now) + comp + iot + store
         return ExecutionOutcome(
             latency_ms=latency, cost=0.0, cold=False, completion_ms=now + latency,
+            queue_wait_ms=start_exec - now, exec_ms=comp,
         )
+
+    # ------------------------------------------------- vectorized ground truth
+    def execute_many(self, tasks: Sequence[TaskInput],
+                     targets: Sequence[str]) -> ExecutionBatch:
+        """Run one dispatch per (task, target) pair, sampling all ground-truth
+        randomness in batched numpy; returns the struct-of-arrays view.
+
+        Bit-identical to calling ``execute`` once per pair in order: every
+        latency leg has its own RNG stream, and numpy Generators produce the
+        same values whether ``normal``/``lognormal`` are drawn one at a time
+        or as one ``size=n`` block; the arithmetic around each draw keeps the
+        scalar path's operation order. Only the container pool and the
+        per-device FIFO recurrences run sequentially — pure bookkeeping, no
+        model math.
+        """
+        n = len(tasks)
+        spec = self.twin.spec
+        sizes = np.array([t.size for t in tasks])
+        nows = np.array([t.arrival_ms for t in tasks])
+        if spec.size_kind == "pixels":
+            scaled = sizes / 1e6
+        else:
+            scaled = sizes / 32.0 / 1000.0
+
+        # integer-encode targets in one pass: device i -> i, cloud -> -1
+        devmap = {dev: i for i, dev in enumerate(self.edge_names)}
+        dm_get = devmap.get
+        codes = np.array([dm_get(tg, -1) for tg in targets], dtype=np.int64)
+        edge_masks = {dev: codes == i for dev, i in devmap.items()}
+        ci = np.nonzero(codes == -1)[0]
+
+        out = ExecutionBatch(
+            latency_ms=np.empty(n), cost=np.zeros(n),
+            cold=np.zeros(n, dtype=bool), completion_ms=np.empty(n),
+            queue_wait_ms=np.zeros(n), exec_ms=np.empty(n))
+        placed = 0
+
+        # ---- cloud: batch the 4 normals per dispatch (upld, start, comp, store)
+        nc = ci.shape[0]
+        if nc:
+            rngs = self.cloud_rngs
+            cfgs = [targets[i] for i in ci.tolist()]
+            uniq = {c: float(c) for c in set(cfgs)}
+            mem = np.array([uniq[c] for c in cfgs])
+            share = np.minimum(mem, FULL_VCPU_MB) / FULL_VCPU_MB  # cpu_share, vectorized
+            nbytes = np.array([tasks[i].bytes for i in ci.tolist()])
+            upld = (spec.upld_base_ms + nbytes * spec.upld_ms_per_byte) \
+                * rngs["upld"].lognormal(0.0, spec.upld_sigma, nc)
+            zs = rngs["start"].standard_normal(nc)  # scaled per warm/cold below
+            warm_start = np.maximum(spec.warm_mean + spec.warm_std * zs, 1.0)
+            cold_start = np.maximum(spec.cold_mean + spec.cold_std * zs, 1.0)
+            comp = (spec.c0_ms + spec.c1_ms * scaled[ci]) / share \
+                * rngs["comp"].lognormal(0.0, spec.comp_sigma, nc)
+            store = np.maximum(
+                rngs["store"].normal(spec.store_cloud_mean, spec.store_cloud_std, nc), 1.0)
+            zl = self.gt_cloud.rng.standard_normal(nc)
+            t_idl = np.maximum(T_IDL_ACTUAL_MEAN_MS + T_IDL_ACTUAL_STD_MS * zl,
+                               5 * 60e3)
+            # sequential container-pool walk (state only; all draws done
+            # above). Probe+commit fused into one scan per dispatch — reap,
+            # find the most-recently-used idle container, occupy or append —
+            # run per config over parallel float lists (pools are independent
+            # across configs, so grouping preserves each pool's dispatch
+            # order; the lifetime draws stay in global dispatch order).
+            trigger = nows[ci] + upld
+            trig_l = trigger.tolist()
+            comp_l = comp.tolist()
+            warm_l = warm_start.tolist()
+            cold_l = cold_start.tolist()
+            tidl_l = t_idl.tolist()
+            start_l = [0.0] * nc
+            was_cold = [False] * nc
+            pools = self.gt_cloud.pools
+            by_cfg: dict[str, list[int]] = {}
+            for j, cfg in enumerate(cfgs):
+                lst = by_cfg.get(cfg)
+                if lst is None:
+                    lst = by_cfg[cfg] = []
+                lst.append(j)
+            for cfg, js in by_cfg.items():
+                pool = pools.setdefault(cfg, [])
+                busy_l = [c.busy_until for c in pool]
+                last_l = [c.last_completion for c in pool]
+                exp_l = [c.expires_at for c in pool]
+                for j in js:
+                    t = trig_l[j]
+                    best = -1
+                    best_last = -1e308
+                    reap = False
+                    for i in range(len(busy_l)):
+                        if busy_l[i] <= t:
+                            if t <= exp_l[i]:
+                                li = last_l[i]
+                                if li > best_last:
+                                    best_last = li
+                                    best = i
+                            else:
+                                reap = True  # expired idle container
+                    if reap:  # rare (27-min lifetimes): rebuild only when needed
+                        nb: list[float] = []
+                        nl: list[float] = []
+                        ne: list[float] = []
+                        best = -1
+                        best_last = -1e308
+                        for i in range(len(busy_l)):
+                            b, li, e = busy_l[i], last_l[i], exp_l[i]
+                            if b > t or t <= e:
+                                if b <= t and li > best_last:
+                                    best_last = li
+                                    best = len(nb)
+                                nb.append(b)
+                                nl.append(li)
+                                ne.append(e)
+                        busy_l, last_l, exp_l = nb, nl, ne
+                    st = warm_l[j] if best >= 0 else cold_l[j]
+                    busy = st + comp_l[j]
+                    completion_t = t + busy
+                    expiry = completion_t + tidl_l[j]
+                    if best >= 0:
+                        busy_l[best] = completion_t
+                        last_l[best] = completion_t
+                        exp_l[best] = expiry
+                    else:
+                        busy_l.append(completion_t)
+                        last_l.append(completion_t)
+                        exp_l.append(expiry)
+                        was_cold[j] = True
+                    start_l[j] = st
+                pools[cfg] = [GTContainer(b, li, e)
+                              for b, li, e in zip(busy_l, last_l, exp_l)]
+            start = np.asarray(start_l)
+            cost = np.empty(nc)
+            for cfg, fmem in uniq.items():
+                m = mem == fmem
+                cost[m] = self.pricing.cost_batch(comp[m], fmem)
+            latency = upld + start + comp + store
+            out.latency_ms[ci] = latency
+            out.cost[ci] = cost
+            out.cold[ci] = was_cold
+            out.completion_ms[ci] = nows[ci] + latency
+            out.exec_ms[ci] = start + comp
+            placed += nc
+
+        # ---- edge: per-device batched draws + exact FIFO recurrence
+        for dev in self.edge_names:
+            di = np.nonzero(edge_masks[dev])[0]
+            nd = di.shape[0]
+            if nd == 0:
+                continue
+            rngs = self.edge_rngs[dev]
+            comp = (spec.e0_ms + spec.e1_ms * scaled[di]) \
+                * rngs["comp"].lognormal(0.0, spec.edge_sigma, nd) \
+                / self.edge_speed[dev]
+            if spec.iotup_mean > 0:  # matches iotup_ms: no draw when unmodeled
+                iot = np.maximum(
+                    rngs["iot"].normal(spec.iotup_mean, spec.iotup_std, nd), 0.0)
+            else:
+                iot = np.zeros(nd)
+            store = np.maximum(
+                rngs["store"].normal(spec.store_edge_mean, spec.store_edge_std, nd), 1.0)
+            dev_nows = nows[di]
+            start_exec, free = _fifo_starts(self.edge_free_at[dev], dev_nows, comp)
+            self.edge_free_at[dev] = free
+            wait = start_exec - dev_nows
+            latency = wait + comp + iot + store
+            out.latency_ms[di] = latency
+            out.completion_ms[di] = dev_nows + latency
+            out.queue_wait_ms[di] = wait
+            out.exec_ms[di] = comp
+            placed += nd
+
+        assert placed == n  # every dispatch is either a fleet device or cloud
+        return out
 
 
 # -------------------------------------------------------------- the runtime
 class PlacementRuntime:
     """ONE serve loop over any (DecisionEngine, ExecutionBackend) pair.
 
-    ``Simulation`` (twin backend) and ``LivePlacementServer`` (live executor
-    pool) are thin wrappers over this class.
+    Owns one predicted edge-queue horizon per fleet device. ``Simulation``
+    (twin backend) and ``LivePlacementServer`` (live executor pool) are thin
+    wrappers over this class.
     """
 
     def __init__(self, engine: DecisionEngine, backend: ExecutionBackend):
         self.engine = engine
         self.backend = backend
-        self.edge_queue = PredictedEdgeQueue()
+        self.edge_queues = {n: PredictedEdgeQueue() for n in engine.edge_names}
+        # cloud-only runtimes keep a zeroed queue behind the deprecated
+        # ``edge_queue`` alias, matching the attribute's pre-fleet existence
+        self._no_edge_queue = PredictedEdgeQueue()
 
     @property
     def edge_name(self) -> str:
         return self.engine.edge_name
 
+    @property
+    def edge_names(self) -> tuple[str, ...]:
+        return self.engine.edge_names
+
+    @property
+    def edge_queue(self) -> PredictedEdgeQueue:
+        """Deprecated single-edge alias for the first device's queue."""
+        names = self.edge_names
+        return self.edge_queues[names[0]] if names else self._no_edge_queue
+
     def serve(self, tasks: list[TaskInput], batched: bool = True) -> SimulationResult:
         """Place and execute a workload; aggregate the per-task records.
 
         ``batched=True`` (default) runs all component-model predictions in one
-        vectorized pass (``DecisionEngine.place_many``); ``batched=False``
-        interleaves per-task placement and execution. The two paths make
-        identical decisions — placement is non-blocking, so execution never
-        feeds back into decision state.
+        vectorized pass (``DecisionEngine.place_many``) and, when the backend
+        implements ``execute_many``, samples all ground truth in one batched
+        pass too; ``batched=False`` interleaves per-task placement and
+        execution. The two paths produce identical results — placement is
+        non-blocking, so execution never feeds back into decision state, and
+        the twin's batched sampler is bit-identical to its sequential one.
         """
         if batched:
-            decisions = self.engine.place_many(tasks, edge_queue=self.edge_queue)
-            records = [self._run_decision(t, d) for t, d in zip(tasks, decisions)]
+            decisions = self.engine.place_many(tasks, edge_queues=self.edge_queues)
+            records = self._execute_decisions(tasks, decisions)
         else:
             records = [self.step(t) for t in tasks]
         return self.result(records)
@@ -205,39 +532,78 @@ class PlacementRuntime:
     def step(self, task: TaskInput) -> TaskRecord:
         """Place and execute one task (the per-task serve path)."""
         now = task.arrival_ms
-        d = self.engine.place(task, now,
-                              edge_queue_wait_ms=self.edge_queue.wait_ms(now))
-        if d.target == self.edge_name:
-            self.edge_queue.push(now, d.prediction.comp_ms)
-        if d.hedge_target == self.edge_name and d.hedge_prediction is not None:
-            self.edge_queue.push(now, d.hedge_prediction.comp_ms)
+        waits = {n: q.wait_ms(now) for n, q in self.edge_queues.items()}
+        d = self.engine.place(task, now, edge_waits=waits)
+        if d.target in self.edge_queues:
+            self.edge_queues[d.target].push(now, d.prediction.comp_ms)
+        if d.hedge_target is not None and d.hedge_target in self.edge_queues \
+                and d.hedge_prediction is not None:
+            self.edge_queues[d.hedge_target].push(now, d.hedge_prediction.comp_ms)
         return self._run_decision(task, d)
 
     def result(self, records: list[TaskRecord]) -> SimulationResult:
         cons = self.engine.policy.constraints()
+        names = self.edge_names
         return SimulationResult(records=records, deadline_ms=cons.deadline_ms,
-                                c_max=cons.c_max, edge_name=self.edge_name)
+                                c_max=cons.c_max,
+                                edge_name=names[0] if names else self.engine.edge_name,
+                                edge_names=names or None)
 
     # ------------------------------------------------------------------
+    def _execute_decisions(self, tasks: list[TaskInput],
+                           decisions: list[PlacementDecision]) -> list[TaskRecord]:
+        """Execute a placed workload; vectorized when the backend supports it."""
+        if not hasattr(self.backend, "execute_many"):
+            return [self._run_decision(t, d) for t, d in zip(tasks, decisions)]
+        # one dispatch per execution leg, hedge duplicates right after their
+        # primary — the same order the sequential loop executes them in
+        d_tasks: list[TaskInput] = []
+        d_targets: list[str] = []
+        for t, d in zip(tasks, decisions):
+            d_tasks.append(t)
+            d_targets.append(d.target)
+            if d.hedge_target is not None and d.hedge_target != d.target:
+                d_tasks.append(t)
+                d_targets.append(d.hedge_target)
+        outcomes = self.backend.execute_many(d_tasks, d_targets)
+        if isinstance(outcomes, ExecutionBatch):
+            outcomes = outcomes.outcomes()
+        records, j = [], 0
+        for t, d in zip(tasks, decisions):
+            out = outcomes[j]
+            j += 1
+            rec = self._record(t, d, d.target, d.prediction, out)
+            if d.hedge_target is not None and d.hedge_target != d.target:
+                rec = self._merge_hedge(rec, t, d, outcomes[j])
+                j += 1
+            records.append(rec)
+        return records
+
     def _run_decision(self, task: TaskInput, d: PlacementDecision) -> TaskRecord:
         now = task.arrival_ms
         rec = self._record(task, d, d.target, d.prediction,
                            self.backend.execute(task, d.target, now))
         # Hedged duplicate (beyond-paper): first completion wins, both billed.
         if d.hedge_target is not None and d.hedge_target != d.target:
-            backup = d.hedge_prediction
             dup = self.backend.execute(task, d.hedge_target, now)
-            rec = TaskRecord(
-                task=task, target=rec.target,
-                predicted_latency_ms=min(rec.predicted_latency_ms, backup.latency_ms),
-                predicted_cost=rec.predicted_cost + backup.cost,
-                actual_latency_ms=min(rec.actual_latency_ms, dup.latency_ms),
-                actual_cost=rec.actual_cost + dup.cost,
-                predicted_cold=rec.predicted_cold, actual_cold=rec.actual_cold,
-                allowed_cost=rec.allowed_cost, feasible=rec.feasible,
-                completion_ms=min(rec.completion_ms, dup.completion_ms), hedged=True,
-            )
+            rec = self._merge_hedge(rec, task, d, dup)
         return rec
+
+    def _merge_hedge(self, rec: TaskRecord, task: TaskInput,
+                     d: PlacementDecision, dup: ExecutionOutcome) -> TaskRecord:
+        backup = d.hedge_prediction
+        return TaskRecord(
+            task=task, target=rec.target,
+            predicted_latency_ms=min(rec.predicted_latency_ms, backup.latency_ms),
+            predicted_cost=rec.predicted_cost + backup.cost,
+            actual_latency_ms=min(rec.actual_latency_ms, dup.latency_ms),
+            actual_cost=rec.actual_cost + dup.cost,
+            predicted_cold=rec.predicted_cold, actual_cold=rec.actual_cold,
+            allowed_cost=rec.allowed_cost, feasible=rec.feasible,
+            completion_ms=min(rec.completion_ms, dup.completion_ms), hedged=True,
+            queue_wait_ms=rec.queue_wait_ms, exec_ms=rec.exec_ms,
+            hedge_target=d.hedge_target, hedge_exec_ms=dup.exec_ms,
+        )
 
     def _record(self, task: TaskInput, d: PlacementDecision, target: str,
                 pred: Prediction, out: ExecutionOutcome) -> TaskRecord:
@@ -248,4 +614,5 @@ class PlacementRuntime:
             predicted_cold=pred.cold, actual_cold=out.cold,
             allowed_cost=d.allowed_cost, feasible=d.feasible,
             completion_ms=out.completion_ms,
+            queue_wait_ms=out.queue_wait_ms, exec_ms=out.exec_ms,
         )

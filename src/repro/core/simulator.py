@@ -42,8 +42,11 @@ class Simulation:
                  pricing: LambdaPricing | None = None):
         self.twin = twin
         self.engine = engine
+        # fleet engines get one (full-speed) twin executor per device; pass
+        # per-device speeds to TwinBackend directly for heterogeneous twins
         self.backend = TwinBackend(twin, seed=seed, pricing=pricing,
-                                   edge_name=engine.edge_name)
+                                   edge_name=engine.edge_name,
+                                   edge_names=engine.edge_names or None)
         self.runtime = PlacementRuntime(engine=engine, backend=self.backend)
         self.gt_cloud = self.backend.gt_cloud  # back-compat alias
         self.pricing = self.backend.pricing

@@ -135,15 +135,35 @@ class ExecutorPool:
     """The fleet's actual container state (the provider's ground truth).
 
     Containers live/die on the *virtual* clock; work is measured for real.
+    ``edges`` holds one always-resident single-slot executor per edge device
+    (the multi-device generalization; ``edge``/``edge_free_at_ms`` survive as
+    single-device aliases for the first device).
     """
 
     model_cfg: object
     specs: dict[str, SliceSpec]
     t_idl_ms: float = 120_000.0
     containers: dict[str, list[LiveExecutor]] = field(default_factory=dict)
-    edge: LiveExecutor | None = None
-    edge_free_at_ms: float = 0.0
+    edges: dict[str, LiveExecutor] = field(default_factory=dict)
+    edge_free_at: dict[str, float] = field(default_factory=dict)
     _seed: int = 0
+
+    # ------------------------------------- deprecated single-edge conveniences
+    @property
+    def edge(self) -> LiveExecutor | None:
+        return next(iter(self.edges.values()), None)
+
+    @property
+    def edge_names(self) -> tuple[str, ...]:
+        return tuple(self.edges)
+
+    @property
+    def edge_free_at_ms(self) -> float:
+        return self.edge_free_at[next(iter(self.edges))]
+
+    @edge_free_at_ms.setter
+    def edge_free_at_ms(self, value: float) -> None:
+        self.edge_free_at[next(iter(self.edges))] = value
 
     # ------------------------------------------------------------ cloud side
     def _reap(self, name: str, now: float):
@@ -180,26 +200,37 @@ class ExecutorPool:
 
     # ------------------------------------------------------------- edge side
     def execute_edge(self, n_tokens: int, payload_bytes: float,
-                     arrival_ms: float) -> ExecutionRecord:
-        rec = self.edge.execute(n_tokens, payload_bytes)
-        queue = max(self.edge_free_at_ms - arrival_ms, 0.0)
-        self.edge_free_at_ms = arrival_ms + queue + rec.comp_ms
+                     arrival_ms: float, device: str | None = None) -> ExecutionRecord:
+        device = device if device is not None else next(iter(self.edges))
+        rec = self.edges[device].execute(n_tokens, payload_bytes)
+        queue = max(self.edge_free_at[device] - arrival_ms, 0.0)
+        self.edge_free_at[device] = arrival_ms + queue + rec.comp_ms
         rec.queue_ms = queue
         return rec
 
-    def actual_edge_wait(self, arrival_ms: float) -> float:
-        return max(self.edge_free_at_ms - arrival_ms, 0.0)
+    def actual_edge_wait(self, arrival_ms: float, device: str | None = None) -> float:
+        device = device if device is not None else next(iter(self.edges))
+        return max(self.edge_free_at[device] - arrival_ms, 0.0)
 
 
 def make_pool(model_cfg, specs: list[SliceSpec], t_idl_ms: float = 120_000.0,
-              edge_spec: SliceSpec | None = None) -> ExecutorPool:
-    edge_spec = edge_spec or SliceSpec(name="edge", chips=1, is_edge=True)
+              edge_spec: SliceSpec | None = None,
+              edge_specs: list[SliceSpec] | None = None) -> ExecutorPool:
+    """Build the provider-side pool. ``edge_specs`` provisions a multi-device
+    edge fleet (one always-resident executor per device); ``edge_spec`` is the
+    deprecated single-device spelling."""
+    if edge_specs is None:
+        edge_specs = [edge_spec or SliceSpec(name="edge", chips=1, is_edge=True)]
     pool = ExecutorPool(
         model_cfg=model_cfg,
         specs={s.name: s for s in specs if not s.is_edge},
         t_idl_ms=t_idl_ms,
-        edge=LiveExecutor(edge_spec, model_cfg),
+        edges={s.name: LiveExecutor(s, model_cfg) for s in edge_specs},
+        edge_free_at={s.name: 0.0 for s in edge_specs},
     )
-    # the edge's long-lived function is always resident (paper Sec. II-A.2)
-    pool.edge._ensure_compiled()
+    # each edge device's long-lived function is always resident (Sec. II-A.2):
+    # every device pays its own one-time real compile at provisioning, never
+    # during serving
+    for ex in pool.edges.values():
+        ex._ensure_compiled()
     return pool

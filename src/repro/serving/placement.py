@@ -32,6 +32,7 @@ from repro.core.gbrt import GBRT, GBRTConfig
 from repro.core.perf_models import NormalModel, RidgeModel, _norm_ppf
 from repro.core.predictor import (
     EDGE,
+    EdgeFleet,
     Predictor,
     cloud_components_batch,
     edge_components_batch,
@@ -249,8 +250,16 @@ def calibrate_catalog(model_cfg, specs: list[SliceSpec], *,
     )
 
 
+def _edge_fleet_names(n_edge_devices: int) -> list[str]:
+    """Device naming: the single-device fleet keeps the paper's ``edge``."""
+    if n_edge_devices <= 1:
+        return [EDGE]
+    return [f"{EDGE}{i}" for i in range(n_edge_devices)]
+
+
 def build_slice_predictor(cat: SliceCatalog, t_idl_ms: float = 120_000.0,
-                          quantile: float | None = None) -> Predictor:
+                          quantile: float | None = None,
+                          n_edge_devices: int = 1) -> Predictor:
     cloud_targets = [
         SliceTarget(
             name=s.name, chips=s.chips,
@@ -261,9 +270,12 @@ def build_slice_predictor(cat: SliceCatalog, t_idl_ms: float = 120_000.0,
         )
         for s in cat.specs if not s.is_edge
     ]
-    edge = EdgeSliceTarget(comp_model=cat.comp_edge, store_model=cat.store_edge,
-                           comp_std_frac=cat.edge_comp_std_frac)
-    return Predictor(cloud_targets=cloud_targets, edge_target=edge,
+    fleet = EdgeFleet([
+        EdgeSliceTarget(comp_model=cat.comp_edge, store_model=cat.store_edge,
+                        comp_std_frac=cat.edge_comp_std_frac, name=name)
+        for name in _edge_fleet_names(n_edge_devices)
+    ])
+    return Predictor(cloud_targets=cloud_targets, edge_fleet=fleet,
                      cil=ContainerInfoList(t_idl_ms=t_idl_ms),
                      quantile=quantile)
 
@@ -274,7 +286,8 @@ class LiveBackend:
 
     Every ``execute`` runs genuine compiled steps: cloud dispatches bill
     slice-seconds and may pay a real XLA compile (cold start); edge dispatches
-    are free and queue on the single-slot FIFO edge executor.
+    are free and queue on their device's single-slot FIFO executor — the pool
+    may hold a whole fleet of edge executors, one per device name.
     """
 
     def __init__(self, pool: ExecutorPool, pricing: SlicePricing,
@@ -283,30 +296,47 @@ class LiveBackend:
         self.pricing = pricing
         self.edge_name = edge_name
 
+    @property
+    def edge_names(self) -> tuple[str, ...]:
+        return self.pool.edge_names
+
     def probe_cold(self, target: str, now: float) -> bool:
         return self.pool.probe_cold(target, now)
 
     def execute(self, task: TaskInput, target: str, now: float) -> ExecutionOutcome:
-        if target == self.edge_name:
-            rec = self.pool.execute_edge(int(task.size), task.bytes, now)
+        if target in self.pool.edges:
+            rec = self.pool.execute_edge(int(task.size), task.bytes, now,
+                                         device=target)
             return ExecutionOutcome(latency_ms=rec.total_ms, cost=0.0,
-                                    cold=False, completion_ms=now + rec.total_ms)
+                                    cold=False, completion_ms=now + rec.total_ms,
+                                    queue_wait_ms=rec.queue_ms, exec_ms=rec.comp_ms)
         cold = self.pool.probe_cold(target, now)
         rec = self.pool.execute_cloud(target, int(task.size), task.bytes, now)
         chips = self.pool.specs[target].chips
         return ExecutionOutcome(latency_ms=rec.total_ms,
                                 cost=self.pricing.cost(rec.comp_ms, chips),
-                                cold=cold, completion_ms=now + rec.total_ms)
+                                cold=cold, completion_ms=now + rec.total_ms,
+                                exec_ms=rec.start_ms + rec.comp_ms)
 
 
 def make_live_runtime(cat: SliceCatalog, policy: Policy,
                       t_idl_ms: float = 120_000.0,
-                      quantile: float | None = None) -> PlacementRuntime:
+                      quantile: float | None = None,
+                      n_edge_devices: int = 1) -> PlacementRuntime:
     """Wire a calibrated catalog into the unified serve loop: catalog →
-    Predictor → DecisionEngine → ``PlacementRuntime`` over a ``LiveBackend``."""
+    Predictor → DecisionEngine → ``PlacementRuntime`` over a ``LiveBackend``.
+
+    ``n_edge_devices > 1`` provisions a fleet of always-resident edge
+    executors (named ``edge0..``), so the live prototype serves fleets with
+    the same balancer-driven placement as the twin."""
+    edge_specs = [SliceSpec(name, chips=EDGE_SPEC.chips,
+                            tokens_per_step=EDGE_SPEC.tokens_per_step,
+                            is_edge=True)
+                  for name in _edge_fleet_names(n_edge_devices)]
     pool = make_pool(cat.model_cfg, [s for s in cat.specs if not s.is_edge],
-                     t_idl_ms=t_idl_ms, edge_spec=EDGE_SPEC)
-    predictor = build_slice_predictor(cat, t_idl_ms=t_idl_ms, quantile=quantile)
+                     t_idl_ms=t_idl_ms, edge_specs=edge_specs)
+    predictor = build_slice_predictor(cat, t_idl_ms=t_idl_ms, quantile=quantile,
+                                      n_edge_devices=n_edge_devices)
     engine = DecisionEngine(predictor=predictor, policy=policy, edge_name=EDGE)
     return PlacementRuntime(engine=engine, backend=LiveBackend(pool, cat.pricing))
 

@@ -1,0 +1,370 @@
+"""Multi-edge fleet invariants (ISSUE 2).
+
+Covers:
+- ``EdgeFleet`` construction, replication, and validation;
+- batched ``place_many`` vs per-task ``step`` decision equality on a 3-device
+  fleet, and the full serve-loop batched/stepwise bitwise equivalence
+  (decisions AND vectorized twin execution);
+- ``TwinBackend.execute_many`` bitwise parity with the sequential ``execute``
+  loop, including hedged duplicate dispatches;
+- per-device RNG stream isolation: adding a device never perturbs another
+  device's ground-truth draws (regression for the shared-stream coupling);
+- balancers: least-predicted-wait beats round-robin on skewed arrivals, and
+  both beat nothing — plus unit behavior of all three balancers;
+- the deprecated single-edge ``Simulation`` wrapper still produces identical
+  results to the fleet-of-one runtime;
+- per-device utilization / queue-wait summaries on ``SimulationResult``;
+- the batched GBRT path routed through the Pallas kernel agrees with the
+  numpy tree walk (ROADMAP item).
+"""
+
+from __future__ import annotations
+
+import numpy as np
+import pytest
+
+import repro.core.predictor as predictor_mod
+from repro.core.decision import (
+    DecisionEngine,
+    HedgedPolicy,
+    LeastPredictedWaitBalancer,
+    MinCostPolicy,
+    MinLatencyPolicy,
+    RandomBalancer,
+    RoundRobinBalancer,
+)
+from repro.core.fit import build_fleet_predictor, build_predictor, fit_app
+from repro.core.predictor import EdgeFleet
+from repro.core.runtime import PlacementRuntime, TwinBackend, edge_stream_key
+from repro.core.simulator import Simulation
+from repro.core.workload import BurstyWorkload
+
+CONFIGS = (1280, 1536, 1792)
+N_TASKS = 200
+FLEET = {"edge0": 1.0, "edge1": 1.0, "edge2": 0.6}
+NAMES = tuple(FLEET)
+
+
+@pytest.fixture(scope="module")
+def fd_setup():
+    return fit_app("FD", seed=0, n_inputs=120, configs=CONFIGS)
+
+
+@pytest.fixture(scope="module")
+def ir_setup():
+    return fit_app("IR", seed=0, n_inputs=120, configs=CONFIGS)
+
+
+def _fleet_runtime(twin, models, c_max=2.97e-5, alpha=0.02, balancer=None,
+                   seed=11):
+    pred = build_fleet_predictor(models, dict(FLEET), configs=CONFIGS)
+    kwargs = {"balancer": balancer} if balancer is not None else {}
+    eng = DecisionEngine(predictor=pred,
+                         policy=MinLatencyPolicy(c_max=c_max, alpha=alpha),
+                         **kwargs)
+    backend = TwinBackend(twin, seed=seed, edge_names=NAMES, edge_speed=FLEET)
+    return PlacementRuntime(eng, backend)
+
+
+# ----------------------------------------------------------------- EdgeFleet
+def test_edge_fleet_validation(fd_setup):
+    _, models = fd_setup
+    base = build_predictor(models, configs=CONFIGS)
+    template = base.edge_target
+    fleet = EdgeFleet.replicate(template, 3, speeds={"edge2": 0.5})
+    assert fleet.names == ("edge0", "edge1", "edge2")
+    assert "edge1" in fleet and len(fleet) == 3
+    # the slow device predicts proportionally longer compute
+    t = 2.0e6
+    assert fleet["edge2"].comp_model.predict(t) == pytest.approx(
+        2.0 * fleet["edge0"].comp_model.predict(t))
+
+    with pytest.raises(ValueError, match="duplicate"):
+        EdgeFleet([template, template])
+
+    class NotEdge:
+        name = "x"
+        is_edge = False
+
+    with pytest.raises(ValueError, match="is_edge"):
+        EdgeFleet([NotEdge()])
+
+
+def test_fleet_arbitrary_device_names(fd_setup):
+    """Heterogeneous fleets may use real device names, not just edge0..N."""
+    twin, models = fd_setup
+    devices = {"hub": 1.0, "cam-a": 0.5}
+    pred = build_fleet_predictor(models, devices, configs=CONFIGS)
+    assert pred.edge_names == ("hub", "cam-a")
+    eng = DecisionEngine(predictor=pred,
+                         policy=MinLatencyPolicy(c_max=0.0, alpha=0.0))
+    backend = TwinBackend(twin, seed=3, edge_names=tuple(devices),
+                          edge_speed=devices)
+    res = PlacementRuntime(eng, backend).serve(twin.workload(30, seed=1))
+    assert set(res.configs_used()) <= {"hub", "cam-a"}
+    assert res.n_edge == 30
+
+
+def test_cloud_only_runtime_edge_queue_alias(fd_setup):
+    """The deprecated ``edge_queue`` alias must not crash without a fleet."""
+    _, models = fd_setup
+    from repro.core.predictor import Predictor
+
+    base = build_predictor(models, configs=CONFIGS)
+    pred = Predictor(cloud_targets=base.cloud_targets)
+    eng = DecisionEngine(predictor=pred, policy=MinCostPolicy(deadline_ms=1e9))
+
+    class _NullBackend:
+        def probe_cold(self, target, now):
+            return False
+
+        def execute(self, task, target, now):
+            from repro.core.runtime import ExecutionOutcome
+
+            return ExecutionOutcome(1.0, 0.0, False, now + 1.0)
+
+    rt = PlacementRuntime(eng, _NullBackend())
+    assert rt.edge_queue.horizon_ms == 0.0
+    from repro.core.workload import TaskInput
+
+    res = rt.serve([TaskInput(idx=0, arrival_ms=0.0, size=1.0, bytes=1.0)])
+    assert res.n == 1
+
+
+def test_predictor_rejects_fleet_and_target(fd_setup):
+    _, models = fd_setup
+    base = build_predictor(models, configs=CONFIGS)
+    from repro.core.predictor import Predictor
+
+    with pytest.raises(ValueError, match="not both"):
+        Predictor(cloud_targets=base.cloud_targets,
+                  edge_target=base.edge_target,
+                  edge_fleet=EdgeFleet.single(base.edge_target))
+
+
+# ------------------------------------------- decision + execution equivalence
+def test_fleet_place_many_matches_step(ir_setup):
+    """Batched and per-task serve paths must make identical decisions on a
+    3-device fleet — including which device the balancer nominated."""
+    twin, models = ir_setup
+    tasks = twin.workload(N_TASKS, seed=2)
+
+    batched = _fleet_runtime(twin, models).serve(tasks, batched=True)
+    stepwise = _fleet_runtime(twin, models).serve(tasks, batched=False)
+
+    assert [r.target for r in batched.records] == \
+        [r.target for r in stepwise.records]
+    # bitwise: the vectorized twin sampler consumes the same RNG streams
+    assert batched.total_actual_cost == stepwise.total_actual_cost
+    assert batched.avg_actual_latency_ms == stepwise.avg_actual_latency_ms
+    assert [r.queue_wait_ms for r in batched.records] == \
+        [r.queue_wait_ms for r in stepwise.records]
+
+
+def test_execute_many_bitwise_equals_execute_loop(ir_setup):
+    twin, models = ir_setup
+    tasks = twin.workload(N_TASKS, seed=3)
+    eng = DecisionEngine(
+        predictor=build_fleet_predictor(models, dict(FLEET), configs=CONFIGS),
+        policy=MinLatencyPolicy(c_max=3e-6, alpha=0.02))
+    targets = [d.target for d in eng.place_many(tasks)]
+    assert len({t for t in targets if t in FLEET}) >= 2  # fleet actually used
+    assert any(t not in FLEET for t in targets)          # cloud used too
+
+    b_seq = TwinBackend(twin, seed=5, edge_names=NAMES, edge_speed=FLEET)
+    outs = [b_seq.execute(t, tg, t.arrival_ms) for t, tg in zip(tasks, targets)]
+    b_vec = TwinBackend(twin, seed=5, edge_names=NAMES, edge_speed=FLEET)
+    batch = b_vec.execute_many(tasks, targets)
+    assert len(batch) == len(outs)
+    assert outs == batch.outcomes()
+    assert outs[0] == batch[0]
+    assert b_seq.edge_free_at == b_vec.edge_free_at
+
+
+def test_hedged_fleet_serve_batched_equals_stepwise(fd_setup):
+    """Hedged duplicates are executed in the same order on both paths."""
+    twin, models = fd_setup
+    tasks = twin.workload(150, seed=5)
+
+    def run(batched):
+        pred = build_fleet_predictor(models, dict(FLEET), configs=CONFIGS)
+        policy = HedgedPolicy(MinLatencyPolicy(c_max=8e-5, alpha=0.0),
+                              hedge_threshold_ms=1500.0)
+        eng = DecisionEngine(predictor=pred, policy=policy)
+        backend = TwinBackend(twin, seed=17, edge_names=NAMES, edge_speed=FLEET)
+        return PlacementRuntime(eng, backend).serve(tasks, batched=batched)
+
+    a, b = run(True), run(False)
+    assert sum(r.hedged for r in a.records) > 0
+    assert [r.target for r in a.records] == [r.target for r in b.records]
+    assert a.total_actual_cost == b.total_actual_cost
+    assert a.avg_actual_latency_ms == b.avg_actual_latency_ms
+    # hedge legs are visible to the per-device load metrics
+    hedged_on_fleet = [r for r in a.records if r.hedge_target in FLEET]
+    if hedged_on_fleet:
+        summaries = a.device_summaries()
+        dev = hedged_on_fleet[0].hedge_target
+        n_primary = sum(1 for r in a.records if r.target == dev)
+        assert summaries[dev].n_tasks > n_primary
+
+
+# -------------------------------------------------------- RNG stream isolation
+def test_adding_device_never_perturbs_another_devices_draws(ir_setup):
+    """Regression: per-device RNG streams are keyed by (seed, crc32(name)),
+    so ground truth on device A is identical under any fleet composition."""
+    twin, _ = ir_setup
+    tasks = twin.workload(30, seed=6)
+    two = TwinBackend(twin, seed=9, edge_names=("edge0", "edge1"))
+    three = TwinBackend(twin, seed=9, edge_names=("edge0", "edge1", "edge2"))
+    outs_two = [two.execute(t, "edge0", t.arrival_ms) for t in tasks]
+    outs_three = [three.execute(t, "edge0", t.arrival_ms) for t in tasks]
+    assert outs_two == outs_three
+
+
+def test_edge_stream_key_stable():
+    assert edge_stream_key("edge0") == edge_stream_key("edge0")
+    assert edge_stream_key("edge0") != edge_stream_key("edge1")
+
+
+# ----------------------------------------------------------------- balancers
+def test_balancer_units():
+    names = ("a", "b", "c")
+    waits = {"a": 5.0, "b": 0.0, "c": 9.0}
+    assert LeastPredictedWaitBalancer().pick(names, waits, {}) == "b"
+    # ties break by fleet order
+    assert LeastPredictedWaitBalancer().pick(names, {}, {}) == "a"
+    rr = RoundRobinBalancer()
+    assert [rr.pick(names, waits, {}) for _ in range(4)] == ["a", "b", "c", "a"]
+    r1 = RandomBalancer(seed=3)
+    r2 = RandomBalancer(seed=3)
+    picks = [r1.pick(names, waits, {}) for _ in range(20)]
+    assert picks == [r2.pick(names, waits, {}) for _ in range(20)]
+    assert set(picks) == set(names)
+
+
+def test_least_wait_beats_round_robin_on_skewed_arrivals(ir_setup):
+    twin, models = ir_setup
+    tasks = BurstyWorkload(rate_per_s=4.0, size_sampler=twin.sample_input,
+                           burst_multiplier=6.0, mean_quiet_s=15.0,
+                           mean_burst_s=6.0, seed=7).generate(1200)
+    lpw = _fleet_runtime(twin, models, c_max=2e-6,
+                         balancer=LeastPredictedWaitBalancer()).serve(tasks)
+    rr = _fleet_runtime(twin, models, c_max=2e-6,
+                        balancer=RoundRobinBalancer()).serve(tasks)
+    assert lpw.avg_actual_latency_ms < rr.avg_actual_latency_ms
+    assert lpw.p99_actual_latency_ms < rr.p99_actual_latency_ms
+
+
+def test_fleet_beats_single_edge_on_skewed_arrivals(ir_setup):
+    twin, models = ir_setup
+    tasks = BurstyWorkload(rate_per_s=4.0, size_sampler=twin.sample_input,
+                           burst_multiplier=6.0, mean_quiet_s=15.0,
+                           mean_burst_s=6.0, seed=7).generate(1200)
+    fleet = _fleet_runtime(twin, models, c_max=2e-6).serve(tasks)
+    pred = build_predictor(models, configs=CONFIGS)
+    eng = DecisionEngine(predictor=pred,
+                         policy=MinLatencyPolicy(c_max=2e-6, alpha=0.02))
+    single = PlacementRuntime(eng, TwinBackend(twin, seed=11)).serve(tasks)
+    assert fleet.avg_actual_latency_ms < single.avg_actual_latency_ms
+
+
+# ------------------------------------------------- single-edge back-compat
+def test_single_edge_simulation_wrapper_identical(fd_setup):
+    """The deprecated ``Simulation`` wrapper (one edge device) must produce
+    results identical to the fleet-of-one runtime built explicitly."""
+    twin, models = fd_setup
+    tasks = twin.workload(100, seed=8)
+
+    eng1 = DecisionEngine(predictor=build_predictor(models, configs=CONFIGS),
+                          policy=MinCostPolicy(deadline_ms=4500.0))
+    res1 = Simulation(twin, eng1, seed=13).run(tasks)
+
+    pred = build_predictor(models, configs=CONFIGS)
+    fleet_of_one = EdgeFleet.single(pred.edge_target)
+    from repro.core.predictor import Predictor
+
+    pred2 = Predictor(cloud_targets=pred.cloud_targets, edge_fleet=fleet_of_one,
+                      cil=type(pred.cil)(t_idl_ms=pred.cil.t_idl_ms))
+    eng2 = DecisionEngine(predictor=pred2, policy=MinCostPolicy(deadline_ms=4500.0))
+    res2 = PlacementRuntime(eng2, TwinBackend(twin, seed=13)).serve(tasks)
+
+    assert [r.target for r in res1.records] == [r.target for r in res2.records]
+    assert res1.total_actual_cost == res2.total_actual_cost
+    assert res1.avg_actual_latency_ms == res2.avg_actual_latency_ms
+
+
+def test_simulation_wrapper_supports_fleet_engines(fd_setup):
+    """The deprecated wrapper provisions one twin executor per fleet device
+    (full speed) instead of crashing on unknown device names."""
+    twin, models = fd_setup
+    tasks = twin.workload(40, seed=14)
+    eng = DecisionEngine(
+        predictor=build_fleet_predictor(models, 3, configs=CONFIGS),
+        policy=MinLatencyPolicy(c_max=0.0, alpha=0.0))
+    res = Simulation(twin, eng, seed=13).run(tasks)
+    assert res.n_edge == 40
+    assert res.configs_used() <= {"edge0", "edge1", "edge2"}
+
+
+# ------------------------------------------------------ per-device summaries
+def test_device_summaries(ir_setup):
+    twin, models = ir_setup
+    tasks = BurstyWorkload(rate_per_s=4.0, size_sampler=twin.sample_input,
+                           burst_multiplier=6.0, seed=9).generate(600)
+    res = _fleet_runtime(twin, models, c_max=0.0, alpha=0.0).serve(tasks)
+    assert res.n_edge == res.n  # zero budget: everything on the fleet
+    summaries = res.device_summaries()
+    assert set(summaries) == set(NAMES)
+    assert sum(s.n_tasks for s in summaries.values()) == res.n
+    for s in summaries.values():
+        assert s.n_tasks > 0
+        assert 0.0 < s.utilization <= 1.0
+        assert s.queue_wait_p99_ms >= s.queue_wait_p50_ms >= 0.0
+        assert s.queue_wait_mean_ms >= 0.0
+    assert res.makespan_ms > 0
+    table = res.device_table()
+    for name in NAMES:
+        assert name in table
+
+
+# ------------------------------------------------------ GBRT kernel routing
+def test_gbrt_kernel_batched_path_matches_numpy(fd_setup, monkeypatch):
+    """``predict_batch`` routed through the Pallas GBRT kernel must agree
+    with the numpy tree walk (f32 kernel → small tolerance)."""
+    jax = pytest.importorskip("jax")  # noqa: F841
+    twin, models = fd_setup
+    tasks = twin.workload(64, seed=10)
+
+    pred_np = build_predictor(models, configs=CONFIGS)
+    monkeypatch.setattr(predictor_mod, "GBRT_KERNEL_MODE", "off")
+    batch_np = pred_np.predict_batch(tasks)
+
+    pred_k = build_predictor(models, configs=CONFIGS)
+    monkeypatch.setattr(predictor_mod, "GBRT_KERNEL_MODE", "force")
+    batch_k = pred_k.predict_batch(tasks)
+
+    for name in batch_np.cloud:
+        np.testing.assert_allclose(batch_k.cloud[name].warm["comp"],
+                                   batch_np.cloud[name].warm["comp"],
+                                   rtol=1e-4, atol=1e-4)
+        np.testing.assert_allclose(batch_k.cloud[name].warm_latency,
+                                   batch_np.cloud[name].warm_latency,
+                                   rtol=1e-4, atol=1e-3)
+
+
+def test_gbrt_kernel_auto_mode_uses_numpy_on_cpu(fd_setup, monkeypatch):
+    """On a non-TPU backend, auto mode must fall back to the numpy walk and
+    preserve exact scalar/batch decision parity."""
+    twin, models = fd_setup
+    tasks = twin.workload(40, seed=11)
+    monkeypatch.setattr(predictor_mod, "GBRT_KERNEL_MODE", "auto")
+    monkeypatch.setattr(predictor_mod, "GBRT_KERNEL_MIN_BATCH", 1)
+    pred = build_predictor(models, configs=CONFIGS)
+    batch = pred.predict_batch(tasks)
+    pred2 = build_predictor(models, configs=CONFIGS)
+    for i, task in enumerate(tasks):
+        per = pred2.predict(task, task.arrival_ms)
+        bat = pred.predict_at(batch, i, task.arrival_ms)
+        for name in per:
+            np.testing.assert_allclose(bat[name].latency_ms,
+                                       per[name].latency_ms, rtol=1e-12)
