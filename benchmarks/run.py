@@ -2,15 +2,44 @@
 
 Prints each table (human-readable) and finishes with the canonical
 ``name,us_per_call,derived`` CSV. ``--reduced`` trims data-collection sizes
-for quick runs; ``--only t3,t5`` selects modules.
+for quick runs; ``--only t3,t5`` selects modules; ``--json <path>`` also
+writes the rows as machine-readable JSON (``BENCH_runtime.json`` in CI — the
+perf trajectory consumed by dashboards and regression tooling).
 """
 
 from __future__ import annotations
 
 import argparse
+import json
+import re
 import sys
 import time
 import traceback
+
+
+def write_json(sink, path: str, smoke: bool, reduced: bool) -> None:
+    """Dump the sink's rows as ``{scenario: {us_per_call, speedup?, derived}}``.
+
+    ``speedup`` is parsed out of the derived field (``speedup=12.3x``) when a
+    benchmark reported one, so perf floors are first-class numbers.
+    """
+    rows = {}
+    for name, us, derived in sink.rows:
+        row = {"us_per_call": round(us, 3), "derived": derived}
+        m = re.search(r"speedup=([0-9.]+)x", derived)
+        if m:
+            row["speedup"] = float(m.group(1))
+        rows[name] = row
+    payload = {
+        "schema": "bench_runtime/v1",
+        "smoke": smoke,
+        "reduced": reduced,
+        "rows": rows,
+    }
+    with open(path, "w") as f:
+        json.dump(payload, f, indent=2, sort_keys=True)
+        f.write("\n")
+    print(f"(json → {path}: {len(rows)} rows)")
 
 
 def main() -> int:
@@ -22,8 +51,12 @@ def main() -> int:
     p.add_argument("--skip-live", action="store_true",
                    help="skip the real-compile live prototype (t5)")
     p.add_argument("--smoke", action="store_true",
-                   help="seconds-long fleet perf smoke (CI): vectorized twin "
-                        "execution + fleet-vs-single-edge scenario only")
+                   help="seconds-long fleet perf smoke (CI): columnar "
+                        "decisions, array-native serve, vectorized twin "
+                        "execution + fleet-vs-single-edge scenario")
+    p.add_argument("--json", default="",
+                   help="also write results as JSON to this path "
+                        "(BENCH_runtime.json in CI)")
     args = p.parse_args()
 
     from benchmarks import common
@@ -38,6 +71,8 @@ def main() -> int:
         bench_runtime.run_smoke(sink)
         print(f"\n# smoke wall: {time.time() - t0:.1f}s")
         print(sink.dump())
+        if args.json:
+            write_json(sink, args.json, smoke=True, reduced=common.REDUCED)
         return 0
 
     from benchmarks import (
@@ -92,6 +127,8 @@ def main() -> int:
 
     print(f"\n# total wall: {time.time()-t0:.1f}s")
     print(sink.dump())
+    if args.json:
+        write_json(sink, args.json, smoke=False, reduced=common.REDUCED)
     if failures:
         print(f"\nFAILED benchmarks: {failures}", file=sys.stderr)
         return 1

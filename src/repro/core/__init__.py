@@ -28,6 +28,7 @@ from repro.core.gbrt import GBRT, GBRTConfig
 from repro.core.cil import ContainerInfoList, ContainerRecord
 from repro.core.predictor import EdgeFleet, Predictor, Prediction, PredictionBatch
 from repro.core.decision import (
+    DecisionBatch,
     DecisionEngine,
     EdgeBalancer,
     HedgedPolicy,
@@ -42,9 +43,11 @@ from repro.core.decision import (
     RoundRobinBalancer,
 )
 from repro.core.workload import BurstyWorkload, PoissonWorkload, TaskInput
-from repro.core.records import DeviceSummary, SimulationResult, TaskRecord
+from repro.core.records import DeviceSummary, RecordBatch, SimulationResult, TaskRecord
+from repro.core.recurrence import fifo_starts
 from repro.core.runtime import (
     ExecutionBackend,
+    ExecutionBatch,
     ExecutionOutcome,
     GroundTruthCloud,
     PlacementRuntime,
@@ -74,6 +77,7 @@ __all__ = [
     "Predictor",
     "Prediction",
     "PredictionBatch",
+    "DecisionBatch",
     "DecisionEngine",
     "HedgedPolicy",
     "MinCostPolicy",
@@ -84,9 +88,12 @@ __all__ = [
     "PredictedEdgeQueue",
     "PoissonWorkload",
     "TaskInput",
+    "RecordBatch",
     "SimulationResult",
     "TaskRecord",
     "ExecutionBackend",
+    "ExecutionBatch",
+    "fifo_starts",
     "ExecutionOutcome",
     "GroundTruthCloud",
     "PlacementRuntime",

@@ -98,6 +98,36 @@ class GBRT:
             )
         return float(out[0]) if scalar else out
 
+    def predict_const1(self, x0: np.ndarray, c: float) -> np.ndarray:
+        """Fast path for 2-feature models whose feature 1 is fixed at ``c``.
+
+        The serving pipeline evaluates the compute GBRT over (size, memory_mb)
+        with ONE memory value per cloud target, so for a fixed ``c`` every
+        feature-1 predicate is a constant and the whole ensemble collapses to
+        a step function of feature 0. The table is built once per (model, c)
+        by running the ordinary tree walk at one representative point per
+        threshold segment — predictions are therefore BIT-IDENTICAL to
+        ``predict`` (identical leaf paths, identical accumulation order) at a
+        searchsorted's cost instead of a 150-tree walk per row.
+        """
+        key = float(c)
+        cache = self.__dict__.setdefault("_const1_tables", {})
+        tab = cache.get(key)
+        if tab is None:
+            # segment boundaries: every finite feature-0 threshold. Predicates
+            # are ``x > thr`` (right), so values are constant on (b_{i-1}, b_i]
+            # and b_i is an exact representative; +inf represents the last
+            # open segment (x > every finite threshold).
+            mask = (self.features == 0) & np.isfinite(self.thresholds)
+            breaks = np.unique(self.thresholds[mask])
+            reps = np.concatenate([breaks, [np.inf]])
+            pts = np.stack([reps, np.full(reps.shape[0], key)], axis=1)
+            tab = (breaks, self.predict(pts))
+            cache[key] = tab
+        breaks, vals = tab
+        return vals[np.searchsorted(breaks, np.asarray(x0, np.float64),
+                                    side="left")]
+
     def predict_jax(self, x):
         """jit-able jnp prediction path. ``x``: (n, d) array."""
         import jax.numpy as jnp

@@ -63,18 +63,30 @@ GBRT_KERNEL_MODE = "auto"
 GBRT_KERNEL_MIN_BATCH = 4096
 
 
-def _tpu_backend() -> bool:
-    try:
-        import jax
+_TPU_BACKEND: bool | None = None
 
-        return jax.default_backend() == "tpu"
-    except Exception:
-        return False
+
+def _tpu_backend() -> bool:
+    """Cached TPU-backend probe — importing jax costs ~0.7 s, so the serving
+    path must only ever pay it once per process."""
+    global _TPU_BACKEND
+    if _TPU_BACKEND is None:
+        try:
+            import jax
+
+            _TPU_BACKEND = jax.default_backend() == "tpu"
+        except Exception:
+            _TPU_BACKEND = False
+    return _TPU_BACKEND
 
 
 def gbrt_batch_predict(model, feats: np.ndarray) -> np.ndarray:
-    """Batched GBRT evaluation: Pallas ensemble kernel when it pays off,
-    vectorized numpy tree walk as the always-available fallback."""
+    """Batched GBRT evaluation: Pallas ensemble kernel when it pays off, the
+    constant-feature step-function table for the serving pipeline's
+    (size, memory_mb)-with-fixed-memory calls, vectorized numpy tree walk as
+    the always-available fallback. All three are decision-equivalent; the
+    table path is bit-identical to the tree walk (see ``GBRT.predict_const1``).
+    """
     mode = GBRT_KERNEL_MODE
     if (mode != "off" and hasattr(model, "thresholds")
             and (mode == "force"
@@ -86,6 +98,11 @@ def gbrt_batch_predict(model, feats: np.ndarray) -> np.ndarray:
         except Exception:
             if mode == "force":
                 raise
+    if (hasattr(model, "predict_const1") and feats.ndim == 2
+            and feats.shape[1] == 2 and feats.shape[0] >= 64
+            and np.all(feats[:, 1] == feats[0, 1])):
+        return np.asarray(model.predict_const1(feats[:, 0], float(feats[0, 1])),
+                          dtype=np.float64)
     return np.asarray(model.predict(feats), dtype=np.float64)
 
 

@@ -1,16 +1,24 @@
-"""Per-task records and aggregate results of a placement run.
+"""Per-task records and aggregate results of a placement run — columnar.
 
-``TaskRecord`` pairs the Decision Engine's *predicted* view of one task
-(latency, cost, warm/cold) with the execution substrate's *actual* outcome;
-``SimulationResult`` aggregates a run's records into the paper's reported
-metrics (Tables III-V). Both are substrate-agnostic: the same types describe
-an event-driven simulation against the AWS twin and a live prototype run over
-real executors (see ``repro.core.runtime``).
+``RecordBatch`` is the struct-of-arrays home of a run's outcomes: one float64
+column per field instead of N ``TaskRecord`` objects, which is what keeps
+million-task serves practical (no per-task object churn, metrics computed as
+array reductions). ``TaskRecord`` survives as the lazy per-task view —
+``batch[i]`` materializes one on demand, so existing per-record consumers keep
+working unchanged.
+
+``SimulationResult`` aggregates a run's batch into the paper's reported
+metrics (Tables III-V), all evaluated on the arrays. Both types are
+substrate-agnostic: the same columns describe an event-driven simulation
+against the AWS twin and a live prototype run over real executors (see
+``repro.core.runtime``).
 """
 
 from __future__ import annotations
 
-from dataclasses import dataclass
+from dataclasses import dataclass, field
+from functools import cached_property
+from typing import Iterator, Sequence
 
 import numpy as np
 
@@ -41,6 +49,143 @@ class TaskRecord:
         return self.target != "edge" and self.predicted_cold != self.actual_cold
 
 
+@dataclass(eq=False)
+class RecordBatch(Sequence):
+    """Struct-of-arrays form of N ``TaskRecord``s (the columnar record path).
+
+    ``target_codes`` indexes into ``target_names``; ``hedge_codes`` uses the
+    same table with ``-1`` meaning "no hedge". Indexing or iterating yields
+    lazy ``TaskRecord`` views; metrics should use the arrays directly.
+    """
+
+    tasks: list[TaskInput]
+    target_codes: np.ndarray        # (n,) int64 — index into target_names
+    target_names: tuple[str, ...]
+    predicted_latency_ms: np.ndarray
+    predicted_cost: np.ndarray
+    actual_latency_ms: np.ndarray
+    actual_cost: np.ndarray
+    predicted_cold: np.ndarray      # bool
+    actual_cold: np.ndarray         # bool
+    allowed_cost: np.ndarray
+    feasible: np.ndarray            # bool
+    completion_ms: np.ndarray
+    hedged: np.ndarray              # bool
+    queue_wait_ms: np.ndarray
+    exec_ms: np.ndarray
+    hedge_codes: np.ndarray         # (n,) int64, -1 = no hedge
+    hedge_exec_ms: np.ndarray
+
+    # ------------------------------------------------------------ construction
+    @classmethod
+    def empty(cls) -> "RecordBatch":
+        z = np.zeros(0)
+        zb = np.zeros(0, dtype=bool)
+        zi = np.zeros(0, dtype=np.int64)
+        return cls(tasks=[], target_codes=zi, target_names=(),
+                   predicted_latency_ms=z, predicted_cost=z,
+                   actual_latency_ms=z, actual_cost=z,
+                   predicted_cold=zb, actual_cold=zb,
+                   allowed_cost=z, feasible=zb, completion_ms=z,
+                   hedged=zb, queue_wait_ms=z, exec_ms=z,
+                   hedge_codes=zi, hedge_exec_ms=z)
+
+    @classmethod
+    def from_records(cls, records: Sequence[TaskRecord]) -> "RecordBatch":
+        """Columnarize a list of per-task records (the object-path adapter)."""
+        if isinstance(records, cls):
+            return records
+        records = list(records)
+        if not records:
+            return cls.empty()
+        names = dict.fromkeys(r.target for r in records)
+        names.update(dict.fromkeys(
+            r.hedge_target for r in records if r.hedge_target is not None))
+        table = tuple(names)
+        code = {nm: i for i, nm in enumerate(table)}
+        return cls(
+            tasks=[r.task for r in records],
+            target_codes=np.array([code[r.target] for r in records], np.int64),
+            target_names=table,
+            predicted_latency_ms=np.array([r.predicted_latency_ms for r in records]),
+            predicted_cost=np.array([r.predicted_cost for r in records]),
+            actual_latency_ms=np.array([r.actual_latency_ms for r in records]),
+            actual_cost=np.array([r.actual_cost for r in records]),
+            predicted_cold=np.array([r.predicted_cold for r in records], bool),
+            actual_cold=np.array([r.actual_cold for r in records], bool),
+            allowed_cost=np.array([r.allowed_cost for r in records]),
+            feasible=np.array([r.feasible for r in records], bool),
+            completion_ms=np.array([r.completion_ms for r in records]),
+            hedged=np.array([r.hedged for r in records], bool),
+            queue_wait_ms=np.array([r.queue_wait_ms for r in records]),
+            exec_ms=np.array([r.exec_ms for r in records]),
+            hedge_codes=np.array(
+                [code[r.hedge_target] if r.hedge_target is not None else -1
+                 for r in records], np.int64),
+            hedge_exec_ms=np.array([r.hedge_exec_ms for r in records]),
+        )
+
+    # ------------------------------------------------------------- sequence API
+    def __len__(self) -> int:
+        return self.target_codes.shape[0]
+
+    def __bool__(self) -> bool:
+        return len(self) > 0
+
+    def __getitem__(self, i):
+        if isinstance(i, slice):
+            return [self[j] for j in range(*i.indices(len(self)))]
+        i = int(i)
+        hc = int(self.hedge_codes[i])
+        return TaskRecord(
+            task=self.tasks[i],
+            target=self.target_names[int(self.target_codes[i])],
+            predicted_latency_ms=float(self.predicted_latency_ms[i]),
+            predicted_cost=float(self.predicted_cost[i]),
+            actual_latency_ms=float(self.actual_latency_ms[i]),
+            actual_cost=float(self.actual_cost[i]),
+            predicted_cold=bool(self.predicted_cold[i]),
+            actual_cold=bool(self.actual_cold[i]),
+            allowed_cost=float(self.allowed_cost[i]),
+            feasible=bool(self.feasible[i]),
+            completion_ms=float(self.completion_ms[i]),
+            hedged=bool(self.hedged[i]),
+            queue_wait_ms=float(self.queue_wait_ms[i]),
+            exec_ms=float(self.exec_ms[i]),
+            hedge_target=self.target_names[hc] if hc >= 0 else None,
+            hedge_exec_ms=float(self.hedge_exec_ms[i]),
+        )
+
+    def __iter__(self) -> Iterator[TaskRecord]:
+        for i in range(len(self)):
+            yield self[i]
+
+    # ------------------------------------------------------------- array views
+    @cached_property
+    def arrival_ms(self) -> np.ndarray:
+        return np.array([t.arrival_ms for t in self.tasks])
+
+    @property
+    def targets(self) -> np.ndarray:
+        """Per-row target names as an object array (diagnostics, benches)."""
+        return np.array(self.target_names, dtype=object)[self.target_codes] \
+            if self.target_names else np.empty(0, dtype=object)
+
+    def code_of(self, name: str) -> int:
+        """Code for ``name`` in this batch's table, -1 if never used."""
+        try:
+            return self.target_names.index(name)
+        except ValueError:
+            return -1
+
+    def target_mask(self, names: set[str] | frozenset[str]) -> np.ndarray:
+        """Boolean mask of rows whose target is in ``names`` (vectorized)."""
+        table = np.array([nm in names for nm in self.target_names], bool)
+        if table.shape[0] == 0:
+            return np.zeros(len(self), bool)
+        return table[self.target_codes]
+
+
 @dataclass(frozen=True)
 class DeviceSummary:
     """Per-device load view of a fleet run (imbalance, not just aggregates)."""
@@ -55,11 +200,22 @@ class DeviceSummary:
 
 @dataclass
 class SimulationResult:
-    records: list[TaskRecord]
+    """Aggregate metrics of one serve/simulation run, computed on arrays.
+
+    ``records`` accepts either a ``RecordBatch`` (the columnar serve path) or
+    a plain ``list[TaskRecord]`` (live/per-task paths, hand-built tests); the
+    list form is columnarized on construction.
+    """
+
+    records: RecordBatch | list[TaskRecord] = field(default_factory=list)
     deadline_ms: float | None = None
     c_max: float | None = None
     edge_name: str = "edge"
     edge_names: tuple[str, ...] | None = None  # fleet devices (None = single)
+
+    def __post_init__(self):
+        if not isinstance(self.records, RecordBatch):
+            self.records = RecordBatch.from_records(self.records)
 
     # ------------------------------------------------------------- totals
     @property
@@ -68,11 +224,11 @@ class SimulationResult:
 
     @property
     def total_actual_cost(self) -> float:
-        return sum(r.actual_cost for r in self.records)
+        return float(np.sum(self.records.actual_cost))
 
     @property
     def total_predicted_cost(self) -> float:
-        return sum(r.predicted_cost for r in self.records)
+        return float(np.sum(self.records.predicted_cost))
 
     @property
     def cost_error_pct(self) -> float:
@@ -81,11 +237,11 @@ class SimulationResult:
 
     @property
     def avg_actual_latency_ms(self) -> float:
-        return float(np.mean([r.actual_latency_ms for r in self.records]))
+        return float(np.mean(self.records.actual_latency_ms))
 
     @property
     def avg_predicted_latency_ms(self) -> float:
-        return float(np.mean([r.predicted_latency_ms for r in self.records]))
+        return float(np.mean(self.records.predicted_latency_ms))
 
     @property
     def latency_error_pct(self) -> float:
@@ -94,34 +250,35 @@ class SimulationResult:
 
     @property
     def p95_actual_latency_ms(self) -> float:
-        return float(np.percentile([r.actual_latency_ms for r in self.records], 95))
+        return float(np.percentile(self.records.actual_latency_ms, 95))
 
     @property
     def p99_actual_latency_ms(self) -> float:
-        return float(np.percentile([r.actual_latency_ms for r in self.records], 99))
+        return float(np.percentile(self.records.actual_latency_ms, 99))
 
     # ------------------------------------------------- deadline (min-cost)
     @property
     def pct_deadline_violated(self) -> float:
         if self.deadline_ms is None:
             return 0.0
-        v = [r for r in self.records if r.actual_latency_ms > self.deadline_ms]
-        return len(v) / max(self.n, 1) * 100.0
+        v = int(np.count_nonzero(self.records.actual_latency_ms > self.deadline_ms))
+        return v / max(self.n, 1) * 100.0
 
     @property
     def avg_violation_ms(self) -> float:
         if self.deadline_ms is None:
             return 0.0
-        v = [r.actual_latency_ms - self.deadline_ms for r in self.records
-             if r.actual_latency_ms > self.deadline_ms]
-        return float(np.mean(v)) if v else 0.0
+        lat = self.records.actual_latency_ms
+        over = lat[lat > self.deadline_ms]
+        return float(np.mean(over - self.deadline_ms)) if over.size else 0.0
 
     # ---------------------------------------------------- budget (min-lat)
     @property
     def pct_cost_violated(self) -> float:
-        v = [r for r in self.records
-             if np.isfinite(r.allowed_cost) and r.actual_cost > r.allowed_cost + 1e-15]
-        return len(v) / max(self.n, 1) * 100.0
+        allowed = self.records.allowed_cost
+        v = int(np.count_nonzero(
+            np.isfinite(allowed) & (self.records.actual_cost > allowed + 1e-15)))
+        return v / max(self.n, 1) * 100.0
 
     @property
     def pct_budget_used(self) -> float:
@@ -131,15 +288,20 @@ class SimulationResult:
 
     @property
     def n_warm_cold_mismatches(self) -> int:
-        return sum(1 for r in self.records if r.warm_cold_mismatch)
+        r = self.records
+        edge = set(self.edge_names) if self.edge_names else {self.edge_name}
+        non_edge = ~r.target_mask(edge)
+        return int(np.count_nonzero(
+            non_edge & (r.predicted_cold != r.actual_cold)))
 
     @property
     def n_edge(self) -> int:
         edge = set(self.edge_names) if self.edge_names else {self.edge_name}
-        return sum(1 for r in self.records if r.target in edge)
+        return int(np.count_nonzero(self.records.target_mask(edge)))
 
     def configs_used(self) -> set[str]:
-        return {r.target for r in self.records}
+        r = self.records
+        return {r.target_names[c] for c in np.unique(r.target_codes).tolist()}
 
     # ------------------------------------------------- per-device (fleet) view
     @property
@@ -147,8 +309,8 @@ class SimulationResult:
         """First arrival to last completion — the run's wall-clock horizon."""
         if not self.records:
             return 0.0
-        t0 = min(r.task.arrival_ms for r in self.records)
-        t1 = max(r.completion_ms for r in self.records)
+        t0 = float(np.min(self.records.arrival_ms))
+        t1 = float(np.max(self.records.completion_ms))
         return max(t1 - t0, 0.0)
 
     def device_summaries(self) -> dict[str, DeviceSummary]:
@@ -162,15 +324,17 @@ class SimulationResult:
         """
         devices = self.edge_names if self.edge_names else (self.edge_name,)
         span = self.makespan_ms
+        r = self.records
         out: dict[str, DeviceSummary] = {}
         for dev in devices:
-            recs = [r for r in self.records if r.target == dev]
-            hedges = [r for r in self.records if r.hedge_target == dev]
-            waits = np.array([r.queue_wait_ms for r in recs]) if recs else np.zeros(1)
-            busy = sum(r.exec_ms for r in recs) + sum(r.hedge_exec_ms for r in hedges)
+            code = r.code_of(dev)
+            mask = r.target_codes == code if code >= 0 else np.zeros(len(r), bool)
+            hmask = r.hedge_codes == code if code >= 0 else np.zeros(len(r), bool)
+            waits = r.queue_wait_ms[mask] if mask.any() else np.zeros(1)
+            busy = float(np.sum(r.exec_ms[mask])) + float(np.sum(r.hedge_exec_ms[hmask]))
             out[dev] = DeviceSummary(
                 device=dev,
-                n_tasks=len(recs) + len(hedges),
+                n_tasks=int(np.count_nonzero(mask)) + int(np.count_nonzero(hmask)),
                 utilization=busy / span if span > 0 else 0.0,
                 queue_wait_mean_ms=float(np.mean(waits)),
                 queue_wait_p50_ms=float(np.percentile(waits, 50)),

@@ -49,10 +49,16 @@ from repro.core.apps import (
     T_IDL_ACTUAL_MEAN_MS,
     T_IDL_ACTUAL_STD_MS,
 )
-from repro.core.decision import DecisionEngine, PlacementDecision, PredictedEdgeQueue
+from repro.core.decision import (
+    DecisionBatch,
+    DecisionEngine,
+    PlacementDecision,
+    PredictedEdgeQueue,
+)
 from repro.core.predictor import Prediction
 from repro.core.pricing import LambdaPricing
-from repro.core.records import SimulationResult, TaskRecord
+from repro.core.records import RecordBatch, SimulationResult, TaskRecord
+from repro.core.recurrence import fifo_starts
 from repro.core.workload import TaskInput
 
 
@@ -129,44 +135,9 @@ CLOUD_LEGS = ("upld", "start", "comp", "store")
 EDGE_LEGS = ("comp", "iot", "store")
 
 
-def _fifo_starts(free: float, nows: np.ndarray,
-                 comp: np.ndarray) -> tuple[np.ndarray, float]:
-    """Execution start times on one single-slot FIFO executor.
-
-    Bitwise-identical to the scalar recurrence ``start_j = max(F, now_j);
-    F = start_j + comp_j``: between idle periods the busy horizon is a plain
-    running sum, and ``np.cumsum`` accumulates in the same sequential order,
-    so each busy segment is one vectorized pass. Falls back to the scalar
-    loop if the device goes idle many times (quiet workloads — cheap anyway).
-    """
-    nd = nows.shape[0]
-    start = np.empty(nd)
-    pos = 0
-    segments = 0
-    while pos < nd and segments < 32:
-        segments += 1
-        f_trial = np.cumsum(np.concatenate(([free], comp[pos:])))
-        viol = np.nonzero(nows[pos:] > f_trial[:-1])[0]
-        if viol.size == 0:  # never idle again: the trial horizon is exact
-            start[pos:] = f_trial[:-1]
-            return start, float(f_trial[-1])
-        k = int(viol[0])  # first idle gap: horizon resets to the arrival
-        if k:
-            start[pos:pos + k] = f_trial[:k]
-        j = pos + k
-        s = float(nows[j])
-        start[j] = s
-        free = s + float(comp[j])
-        pos = j + 1
-    if pos < nd:  # many idle periods: scalar recurrence for the tail
-        nows_l = nows[pos:].tolist()
-        comp_l = comp[pos:].tolist()
-        for j in range(nd - pos):
-            now_j = nows_l[j]
-            s = free if free > now_j else now_j
-            start[pos + j] = s
-            free = s + comp_l[j]
-    return start, float(free)
+# The FIFO-start recurrence moved to ``repro.core.recurrence`` so the columnar
+# decision core can share it; the old private name stays importable.
+_fifo_starts = fifo_starts
 
 
 # ----------------------------------------------------------------- twin side
@@ -514,13 +485,17 @@ class PlacementRuntime:
     def serve(self, tasks: list[TaskInput], batched: bool = True) -> SimulationResult:
         """Place and execute a workload; aggregate the per-task records.
 
-        ``batched=True`` (default) runs all component-model predictions in one
-        vectorized pass (``DecisionEngine.place_many``) and, when the backend
-        implements ``execute_many``, samples all ground truth in one batched
-        pass too; ``batched=False`` interleaves per-task placement and
-        execution. The two paths produce identical results — placement is
-        non-blocking, so execution never feeds back into decision state, and
-        the twin's batched sampler is bit-identical to its sequential one.
+        ``batched=True`` (default) runs the columnar serve path: one
+        vectorized prediction pass, the columnar decision core
+        (``DecisionEngine.place_many`` → ``DecisionBatch``) and, when the
+        backend implements ``execute_many``, one batched ground-truth pass
+        whose outcome arrays land directly in a ``RecordBatch`` — array-native
+        from prediction to result. ``batched=False`` interleaves per-task
+        placement and execution. The two paths produce identical results —
+        placement is non-blocking, so execution never feeds back into decision
+        state; the columnar decision core is bit-identical to the per-task
+        walk (speculate-and-repair, see ``repro.core.decision``); and the
+        twin's batched sampler is bit-identical to its sequential one.
         """
         if batched:
             decisions = self.engine.place_many(tasks, edge_queues=self.edge_queues)
@@ -541,7 +516,7 @@ class PlacementRuntime:
             self.edge_queues[d.hedge_target].push(now, d.hedge_prediction.comp_ms)
         return self._run_decision(task, d)
 
-    def result(self, records: list[TaskRecord]) -> SimulationResult:
+    def result(self, records: "RecordBatch | list[TaskRecord]") -> SimulationResult:
         cons = self.engine.policy.constraints()
         names = self.edge_names
         return SimulationResult(records=records, deadline_ms=cons.deadline_ms,
@@ -550,9 +525,26 @@ class PlacementRuntime:
                                 edge_names=names or None)
 
     # ------------------------------------------------------------------
-    def _execute_decisions(self, tasks: list[TaskInput],
-                           decisions: list[PlacementDecision]) -> list[TaskRecord]:
-        """Execute a placed workload; vectorized when the backend supports it."""
+    def _execute_decisions(self, tasks: list[TaskInput], decisions,
+                           ) -> "RecordBatch | list[TaskRecord]":
+        """Execute a placed workload; vectorized when the backend supports it.
+
+        A columnar ``DecisionBatch`` against a vectorized backend never leaves
+        array land: decisions flow into ``execute_many`` and the outcome
+        arrays zip straight into a ``RecordBatch`` — no ``PlacementDecision``,
+        ``ExecutionOutcome`` or ``TaskRecord`` objects anywhere on the path.
+        List decisions (hedged/custom policies, per-task backends) take the
+        per-record path unchanged.
+        """
+        if isinstance(decisions, DecisionBatch):
+            if hasattr(self.backend, "execute_many"):
+                eb = self.backend.execute_many(tasks, decisions.target_list())
+                if isinstance(eb, ExecutionBatch):
+                    return self._record_batch(tasks, decisions, eb)
+                return [self._record(t, d, d.target, d.prediction, o)
+                        for t, d, o in zip(tasks, decisions, eb)]
+            # per-task backend: iterate the lazy decision views
+            return [self._run_decision(t, d) for t, d in zip(tasks, decisions)]
         if not hasattr(self.backend, "execute_many"):
             return [self._run_decision(t, d) for t, d in zip(tasks, decisions)]
         # one dispatch per execution leg, hedge duplicates right after their
@@ -578,6 +570,30 @@ class PlacementRuntime:
                 j += 1
             records.append(rec)
         return records
+
+    def _record_batch(self, tasks: list[TaskInput], d: DecisionBatch,
+                      eb: ExecutionBatch) -> RecordBatch:
+        """Zip decision and outcome arrays into the columnar record store."""
+        n = len(d)
+        return RecordBatch(
+            tasks=tasks,
+            target_codes=d.target_codes,
+            target_names=d.names,
+            predicted_latency_ms=d.latency_ms,
+            predicted_cost=d.cost,
+            actual_latency_ms=eb.latency_ms,
+            actual_cost=eb.cost,
+            predicted_cold=d.cold,
+            actual_cold=eb.cold,
+            allowed_cost=d.allowed_cost,
+            feasible=d.feasible,
+            completion_ms=eb.completion_ms,
+            hedged=np.zeros(n, dtype=bool),  # columnar policies never hedge
+            queue_wait_ms=eb.queue_wait_ms,
+            exec_ms=eb.exec_ms,
+            hedge_codes=np.full(n, -1, dtype=np.int64),
+            hedge_exec_ms=np.zeros(n),
+        )
 
     def _run_decision(self, task: TaskInput, d: PlacementDecision) -> TaskRecord:
         now = task.arrival_ms

@@ -19,13 +19,14 @@ from __future__ import annotations
 from repro.core.decision import DecisionEngine
 from repro.core.apps import AWSTwin
 from repro.core.pricing import LambdaPricing
-from repro.core.records import SimulationResult, TaskRecord
+from repro.core.records import RecordBatch, SimulationResult, TaskRecord
 from repro.core.runtime import GroundTruthCloud, GTContainer, PlacementRuntime, TwinBackend
 from repro.core.workload import TaskInput
 
 __all__ = [
     "GTContainer",
     "GroundTruthCloud",
+    "RecordBatch",
     "Simulation",
     "SimulationResult",
     "TaskRecord",

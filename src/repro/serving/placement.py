@@ -13,7 +13,12 @@ the same Predictor / CIL / Decision Engine — ``repro.core`` is target-agnostic
 - ``LiveBackend`` implements the ``repro.core.runtime.ExecutionBackend``
   contract over the real executor pool: ``execute(task, target, now)`` runs a
   genuine compiled execution and bills slice-seconds; ``probe_cold`` asks the
-  pool whether a dispatch would pay a real XLA compile;
+  pool whether a dispatch would pay a real XLA compile. The columnar decision
+  core still drives it — ``place_many`` hands the runtime a struct-of-arrays
+  ``DecisionBatch`` and the runtime materializes one lazy
+  ``PlacementDecision`` view per dispatch (real executions are inherently
+  per-task, so there is no ``execute_many`` here); results aggregate into the
+  same columnar ``RecordBatch``-backed ``SimulationResult`` as the twin;
 - ``make_live_runtime`` wires catalog → predictor → Decision Engine →
   ``PlacementRuntime`` over a ``LiveBackend``: the SAME serve loop as the
   simulator, against real executions (paper Sec. VI-B analog — Table V falls
@@ -38,7 +43,11 @@ from repro.core.predictor import (
     edge_components_batch,
 )
 from repro.core.pricing import SlicePricing
-from repro.core.records import SimulationResult, TaskRecord  # noqa: F401 — re-export
+from repro.core.records import (  # noqa: F401 — re-export
+    RecordBatch,
+    SimulationResult,
+    TaskRecord,
+)
 from repro.core.runtime import ExecutionOutcome, PlacementRuntime
 from repro.core.workload import PoissonWorkload, TaskInput
 from repro.serving.executors import ExecutorPool, LiveExecutor, SliceSpec, make_pool

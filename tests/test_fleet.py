@@ -1,4 +1,4 @@
-"""Multi-edge fleet invariants (ISSUE 2).
+"""Multi-edge fleet invariants (ISSUE 2) + columnar decision core (ISSUE 3).
 
 Covers:
 - ``EdgeFleet`` construction, replication, and validation;
@@ -368,3 +368,200 @@ def test_gbrt_kernel_auto_mode_uses_numpy_on_cpu(fd_setup, monkeypatch):
         for name in per:
             np.testing.assert_allclose(bat[name].latency_ms,
                                        per[name].latency_ms, rtol=1e-12)
+
+
+# ------------------------------------------- columnar core (ISSUE 3)
+import repro.core.decision as decision_mod
+from repro.core.decision import DecisionBatch, MinLatencyPolicy as _MLP
+from repro.core.records import RecordBatch
+
+
+def _columnar_vs_step(twin, models, tasks, policy_factory, *, seed=11,
+                      balancer_factory=None, fleet=True):
+    """Serve the same workload batched-columnar and stepwise; return both
+    results plus the columnar engine (for stats) after asserting the full
+    decision stream is bit-identical."""
+    def run(batched):
+        if fleet:
+            pred = build_fleet_predictor(models, dict(FLEET), configs=CONFIGS)
+            backend = TwinBackend(twin, seed=seed, edge_names=NAMES,
+                                  edge_speed=FLEET)
+        else:
+            pred = build_predictor(models, configs=CONFIGS)
+            backend = TwinBackend(twin, seed=seed)
+        kwargs = {}
+        if balancer_factory is not None:
+            kwargs["balancer"] = balancer_factory()
+        eng = DecisionEngine(predictor=pred, policy=policy_factory(), **kwargs)
+        return PlacementRuntime(eng, backend).serve(tasks, batched=batched), eng
+
+    (a, eng_a), (b, eng_b) = run(True), run(False)
+    assert isinstance(a.records, RecordBatch)
+    assert [r.target for r in a.records] == [r.target for r in b.records]
+    assert [r.allowed_cost for r in a.records] == \
+        [r.allowed_cost for r in b.records]
+    assert [r.predicted_cold for r in a.records] == \
+        [r.predicted_cold for r in b.records]
+    assert [r.feasible for r in a.records] == [r.feasible for r in b.records]
+    assert [r.queue_wait_ms for r in a.records] == \
+        [r.queue_wait_ms for r in b.records]
+    assert a.total_actual_cost == b.total_actual_cost
+    assert a.avg_actual_latency_ms == b.avg_actual_latency_ms
+    return a, b, eng_a
+
+
+def test_columnar_surplus_crosses_budget_mid_chunk(ir_setup, monkeypatch):
+    """Alg. 1's bank: with a sub-cloud budget and α > 0 the surplus accrues
+    until a cloud config becomes affordable mid-chunk — the speculated
+    frozen-allowed choice is wrong there and must be repaired, bit-exactly."""
+    monkeypatch.setattr(decision_mod, "COLUMNAR_CHUNK", 64)
+    twin, models = ir_setup
+    tasks = twin.workload(400, seed=21)
+    # c_max below every cloud cost; the bank alone opens the cloud door
+    a, _, eng = _columnar_vs_step(twin, models, tasks,
+                                  lambda: _MLP(c_max=4e-6, alpha=0.9))
+    assert eng.columnar_stats is not None
+    assert eng.columnar_stats["repairs"] + eng.columnar_stats["walked"] > 0, \
+        "scenario must actually exercise the repair/fallback path"
+    used = {r.target for r in a.records}
+    assert any(t not in FLEET for t in used), "cloud must eventually open"
+    assert any(t in FLEET for t in used)
+
+
+def test_columnar_cil_flips_warm_to_cold_mid_chunk(fd_setup, monkeypatch):
+    """A short container lifetime expires warm state *between* arrivals inside
+    one chunk: the speculated warm latency flips cold and must be repaired."""
+    monkeypatch.setattr(decision_mod, "COLUMNAR_CHUNK", 256)
+    twin, models = fd_setup
+    from repro.core.cil import ContainerInfoList
+    tasks = twin.workload(300, seed=22)
+
+    def run(batched):
+        pred = build_fleet_predictor(models, dict(FLEET), configs=CONFIGS)
+        # lifetime shorter than typical arrival gaps: warm windows keep closing
+        pred.cil = ContainerInfoList(t_idl_ms=400.0)
+        eng = DecisionEngine(predictor=pred,
+                             policy=MinLatencyPolicy(c_max=8e-5, alpha=0.02))
+        backend = TwinBackend(twin, seed=23, edge_names=NAMES, edge_speed=FLEET)
+        res = PlacementRuntime(eng, backend).serve(tasks, batched=batched)
+        return res, eng
+
+    (a, eng), (b, _) = run(True), run(False)
+    assert [r.target for r in a.records] == [r.target for r in b.records]
+    assert [r.predicted_cold for r in a.records] == \
+        [r.predicted_cold for r in b.records]
+    assert a.total_actual_cost == b.total_actual_cost
+    colds = [r.predicted_cold for r in a.records if r.target not in FLEET]
+    assert True in colds and False in colds, \
+        "the CIL must actually flip warm/cold inside the workload"
+
+
+def test_columnar_bursty_fleet_forces_repair_segments(ir_setup, monkeypatch):
+    """Bursty arrivals on an edge-first budget: queue growth keeps flipping
+    the edge/cloud choice, forcing many repair segments (and, when they get
+    dense, the scalar-on-arrays fallback) — all bit-identical to step."""
+    monkeypatch.setattr(decision_mod, "COLUMNAR_CHUNK", 128)
+    twin, models = ir_setup
+    tasks = BurstyWorkload(rate_per_s=4.0, size_sampler=twin.sample_input,
+                           burst_multiplier=8.0, mean_quiet_s=10.0,
+                           mean_burst_s=6.0, seed=31).generate(1500)
+    a, _, eng = _columnar_vs_step(twin, models, tasks,
+                                  lambda: _MLP(c_max=6e-6, alpha=0.05))
+    stats = eng.columnar_stats
+    assert stats["repairs"] >= 5, f"expected many repair segments, got {stats}"
+    used = {r.target for r in a.records}
+    assert any(t in FLEET for t in used) and any(t not in FLEET for t in used)
+
+
+def test_columnar_round_robin_and_random_balancers(ir_setup):
+    """Wait-independent balancers ride the columnar path via precomputed
+    nomination sequences — including their consumed state (RR index, RNG)."""
+    twin, models = ir_setup
+    tasks = twin.workload(250, seed=24)
+    for factory in (RoundRobinBalancer, lambda: RandomBalancer(seed=5)):
+        a, b, eng = _columnar_vs_step(twin, models, tasks,
+                                      lambda: _MLP(c_max=2e-6, alpha=0.01),
+                                      balancer_factory=factory)
+        assert isinstance(eng.columnar_stats, dict)
+        devs = {r.target for r in a.records if r.target in FLEET}
+        assert len(devs) >= 2  # the balancer actually spread the load
+
+
+def test_columnar_single_edge_and_mincost(fd_setup):
+    """Fleet-of-one + MinCost: the columnar kernels cover the paper's exact
+    configuration (including the infeasible→edge-queue fallback rows)."""
+    twin, models = fd_setup
+    tasks = twin.workload(300, seed=25)
+    a, _, eng = _columnar_vs_step(twin, models, tasks,
+                                  lambda: MinCostPolicy(deadline_ms=2500.0),
+                                  fleet=False)
+    assert eng.columnar_stats is not None
+    assert False in [r.feasible for r in a.records], \
+        "deadline must actually be violated somewhere"
+
+
+def test_columnar_falls_back_for_custom_policy(fd_setup):
+    """Hedged (or any non-paper) policy must take the per-task walk — and
+    place_many then returns plain PlacementDecision objects."""
+    twin, models = fd_setup
+    tasks = twin.workload(50, seed=26)
+    pred = build_fleet_predictor(models, dict(FLEET), configs=CONFIGS)
+    eng = DecisionEngine(
+        predictor=pred,
+        policy=HedgedPolicy(MinLatencyPolicy(c_max=8e-5, alpha=0.0),
+                            hedge_threshold_ms=1500.0))
+    decisions = eng.place_many(tasks)
+    assert isinstance(decisions, list)
+    assert not isinstance(decisions, DecisionBatch)
+
+
+def test_columnar_decision_batch_views_and_memory_optin(ir_setup):
+    """DecisionBatch lazily materializes PlacementDecision views; decision
+    recording stays opt-in on the batched path too."""
+    twin, models = ir_setup
+    tasks = twin.workload(60, seed=27)
+    pred = build_fleet_predictor(models, dict(FLEET), configs=CONFIGS)
+    eng = DecisionEngine(predictor=pred, policy=_MLP(c_max=2e-6, alpha=0.0))
+    batch = eng.place_many(tasks)
+    assert isinstance(batch, DecisionBatch)
+    assert eng.decisions == []  # opt-in recording: nothing accumulated
+    d0 = batch[0]
+    assert d0.task_idx == 0 and d0.target in batch.names
+    assert d0.prediction.components  # lazy component dict materializes
+    assert len(batch.target_list()) == len(tasks) == len(batch)
+
+    eng_rec = DecisionEngine(predictor=build_fleet_predictor(
+        models, dict(FLEET), configs=CONFIGS),
+        policy=_MLP(c_max=2e-6, alpha=0.0), record_decisions=True)
+    eng_rec.place_many(tasks)
+    assert len(eng_rec.decisions) == len(tasks)
+
+
+def test_columnar_unsorted_arrivals_fall_back_to_walk(fd_setup):
+    """Out-of-order arrival times must take the per-task walk: the walk's
+    per-task cil.reap(now) at a far-future task permanently drops expired
+    containers before earlier-timed tasks are decided, which the columnar
+    snapshot cannot replicate. Parity is with the step path, as always."""
+    from repro.core.cil import ContainerInfoList
+    twin, models = fd_setup
+    tasks = twin.workload(60, seed=28)
+    # interleave far-future arrivals so time jumps back and forth
+    for i, t in enumerate(tasks):
+        if i % 5 == 2:
+            t.arrival_ms += 1e6
+
+    def run(batched):
+        pred = build_fleet_predictor(models, dict(FLEET), configs=CONFIGS)
+        pred.cil = ContainerInfoList(t_idl_ms=5000.0)
+        eng = DecisionEngine(predictor=pred,
+                             policy=MinLatencyPolicy(c_max=8e-5, alpha=0.02))
+        backend = TwinBackend(twin, seed=29, edge_names=NAMES, edge_speed=FLEET)
+        res = PlacementRuntime(eng, backend).serve(tasks, batched=batched)
+        return res, eng
+
+    (a, eng), (b, _) = run(True), run(False)
+    assert eng.columnar_stats is None  # columnar declined: walk was used
+    assert [r.target for r in a.records] == [r.target for r in b.records]
+    assert [r.predicted_cold for r in a.records] == \
+        [r.predicted_cold for r in b.records]
+    assert a.total_actual_cost == b.total_actual_cost

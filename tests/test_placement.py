@@ -165,12 +165,21 @@ def test_predictor_cold_then_warm_roundtrip():
 
 
 def test_engine_place_records_decision():
+    """Decision recording is opt-in: a long-running serve must not accumulate
+    every PlacementDecision forever (ISSUE 3 memory fix)."""
     tgt = _StubTarget("m", latency=10.0, cost=1.0)
     edge = _StubTarget("edge", latency=1000.0, cost=0.0, is_edge=True)
     pred = Predictor(cloud_targets=[tgt], edge_target=edge)
-    eng = DecisionEngine(predictor=pred, policy=MinLatencyPolicy(c_max=5.0))
+    eng = DecisionEngine(predictor=pred, policy=MinLatencyPolicy(c_max=5.0),
+                         record_decisions=True)
     task = TaskInput(idx=7, arrival_ms=0.0, size=1.0, bytes=1.0)
     d = eng.place(task, now=0.0)
     assert d.task_idx == 7
     assert d.target == "m"
     assert len(eng.decisions) == 1
+
+    eng_off = DecisionEngine(predictor=Predictor(cloud_targets=[tgt],
+                                                 edge_target=edge),
+                             policy=MinLatencyPolicy(c_max=5.0))
+    eng_off.place(task, now=0.0)
+    assert eng_off.decisions == []  # default: no unbounded growth

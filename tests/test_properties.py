@@ -71,6 +71,60 @@ def test_min_cost_choice_is_optimal(costs, deadline):
         assert preds[name].cost == min(p.cost for p in feas.values())
 
 
+# ------------------------------------------------ FIFO segment recurrence
+def _fifo_scalar(free, nows, comp):
+    """The reference scalar recurrence: start = max(F, now); F = start + comp."""
+    starts = []
+    for now, c in zip(nows, comp):
+        s = free if free > now else now
+        starts.append(s)
+        free = s + c
+    return starts, free
+
+
+@given(
+    free=st.floats(min_value=0.0, max_value=1e5),
+    gaps=st.lists(st.floats(min_value=0.0, max_value=1e5), min_size=1,
+                  max_size=120),
+    comps=st.data(),
+)
+@settings(max_examples=100, deadline=None)
+def test_fifo_starts_equals_scalar_recurrence(free, gaps, comps):
+    """``fifo_starts`` must be BIT-identical to the scalar FIFO recurrence on
+    arbitrary arrival/compute streams — the parity guarantee the batched twin
+    sampler, the predicted edge queues, and the columnar decision core all
+    build on. Large gaps force many idle segments, covering the >32-segment
+    scalar-tail path."""
+    from repro.core.recurrence import fifo_starts
+
+    nows = np.cumsum(np.asarray(gaps))
+    comp = np.asarray(comps.draw(st.lists(
+        st.floats(min_value=0.0, max_value=1e4),
+        min_size=len(gaps), max_size=len(gaps))))
+    starts_v, free_v = fifo_starts(free, nows, comp)
+    starts_s, free_s = _fifo_scalar(free, nows.tolist(), comp.tolist())
+    assert starts_v.tolist() == starts_s
+    assert free_v == free_s
+
+
+def test_fifo_starts_scalar_tail_past_32_idle_segments():
+    """Deterministic cover for the >32-segment fallback: 50 arrivals, each
+    after the previous completion, is 50 idle periods — one per task."""
+    from repro.core.recurrence import fifo_starts
+
+    nows = np.arange(50, dtype=np.float64) * 100.0
+    comp = np.full(50, 1.0)
+    starts_v, free_v = fifo_starts(0.0, nows, comp)
+    starts_s, free_s = _fifo_scalar(0.0, nows.tolist(), comp.tolist())
+    assert starts_v.tolist() == starts_s and free_v == free_s
+    # and a mixed busy/idle stream crossing the segment limit
+    nows2 = np.cumsum(np.tile([500.0, 0.1, 0.1], 40))
+    comp2 = np.tile([5.0, 5.0, 5.0], 40)
+    starts_v, free_v = fifo_starts(3.0, nows2, comp2)
+    starts_s, free_s = _fifo_scalar(3.0, nows2.tolist(), comp2.tolist())
+    assert starts_v.tolist() == starts_s and free_v == free_s
+
+
 # ------------------------------------------------------------ CIL properties
 @given(
     events=st.lists(

@@ -72,7 +72,8 @@ def test_place_many_matches_place_loop(fd_setup):
     tasks = twin.workload(N_TASKS, seed=2)
 
     eng_loop = DecisionEngine(predictor=build_predictor(models, configs=CONFIGS),
-                              policy=MinLatencyPolicy(c_max=2.97e-5, alpha=0.02))
+                              policy=MinLatencyPolicy(c_max=2.97e-5, alpha=0.02),
+                              record_decisions=True)
     queue = PredictedEdgeQueue()
     for t in tasks:
         d = eng_loop.place(t, t.arrival_ms,
@@ -266,7 +267,7 @@ def test_hedged_run_bills_duplicates_end_to_end(fd_setup):
     policy = HedgedPolicy(MinLatencyPolicy(c_max=c_max, alpha=0.0),
                           hedge_threshold_ms=1500.0)
     eng = DecisionEngine(predictor=build_predictor(models, configs=CONFIGS),
-                         policy=policy)
+                         policy=policy, record_decisions=True)
     res = PlacementRuntime(eng, TwinBackend(twin, seed=17)).serve(tasks)
 
     n_hedged = sum(r.hedged for r in res.records)
