@@ -26,7 +26,16 @@ seconds for CI; ``--json`` writes the machine-readable ``BENCH_runtime.json``):
    least-predicted-wait balancing must beat round-robin, and the fleet must
    beat the single-edge configuration on mean end-to-end latency. Per-device
    utilization/queue-wait summaries show the balance.
-5. **million** — the 1M-task columnar scenario (full runs only): previously
+5. **async-overlap** — the live event-driven driver (ISSUE 4):
+   ``serve_async`` over the REAL executor pool on a saturated 3-device edge
+   fleet with emulated WAN result-upload legs (``NetworkProfile`` — genuine
+   wall-clock waits standing in for the paper's network legs) vs the
+   sequential live driver on the identical workload. Wall-clock overlap
+   speedup must clear the floor (≥ 2x full, relaxed in smoke): per-device
+   worker threads hide each other's network waits and interleave compute up
+   to the local core budget. Real compiles + real executions; identical task
+   counts and placement on both sides.
+6. **million** — the 1M-task columnar scenario (full runs only): previously
    impractical (minutes of per-task object churn); now end-to-end serve in
    seconds, entirely on arrays.
 
@@ -332,7 +341,84 @@ def run_fleet(emit, n: int | None = None):
          f"n={n}")
 
 
-# ------------------------------------------------------- 5. the 1M scenario
+# --------------------------------------------- 5. live async overlap (ISSUE 4)
+def run_live_async(emit, n: int | None = None, min_speedup: float = 2.0):
+    """Wall-clock overlap of the live event-driven driver vs sequential
+    dispatch: a saturated 3-device edge fleet (edge-only budget) serving real
+    compiled executions whose store leg pays an emulated WAN result-upload
+    (real ``time.sleep`` waits — the paper's IoT-upload leg). The async
+    driver's per-device workers overlap those waits and the compute; the
+    sequential driver pays them back-to-back. Placement is identical on both
+    sides, so the ratio is pure execution overlap.
+    """
+    if n is None:
+        n = 60 if common.REDUCED else 120
+    banner(f"bench_runtime/async-overlap — live serve_async vs sequential "
+           f"({n} tasks, 3-device fleet, WAN-emulated store leg)")
+    import os
+
+    if (os.cpu_count() or 1) < 2:
+        # single core: compute cannot overlap at all, only the WAN waits can
+        # — the 2x acceptance bar is judged on >=2 unthrottled cores
+        min_speedup = min(min_speedup, 1.2)
+
+    from repro.configs import smoke_config
+    from repro.serving.executors import NetworkProfile, SliceSpec
+    from repro.serving.placement import (
+        calibrate_catalog,
+        llm_workload,
+        make_live_runtime,
+    )
+
+    cfg = smoke_config("llama3.2-1b").with_updates(
+        n_layers=2, d_model=32, d_ff=64, vocab=64, n_heads=2, n_kv_heads=2,
+        head_dim=16)
+    specs = [SliceSpec("s2", 2, tokens_per_step=4),
+             SliceSpec("s8", 8, tokens_per_step=4)]
+    t0 = time.perf_counter()
+    cat = calibrate_catalog(cfg, specs, n_tasks=6, n_cold=1, seed=0,
+                            mean_tokens=16.0)
+    calib_s = time.perf_counter() - t0
+    # arrivals far above fleet capacity: predicted queues build up, so the
+    # least-wait balancer spreads the backlog evenly over all three devices
+    tasks = llm_workload(n, rate_per_s=2_000.0, seed=4, mean_tokens=16.0)
+    net = NetworkProfile(base_ms=40.0, ms_per_byte=0.01)
+
+    def runtime():
+        # c_max=0: every task is edge-feasible only — the saturated fleet
+        return make_live_runtime(cat, MinLatencyPolicy(c_max=0.0, alpha=0.0),
+                                 t_idl_ms=60_000.0, n_edge_devices=3,
+                                 network=net)
+
+    rt_seq = runtime()
+    t0 = time.perf_counter()
+    res_seq = rt_seq.serve(tasks)
+    seq_s = time.perf_counter() - t0
+
+    rt_async = runtime()
+    t0 = time.perf_counter()
+    res_async = rt_async.serve_async(tasks)
+    async_s = time.perf_counter() - t0
+
+    assert res_seq.n == n and res_async.n == n
+    assert res_async.n_edge == n, "budget must saturate the edge fleet"
+    assert [r.target for r in res_seq.records] \
+        == [r.target for r in res_async.records], "placement must be identical"
+    speedup = seq_s / max(async_s, 1e-12)
+    print(f"calibration {calib_s:5.1f}s   sequential {seq_s:6.2f}s "
+          f"({n / seq_s:5.1f} t/s)   async {async_s:6.2f}s "
+          f"({n / async_s:5.1f} t/s)   overlap speedup {speedup:4.2f}x   "
+          f"cores {os.cpu_count()}")
+    print("async fleet balance:")
+    print(res_async.device_table())
+    assert speedup >= min_speedup, \
+        f"live async overlap: expected >={min_speedup}x, got {speedup:.2f}x"
+    emit("runtime/live_serve_async[fleet-wan]", async_s / n * 1e6,
+         f"n={n};speedup={speedup:.2f}x")
+    emit("runtime/live_serve_seq[fleet-wan]", seq_s / n * 1e6, f"n={n}")
+
+
+# ------------------------------------------------------- 6. the 1M scenario
 def run_million(emit, n: int = 1_000_000):
     """The columnar end-to-end scale-out: 1M tasks through decisions AND
     execution without a single per-task Python object on the hot path.
@@ -370,6 +456,7 @@ def run(emit, n: int | None = None):
     run_serve(emit, n=n)
     run_twin_exec(emit)
     run_fleet(emit)
+    run_live_async(emit)
     if not common.REDUCED and n is None:
         run_million(emit)
 
@@ -378,11 +465,14 @@ def run_smoke(emit):
     """Seconds-long fleet perf smoke for CI: small sizes, relaxed bars
     (shared CI runners throttle unpredictably; the 10x/5x acceptance bars are
     judged at full size on the saturated case). The mixed cases only have to
-    not be slowdowns — their value in CI is the bit-parity check."""
+    not be slowdowns — their value in CI is the bit-parity check. The live
+    async-overlap floor is likewise relaxed to 1.3x in smoke (the ≥2x
+    acceptance bar assumes ≥2 unthrottled cores and the full task count)."""
     run_decision(emit, n=8_000, min_speedup=4.0, mixed_min_speedup=1.0)
     run_serve(emit, n=8_000, min_speedup=3.0)
     run_twin_exec(emit, n=20_000, min_speedup=3.0, mixed_min_speedup=1.0)
     run_fleet(emit, n=1_200)
+    run_live_async(emit, n=60, min_speedup=1.3)
 
 
 def main():

@@ -1,0 +1,104 @@
+"""Async serving: the event-driven driver on the live pool and on the twin.
+
+Part 1 — the LIVE pool: ``serve_async`` over real compiled executors runs a
+genuinely concurrent dispatch loop (one worker thread per edge device and
+per cloud config, completion queue, per-executor compile guard). With the
+paper's WAN legs emulated as real waits (``NetworkProfile``), the per-device
+workers overlap each other's network time and the wall clock drops well
+below sequential dispatch. (This part runs first: it measures real wall
+time, and the cleanest process state gives the fairest overlap numbers.)
+
+Part 2 — the TWIN: the same ``serve_async`` call fans a bursty 3-device
+fleet workload out to per-target workers interleaved on the virtual-clock
+event heap (``repro.core.events``) and merges the outcome arrays back into
+the same columnar ``RecordBatch`` as ``serve(batched=True)``. The two
+results are METRIC-IDENTICAL — that is the parity guarantee the
+event-driven refactor ships with (the heap changes *when* work is
+simulated, never the math).
+
+    PYTHONPATH=src python examples/async_serve.py
+"""
+
+import time
+
+from repro.configs import smoke_config
+from repro.core.decision import DecisionEngine, MinLatencyPolicy
+from repro.core.fit import build_fleet_predictor, fit_app
+from repro.core.runtime import PlacementRuntime, TwinBackend
+from repro.core.workload import BurstyWorkload
+from repro.serving.executors import NetworkProfile, SliceSpec
+from repro.serving.placement import (
+    calibrate_catalog,
+    llm_workload,
+    make_live_runtime,
+)
+
+CONFIGS = (1280, 1536, 1792)
+DEVICES = {"edge0": 1.0, "edge1": 1.0, "edge2": 0.6}
+
+# ------------------------------------------------------- live overlap demo
+print("calibrating the live catalog (real compiles)...")
+cfg = smoke_config("llama3.2-1b").with_updates(
+    n_layers=2, d_model=32, d_ff=64, vocab=64, n_heads=2, n_kv_heads=2,
+    head_dim=16)
+cat = calibrate_catalog(cfg, [SliceSpec("s2", 2, tokens_per_step=4),
+                              SliceSpec("s8", 8, tokens_per_step=4)],
+                        n_tasks=6, n_cold=1, seed=0, mean_tokens=16.0)
+requests = llm_workload(60, rate_per_s=2000.0, seed=4, mean_tokens=16.0)
+net = NetworkProfile(base_ms=40.0)  # the paper's IoT-upload leg, emulated
+
+
+def live():
+    return make_live_runtime(cat, MinLatencyPolicy(c_max=0.0, alpha=0.0),
+                             n_edge_devices=3, network=net)
+
+
+# provision (and compile) both fleets BEFORE the timers: the comparison is
+# dispatch overlap, not provisioning cost
+rt_seq, rt_async = live(), live()
+
+t0 = time.perf_counter()
+rt_seq.serve(requests)
+seq_s = time.perf_counter() - t0
+
+t0 = time.perf_counter()
+res = rt_async.serve_async(requests)
+async_s = time.perf_counter() - t0
+
+print(f"live: sequential {seq_s:5.2f}s   async {async_s:5.2f}s   "
+      f"overlap speedup {seq_s / async_s:4.2f}x")
+print(res.device_table())
+
+# ------------------------------------------------------------ twin parity
+print("\nfitting FD models...")
+twin, models = fit_app("FD", seed=0, n_inputs=150, configs=CONFIGS)
+tasks = BurstyWorkload(rate_per_s=4.0, size_sampler=twin.sample_input,
+                       burst_multiplier=6.0, mean_quiet_s=15.0,
+                       mean_burst_s=6.0, seed=7).generate(5000)
+
+
+def runtime():
+    eng = DecisionEngine(
+        predictor=build_fleet_predictor(models, dict(DEVICES), configs=CONFIGS),
+        policy=MinLatencyPolicy(c_max=1e-5, alpha=0.02))
+    return PlacementRuntime(eng, TwinBackend(twin, seed=11,
+                                             edge_names=tuple(DEVICES),
+                                             edge_speed=dict(DEVICES)))
+
+
+batched = runtime().serve(tasks)
+
+rt = runtime()
+# the per-target worker queues the async driver consumes, by target_codes
+plan = rt.engine.place_many(tasks, edge_queues=rt.edge_queues)
+for name, rows in sorted(plan.rows_by_target().items()):
+    print(f"  worker {name:<6} pulls {rows.shape[0]:>5} rows")
+event_driven = runtime().serve_async(tasks)
+
+assert event_driven.total_actual_cost == batched.total_actual_cost
+assert event_driven.avg_actual_latency_ms == batched.avg_actual_latency_ms
+assert event_driven.p99_actual_latency_ms == batched.p99_actual_latency_ms
+print(f"twin parity: serve_async == serve(batched=True)  "
+      f"(mean {event_driven.avg_actual_latency_ms:,.0f} ms, "
+      f"p99 {event_driven.p99_actual_latency_ms:,.0f} ms, "
+      f"cost ${event_driven.total_actual_cost:.4f})")

@@ -16,10 +16,15 @@ Components (paper section in parens):
 - ``workload``     — Poisson arrival workload generators (II-B)
 - ``apps``         — AWS digital twin for the paper's IR / FD / STT applications (II-B, IV-C)
 - ``records``      — per-task TaskRecord + aggregate SimulationResult metrics (VI)
+- ``events``       — the event scheduler behind the async serve path: min-heap of
+                     arrival/dispatch/completion events on the virtual clock +
+                     the single-slot FIFO worker state machine
 - ``runtime``      — the unified serve loop: ``PlacementRuntime`` over pluggable
                      ``ExecutionBackend``s (``TwinBackend`` here,
-                     ``repro.serving.placement.LiveBackend`` live) (VI-A/B)
-- ``simulator``    — deprecated thin wrapper kept for backward compatibility
+                     ``repro.serving.placement.LiveBackend`` live), with the
+                     synchronous ``serve`` and the event-driven ``serve_async``
+                     drivers (VI-A/B)
+- ``simulator``    — deprecated alias kept for backward compatibility
 """
 
 from repro.core.pricing import LambdaPricing, EdgePricing, SlicePricing
@@ -45,6 +50,7 @@ from repro.core.decision import (
 from repro.core.workload import BurstyWorkload, PoissonWorkload, TaskInput
 from repro.core.records import DeviceSummary, RecordBatch, SimulationResult, TaskRecord
 from repro.core.recurrence import fifo_starts
+from repro.core.events import Event, EventHeap, SingleSlotWorker
 from repro.core.runtime import (
     ExecutionBackend,
     ExecutionBatch,
@@ -91,6 +97,9 @@ __all__ = [
     "RecordBatch",
     "SimulationResult",
     "TaskRecord",
+    "Event",
+    "EventHeap",
+    "SingleSlotWorker",
     "ExecutionBackend",
     "ExecutionBatch",
     "fifo_starts",

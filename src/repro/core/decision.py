@@ -345,6 +345,15 @@ class DecisionBatch(Sequence):
         table = list(self.names)
         return [table[c] for c in self.target_codes.tolist()]
 
+    def rows_by_target(self) -> dict[str, np.ndarray]:
+        """Row indices per chosen target, in arrival order — the partition
+        the async drivers' per-target workers serve (each driver derives its
+        own copy inline from ``target_codes``; this is the inspection view
+        for tests, examples, and fan-out diagnostics). Concatenating the
+        queues back by row index recovers the batch."""
+        return {self.names[c]: np.nonzero(self.target_codes == c)[0]
+                for c in np.unique(self.target_codes).tolist()}
+
     def __getitem__(self, i):
         if isinstance(i, slice):
             return [self[j] for j in range(*i.indices(len(self)))]

@@ -185,6 +185,17 @@ class RecordBatch(Sequence):
             return np.zeros(len(self), bool)
         return table[self.target_codes]
 
+    def completion_order(self) -> np.ndarray:
+        """Row indices sorted by completion time (ties keep arrival order).
+
+        Rows are stored in arrival order, but the event-driven runtime
+        *finishes* them in completion order — this is the batch as the
+        completion-event stream saw it, the natural replay order for
+        consumers that react to outcomes (online refit of the component
+        models, drift monitors) rather than to arrivals.
+        """
+        return np.argsort(self.completion_ms, kind="stable")
+
 
 @dataclass(frozen=True)
 class DeviceSummary:

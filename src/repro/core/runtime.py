@@ -33,6 +33,17 @@ and every leg is an affine/exp transform of a standard normal. Only the
 container-pool and per-device FIFO recurrences stay sequential (cheap Python,
 no model math). This is what makes 100k-task fleet workloads fast — see
 ``benchmarks/bench_runtime.py``.
+
+The EVENT-DRIVEN serve path (``PlacementRuntime.serve_async``) reuses the same
+non-blocking placement pass and fans execution out to per-target workers — one
+per edge device, one per cloud config — that pull rows from the columnar
+``DecisionBatch`` by ``target_codes``. On the twin the workers interleave on
+the virtual-clock event heap (``repro.core.events``; ``execute_async``,
+bit-identical to ``execute_many``); live backends run them as real threads
+(``repro.serving.executors.ExecutorPool.serve_concurrent``) so fleet
+executions genuinely overlap. Hedge duplicates become race events: first
+completion wins, the loser is drained (twin) or cancelled when it never
+started (live).
 """
 
 from __future__ import annotations
@@ -42,6 +53,8 @@ from dataclasses import dataclass
 from typing import Protocol, Sequence, runtime_checkable
 
 import numpy as np
+
+from repro.core.events import ARRIVAL, COMPLETION, DISPATCH, EventHeap, SingleSlotWorker
 
 from repro.core.apps import (
     AWSTwin,
@@ -86,6 +99,9 @@ class ExecutionBatch:
     completion_ms: np.ndarray
     queue_wait_ms: np.ndarray
     exec_ms: np.ndarray
+    # set by concurrent drivers only: a hedge race leg that was cancelled
+    # before it started (it ran nowhere, bills nothing). None = no races.
+    cancelled: np.ndarray | None = None
 
     def __len__(self) -> int:
         return self.latency_ms.shape[0]
@@ -172,21 +188,35 @@ class GroundTruthCloud:
         to the pool semantics here must be mirrored there; the bit-parity
         tests in ``tests/test_fleet.py`` catch divergence.
         """
+        cold, _ = self.commit_drawn(config, trigger_time, busy_ms, busy_ms,
+                                    self.twin.t_idl_ms(self.rng))
+        return cold
+
+    def commit_drawn(self, config: str, trigger_time: float, warm_busy_ms: float,
+                     cold_busy_ms: float, t_idl_ms: float) -> tuple[bool, float]:
+        """``commit`` with pre-drawn randomness: the idle lifetime comes in as
+        ``t_idl_ms`` (the batched samplers draw lifetimes as one block, so RNG
+        stream order is the caller's job) and the busy occupancy is chosen
+        warm/cold by the probe itself. Returns ``(cold, completion_ms)`` —
+        what the event-driven driver needs to schedule the completion event.
+        """
         pool = self.pools.setdefault(config, [])
         # reap actually-expired idle containers
         pool[:] = [c for c in pool if c.busy_until > trigger_time or trigger_time <= c.expires_at]
         idle = [c for c in pool if c.busy_until <= trigger_time and trigger_time <= c.expires_at]
-        completion = trigger_time + busy_ms
-        expiry = completion + self.twin.t_idl_ms(self.rng)
+        cold = not idle
+        completion = trigger_time + (cold_busy_ms if cold else warm_busy_ms)
+        expiry = completion + t_idl_ms
         if idle:
             c = max(idle, key=lambda c: c.last_completion)
             c.busy_until = completion
             c.last_completion = completion
             c.expires_at = expiry
-            return False
-        pool.append(GTContainer(busy_until=completion, last_completion=completion,
-                                expires_at=expiry))
-        return True
+        else:
+            pool.append(GTContainer(busy_until=completion,
+                                    last_completion=completion,
+                                    expires_at=expiry))
+        return cold, completion
 
 
 class TwinBackend:
@@ -277,6 +307,65 @@ class TwinBackend:
             queue_wait_ms=start_exec - now, exec_ms=comp,
         )
 
+    # --------------------------------------------------- batched leg sampling
+    def _scaled_sizes(self, sizes: np.ndarray) -> np.ndarray:
+        if self.twin.spec.size_kind == "pixels":
+            return sizes / 1e6
+        return sizes / 32.0 / 1000.0
+
+    def _cloud_leg_draws(self, cfgs: list[str], scaled: np.ndarray,
+                         nbytes: np.ndarray) -> dict[str, np.ndarray]:
+        """One block draw per cloud (substrate, leg) stream for ``len(cfgs)``
+        dispatches in dispatch order — bit-identical to the per-task scalar
+        draws (numpy Generators produce the same stream either way). Also
+        draws the container-lifetime block from the ground-truth RNG and
+        prices the compute (no randomness), so every number that does NOT
+        depend on pool/queue state comes from here; only warm/cold selection
+        and FIFO waits are left to the caller's state walk.
+        """
+        spec = self.twin.spec
+        rngs = self.cloud_rngs
+        nc = len(cfgs)
+        uniq = {c: float(c) for c in set(cfgs)}
+        mem = np.array([uniq[c] for c in cfgs])
+        share = np.minimum(mem, FULL_VCPU_MB) / FULL_VCPU_MB  # cpu_share, vectorized
+        upld = (spec.upld_base_ms + nbytes * spec.upld_ms_per_byte) \
+            * rngs["upld"].lognormal(0.0, spec.upld_sigma, nc)
+        zs = rngs["start"].standard_normal(nc)  # scaled per warm/cold below
+        warm_start = np.maximum(spec.warm_mean + spec.warm_std * zs, 1.0)
+        cold_start = np.maximum(spec.cold_mean + spec.cold_std * zs, 1.0)
+        comp = (spec.c0_ms + spec.c1_ms * scaled) / share \
+            * rngs["comp"].lognormal(0.0, spec.comp_sigma, nc)
+        store = np.maximum(
+            rngs["store"].normal(spec.store_cloud_mean, spec.store_cloud_std, nc), 1.0)
+        zl = self.gt_cloud.rng.standard_normal(nc)
+        t_idl = np.maximum(T_IDL_ACTUAL_MEAN_MS + T_IDL_ACTUAL_STD_MS * zl,
+                           5 * 60e3)
+        cost = np.empty(nc)
+        for cfg, fmem in uniq.items():
+            m = mem == fmem
+            cost[m] = self.pricing.cost_batch(comp[m], fmem)
+        return {"upld": upld, "warm_start": warm_start, "cold_start": cold_start,
+                "comp": comp, "store": store, "t_idl": t_idl, "cost": cost}
+
+    def _edge_leg_draws(self, dev: str, scaled: np.ndarray) -> dict[str, np.ndarray]:
+        """One block draw per leg stream of edge device ``dev`` for its
+        dispatches in dispatch order (see ``_cloud_leg_draws``)."""
+        spec = self.twin.spec
+        rngs = self.edge_rngs[dev]
+        nd = scaled.shape[0]
+        comp = (spec.e0_ms + spec.e1_ms * scaled) \
+            * rngs["comp"].lognormal(0.0, spec.edge_sigma, nd) \
+            / self.edge_speed[dev]
+        if spec.iotup_mean > 0:  # matches iotup_ms: no draw when unmodeled
+            iot = np.maximum(
+                rngs["iot"].normal(spec.iotup_mean, spec.iotup_std, nd), 0.0)
+        else:
+            iot = np.zeros(nd)
+        store = np.maximum(
+            rngs["store"].normal(spec.store_edge_mean, spec.store_edge_std, nd), 1.0)
+        return {"comp": comp, "iot": iot, "store": store}
+
     # ------------------------------------------------- vectorized ground truth
     def execute_many(self, tasks: Sequence[TaskInput],
                      targets: Sequence[str]) -> ExecutionBatch:
@@ -292,13 +381,9 @@ class TwinBackend:
         model math.
         """
         n = len(tasks)
-        spec = self.twin.spec
         sizes = np.array([t.size for t in tasks])
         nows = np.array([t.arrival_ms for t in tasks])
-        if spec.size_kind == "pixels":
-            scaled = sizes / 1e6
-        else:
-            scaled = sizes / 32.0 / 1000.0
+        scaled = self._scaled_sizes(sizes)
 
         # integer-encode targets in one pass: device i -> i, cloud -> -1
         devmap = {dev: i for i, dev in enumerate(self.edge_names)}
@@ -316,24 +401,12 @@ class TwinBackend:
         # ---- cloud: batch the 4 normals per dispatch (upld, start, comp, store)
         nc = ci.shape[0]
         if nc:
-            rngs = self.cloud_rngs
             cfgs = [targets[i] for i in ci.tolist()]
-            uniq = {c: float(c) for c in set(cfgs)}
-            mem = np.array([uniq[c] for c in cfgs])
-            share = np.minimum(mem, FULL_VCPU_MB) / FULL_VCPU_MB  # cpu_share, vectorized
             nbytes = np.array([tasks[i].bytes for i in ci.tolist()])
-            upld = (spec.upld_base_ms + nbytes * spec.upld_ms_per_byte) \
-                * rngs["upld"].lognormal(0.0, spec.upld_sigma, nc)
-            zs = rngs["start"].standard_normal(nc)  # scaled per warm/cold below
-            warm_start = np.maximum(spec.warm_mean + spec.warm_std * zs, 1.0)
-            cold_start = np.maximum(spec.cold_mean + spec.cold_std * zs, 1.0)
-            comp = (spec.c0_ms + spec.c1_ms * scaled[ci]) / share \
-                * rngs["comp"].lognormal(0.0, spec.comp_sigma, nc)
-            store = np.maximum(
-                rngs["store"].normal(spec.store_cloud_mean, spec.store_cloud_std, nc), 1.0)
-            zl = self.gt_cloud.rng.standard_normal(nc)
-            t_idl = np.maximum(T_IDL_ACTUAL_MEAN_MS + T_IDL_ACTUAL_STD_MS * zl,
-                               5 * 60e3)
+            draws = self._cloud_leg_draws(cfgs, scaled[ci], nbytes)
+            upld, comp, store = draws["upld"], draws["comp"], draws["store"]
+            warm_start, cold_start = draws["warm_start"], draws["cold_start"]
+            t_idl = draws["t_idl"]
             # sequential container-pool walk (state only; all draws done
             # above). Probe+commit fused into one scan per dispatch — reap,
             # find the most-recently-used idle container, occupy or append —
@@ -407,13 +480,9 @@ class TwinBackend:
                 pools[cfg] = [GTContainer(b, li, e)
                               for b, li, e in zip(busy_l, last_l, exp_l)]
             start = np.asarray(start_l)
-            cost = np.empty(nc)
-            for cfg, fmem in uniq.items():
-                m = mem == fmem
-                cost[m] = self.pricing.cost_batch(comp[m], fmem)
             latency = upld + start + comp + store
             out.latency_ms[ci] = latency
-            out.cost[ci] = cost
+            out.cost[ci] = draws["cost"]
             out.cold[ci] = was_cold
             out.completion_ms[ci] = nows[ci] + latency
             out.exec_ms[ci] = start + comp
@@ -425,17 +494,8 @@ class TwinBackend:
             nd = di.shape[0]
             if nd == 0:
                 continue
-            rngs = self.edge_rngs[dev]
-            comp = (spec.e0_ms + spec.e1_ms * scaled[di]) \
-                * rngs["comp"].lognormal(0.0, spec.edge_sigma, nd) \
-                / self.edge_speed[dev]
-            if spec.iotup_mean > 0:  # matches iotup_ms: no draw when unmodeled
-                iot = np.maximum(
-                    rngs["iot"].normal(spec.iotup_mean, spec.iotup_std, nd), 0.0)
-            else:
-                iot = np.zeros(nd)
-            store = np.maximum(
-                rngs["store"].normal(spec.store_edge_mean, spec.store_edge_std, nd), 1.0)
+            edraws = self._edge_leg_draws(dev, scaled[di])
+            comp, iot, store = edraws["comp"], edraws["iot"], edraws["store"]
             dev_nows = nows[di]
             start_exec, free = _fifo_starts(self.edge_free_at[dev], dev_nows, comp)
             self.edge_free_at[dev] = free
@@ -448,6 +508,135 @@ class TwinBackend:
             placed += nd
 
         assert placed == n  # every dispatch is either a fleet device or cloud
+        return out
+
+    # --------------------------------------------- event-driven virtual clock
+    def execute_async(self, tasks: Sequence[TaskInput],
+                      targets: Sequence[str],
+                      races: Sequence[tuple[int, int]] | None = None,
+                      ) -> ExecutionBatch:
+        """The event-driven virtual-clock driver (``serve_async``'s substrate).
+
+        Per-target workers — one ``SingleSlotWorker`` per edge device, one
+        dispatcher per cloud config — interleave on one ``EventHeap``:
+        arrivals route each dispatch to its worker, dispatch events occupy
+        executors, completion events free them and start the next queued task.
+        BIT-IDENTICAL to ``execute_many`` (and therefore to the sequential
+        ``execute`` loop): every leg draw comes from the same per-(substrate,
+        leg) block sampling, cloud container commits apply in dispatch order
+        per config (the provider's ingest order — the heap schedules *when*
+        work happens, never reorders *whose* state it touches), and the edge
+        workers run the exact ``start = max(free, now)`` FIFO recurrence that
+        ``fifo_starts`` evaluates as cumsums. The parity is regression-tested.
+
+        ``races`` (hedge duplicate pairs of dispatch indices) is accepted for
+        protocol compatibility: on the twin both legs always run to completion
+        on the virtual clock ("drained"), and the runtime merges the race by
+        earliest completion — identical to the batched hedge merge. Live
+        backends may instead cancel a not-yet-started loser.
+        """
+        del races  # virtual legs are always drained; the runtime merges
+        n = len(tasks)
+        out = ExecutionBatch(
+            latency_ms=np.empty(n), cost=np.zeros(n),
+            cold=np.zeros(n, dtype=bool), completion_ms=np.empty(n),
+            queue_wait_ms=np.zeros(n), exec_ms=np.empty(n))
+        if n == 0:
+            return out
+        sizes = np.array([t.size for t in tasks])
+        nows = np.array([t.arrival_ms for t in tasks])
+        if n > 1 and not bool(np.all(np.diff(nows) >= 0.0)):
+            # Out-of-order dispatch lists: the heap would replay state in
+            # time order while the batched/sequential paths replay dispatch
+            # order. execute_many is bit-identical to the execute loop, so
+            # falling back preserves the driver's identical-results contract
+            # (all shipped workloads emit sorted arrivals; hedge duplicates
+            # share their primary's arrival and tie-break by dispatch order).
+            return self.execute_many(tasks, targets)
+        scaled = self._scaled_sizes(sizes)
+        devmap = {dev: i for i, dev in enumerate(self.edge_names)}
+        codes = np.array([devmap.get(tg, -1) for tg in targets], dtype=np.int64)
+        ci = np.nonzero(codes == -1)[0]
+
+        # every leg draw up front, one block per stream (== execute_many)
+        cloud_slot = {}
+        cdraws = None
+        cfgs: list[str] = []
+        if ci.shape[0]:
+            cfgs = [targets[i] for i in ci.tolist()]
+            nbytes = np.array([tasks[i].bytes for i in ci.tolist()])
+            cdraws = self._cloud_leg_draws(cfgs, scaled[ci], nbytes)
+            cloud_slot = {int(g): j for j, g in enumerate(ci.tolist())}
+        edraws: dict[str, dict[str, np.ndarray]] = {}
+        edge_slot: dict[int, int] = {}
+        for dev in self.edge_names:
+            di = np.nonzero(codes == devmap[dev])[0]
+            if di.shape[0]:
+                edraws[dev] = self._edge_leg_draws(dev, scaled[di])
+                edge_slot.update(
+                    {int(g): j for j, g in enumerate(di.tolist())})
+
+        workers = {dev: SingleSlotWorker(free_at=self.edge_free_at[dev])
+                   for dev in self.edge_names}
+
+        def start_edge(dev: str, start: float, row: int) -> None:
+            """Row occupies ``dev``'s slot at ``start``: write its outcome,
+            schedule the slot-free completion."""
+            j = edge_slot[row]
+            d = edraws[dev]
+            comp = float(d["comp"][j])
+            arrival = float(nows[row])
+            wait = start - arrival
+            latency = wait + comp + float(d["iot"][j]) + float(d["store"][j])
+            out.latency_ms[row] = latency
+            out.completion_ms[row] = arrival + latency
+            out.queue_wait_ms[row] = wait
+            out.exec_ms[row] = comp
+            heap.push(start + comp, COMPLETION, (dev, row))
+
+        heap = EventHeap()
+        for i in range(n):
+            heap.push(float(nows[i]), ARRIVAL, i)
+        for ev in heap.drain():
+            if ev.kind == ARRIVAL:
+                row = ev.payload
+                code = int(codes[row])
+                if code >= 0:  # edge: enter the device's FIFO
+                    dev = self.edge_names[code]
+                    started = workers[dev].arrive(ev.time_ms, row)
+                    if started is not None:
+                        heap.push(started[0], DISPATCH, (dev, row))
+                else:  # cloud: containers scale out — commit at ingest
+                    j = cloud_slot[row]
+                    trigger = ev.time_ms + float(cdraws["upld"][j])
+                    warm, cold_s = (float(cdraws["warm_start"][j]),
+                                    float(cdraws["cold_start"][j]))
+                    comp = float(cdraws["comp"][j])
+                    cold, _ = self.gt_cloud.commit_drawn(
+                        cfgs[j], trigger, warm + comp, cold_s + comp,
+                        float(cdraws["t_idl"][j]))
+                    start = cold_s if cold else warm
+                    latency = (float(cdraws["upld"][j]) + start + comp
+                               + float(cdraws["store"][j]))
+                    out.latency_ms[row] = latency
+                    out.cost[row] = float(cdraws["cost"][j])
+                    out.cold[row] = cold
+                    out.completion_ms[row] = ev.time_ms + latency
+                    out.exec_ms[row] = start + comp
+                    # no COMPLETION event: cloud containers scale out, so a
+                    # finishing dispatch frees no worker slot and nothing
+                    # downstream consumes the pop. The completion-ordered
+                    # view of a run lives in RecordBatch.completion_order().
+            elif ev.kind == DISPATCH:
+                dev, row = ev.payload
+                start_edge(dev, ev.time_ms, row)
+            else:  # COMPLETION: the edge slot frees, the next queued task starts
+                dev, _row = ev.payload
+                nxt = workers[dev].complete(ev.time_ms)
+                if nxt is not None:
+                    heap.push(nxt[0], DISPATCH, (dev, nxt[1]))
+        for dev, w in workers.items():
+            self.edge_free_at[dev] = w.free_at
         return out
 
 
@@ -504,6 +693,101 @@ class PlacementRuntime:
             records = [self.step(t) for t in tasks]
         return self.result(records)
 
+    def serve_async(self, tasks: list[TaskInput]) -> SimulationResult:
+        """The event-driven serve: place like ``serve(batched=True)``, then
+        execute through the backend's concurrent driver.
+
+        Placement is non-blocking (decisions come from predicted state only),
+        so the decision pass is exactly the batched columnar one; execution
+        then fans out to per-target workers — ``TwinBackend`` interleaves
+        them on the virtual-clock event heap (``repro.core.events``), a live
+        backend runs them as real threads so fleet executions genuinely
+        overlap. A columnar ``DecisionBatch`` stays object-free end-to-end:
+        workers pull rows by ``target_codes`` and the outcome arrays merge
+        straight into a ``RecordBatch``. Hedged (list) decisions become race
+        events — primary and hedge legs dispatched together, first completion
+        wins, the loser drained (twin) or cancelled when it never started
+        (live). On ``TwinBackend`` the result is METRIC-IDENTICAL to
+        ``serve(batched=True)`` — asserted in tests; backends without an
+        ``execute_async`` driver serve the same plan synchronously.
+        """
+        decisions = self.engine.place_many(tasks, edge_queues=self.edge_queues)
+        run = getattr(self.backend, "execute_async", None)
+        if run is None:
+            records = self._execute_decisions(tasks, decisions)
+        elif isinstance(decisions, DecisionBatch):
+            eb = run(tasks, decisions.target_list())
+            records = self._record_batch(tasks, decisions, eb) \
+                if isinstance(eb, ExecutionBatch) \
+                else [self._record(t, d, d.target, d.prediction, o)
+                      for t, d, o in zip(tasks, decisions, eb)]
+        else:
+            records = self._race_decisions(tasks, decisions, run)
+        return self.result(records)
+
+    def _race_decisions(self, tasks: list[TaskInput], decisions,
+                        run) -> list[TaskRecord]:
+        """Async-execute list decisions; hedge duplicates are race events."""
+        d_tasks, d_targets, races = self._hedge_plan(tasks, decisions)
+        eb = run(d_tasks, d_targets, races=races)
+        return self._merge_hedged_outcomes(tasks, decisions, eb)
+
+    @staticmethod
+    def _hedge_plan(tasks: list[TaskInput], decisions,
+                    ) -> tuple[list[TaskInput], list[str], list[tuple[int, int]]]:
+        """One dispatch per execution leg, hedge duplicates right after their
+        primary — the same order the sequential loop executes them in.
+        ``races`` pairs each primary's dispatch index with its hedge's."""
+        d_tasks: list[TaskInput] = []
+        d_targets: list[str] = []
+        races: list[tuple[int, int]] = []
+        for t, d in zip(tasks, decisions):
+            d_tasks.append(t)
+            d_targets.append(d.target)
+            if d.hedge_target is not None and d.hedge_target != d.target:
+                races.append((len(d_tasks) - 1, len(d_tasks)))
+                d_tasks.append(t)
+                d_targets.append(d.hedge_target)
+        return d_tasks, d_targets, races
+
+    def _merge_hedged_outcomes(self, tasks: list[TaskInput], decisions,
+                               outcomes) -> list[TaskRecord]:
+        """Walk ``_hedge_plan``-ordered outcomes back into one record per
+        task, resolving hedge races. ``outcomes`` is anything indexable to
+        ``ExecutionOutcome``; a ``cancelled`` array (concurrent drivers)
+        marks legs that never ran."""
+        flags = getattr(outcomes, "cancelled", None)
+        records, j = [], 0
+        for t, d in zip(tasks, decisions):
+            pj = j
+            j += 1
+            if d.hedge_target is None or d.hedge_target == d.target:
+                records.append(
+                    self._record(t, d, d.target, d.prediction, outcomes[pj]))
+                continue
+            hj = j
+            j += 1
+            if flags is not None and bool(flags[pj]):
+                # the race resolved to the HEDGE: the primary never started —
+                # the record reports the leg that actually ran (its target,
+                # actuals, device occupancy), with the cancelled primary as
+                # the zero-occupancy duplicate; predicted stays the
+                # decision-time expectation of racing both legs
+                rec = self._record(t, d, d.hedge_target, d.hedge_prediction,
+                                   outcomes[hj])
+                rec.predicted_latency_ms = min(d.prediction.latency_ms,
+                                               d.hedge_prediction.latency_ms)
+                rec.predicted_cost = d.prediction.cost + d.hedge_prediction.cost
+                rec.hedged = True
+                rec.hedge_target = d.target
+                records.append(rec)
+                continue
+            rec = self._record(t, d, d.target, d.prediction, outcomes[pj])
+            cancelled = flags is not None and bool(flags[hj])
+            records.append(self._merge_hedge(rec, t, d, outcomes[hj],
+                                             cancelled=cancelled))
+        return records
+
     def step(self, task: TaskInput) -> TaskRecord:
         """Place and execute one task (the per-task serve path)."""
         now = task.arrival_ms
@@ -547,29 +831,9 @@ class PlacementRuntime:
             return [self._run_decision(t, d) for t, d in zip(tasks, decisions)]
         if not hasattr(self.backend, "execute_many"):
             return [self._run_decision(t, d) for t, d in zip(tasks, decisions)]
-        # one dispatch per execution leg, hedge duplicates right after their
-        # primary — the same order the sequential loop executes them in
-        d_tasks: list[TaskInput] = []
-        d_targets: list[str] = []
-        for t, d in zip(tasks, decisions):
-            d_tasks.append(t)
-            d_targets.append(d.target)
-            if d.hedge_target is not None and d.hedge_target != d.target:
-                d_tasks.append(t)
-                d_targets.append(d.hedge_target)
+        d_tasks, d_targets, _ = self._hedge_plan(tasks, decisions)
         outcomes = self.backend.execute_many(d_tasks, d_targets)
-        if isinstance(outcomes, ExecutionBatch):
-            outcomes = outcomes.outcomes()
-        records, j = [], 0
-        for t, d in zip(tasks, decisions):
-            out = outcomes[j]
-            j += 1
-            rec = self._record(t, d, d.target, d.prediction, out)
-            if d.hedge_target is not None and d.hedge_target != d.target:
-                rec = self._merge_hedge(rec, t, d, outcomes[j])
-                j += 1
-            records.append(rec)
-        return records
+        return self._merge_hedged_outcomes(tasks, decisions, outcomes)
 
     def _record_batch(self, tasks: list[TaskInput], d: DecisionBatch,
                       eb: ExecutionBatch) -> RecordBatch:
@@ -606,19 +870,30 @@ class PlacementRuntime:
         return rec
 
     def _merge_hedge(self, rec: TaskRecord, task: TaskInput,
-                     d: PlacementDecision, dup: ExecutionOutcome) -> TaskRecord:
+                     d: PlacementDecision, dup: ExecutionOutcome,
+                     cancelled: bool = False) -> TaskRecord:
+        """Resolve a hedge race: first completion wins, both legs billed.
+
+        ``cancelled`` marks a duplicate a concurrent driver cancelled before
+        it ever started (live only): it ran nowhere and bills nothing, so the
+        primary's actuals stand alone — the *predicted* merge still reflects
+        the decision-time expectation of racing both legs.
+        """
         backup = d.hedge_prediction
         return TaskRecord(
             task=task, target=rec.target,
             predicted_latency_ms=min(rec.predicted_latency_ms, backup.latency_ms),
             predicted_cost=rec.predicted_cost + backup.cost,
-            actual_latency_ms=min(rec.actual_latency_ms, dup.latency_ms),
-            actual_cost=rec.actual_cost + dup.cost,
+            actual_latency_ms=rec.actual_latency_ms if cancelled
+            else min(rec.actual_latency_ms, dup.latency_ms),
+            actual_cost=rec.actual_cost + (0.0 if cancelled else dup.cost),
             predicted_cold=rec.predicted_cold, actual_cold=rec.actual_cold,
             allowed_cost=rec.allowed_cost, feasible=rec.feasible,
-            completion_ms=min(rec.completion_ms, dup.completion_ms), hedged=True,
+            completion_ms=rec.completion_ms if cancelled
+            else min(rec.completion_ms, dup.completion_ms), hedged=True,
             queue_wait_ms=rec.queue_wait_ms, exec_ms=rec.exec_ms,
-            hedge_target=d.hedge_target, hedge_exec_ms=dup.exec_ms,
+            hedge_target=d.hedge_target,
+            hedge_exec_ms=0.0 if cancelled else dup.exec_ms,
         )
 
     def _record(self, task: TaskInput, d: PlacementDecision, target: str,

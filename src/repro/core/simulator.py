@@ -1,27 +1,30 @@
-"""Event-driven simulation of the placement framework (paper Sec. VI-A).
+"""Deprecated alias: the simulator IS ``PlacementRuntime`` over ``TwinBackend``.
 
-Deprecated thin wrapper: the simulation loop now lives in
-``repro.core.runtime`` — ``PlacementRuntime`` over a ``TwinBackend`` is the
-same serve loop that drives the live prototype. ``Simulation`` is kept so
-existing call sites (``Simulation(twin, engine, seed).run(tasks)``) keep
-working; new code should construct the runtime directly:
+Kept only so pre-runtime call sites (``Simulation(twin, engine, seed).run(...)``)
+keep working; it carries no bookkeeping of its own. New code:
 
     runtime = PlacementRuntime(engine, TwinBackend(twin, seed=seed))
-    result = runtime.serve(tasks)
+    result = runtime.serve(tasks)          # or runtime.serve_async(tasks)
 
-``TaskRecord``/``SimulationResult`` moved to ``repro.core.records`` and
-``GroundTruthCloud`` to ``repro.core.runtime``; both are re-exported here for
+``TaskRecord``/``SimulationResult`` live in ``repro.core.records`` and
+``GroundTruthCloud`` in ``repro.core.runtime``; both are re-exported here for
 backward compatibility.
 """
 
 from __future__ import annotations
 
-from repro.core.decision import DecisionEngine
+import warnings
+
 from repro.core.apps import AWSTwin
+from repro.core.decision import DecisionEngine
 from repro.core.pricing import LambdaPricing
-from repro.core.records import RecordBatch, SimulationResult, TaskRecord
-from repro.core.runtime import GroundTruthCloud, GTContainer, PlacementRuntime, TwinBackend
-from repro.core.workload import TaskInput
+from repro.core.records import RecordBatch, SimulationResult, TaskRecord  # noqa: F401
+from repro.core.runtime import (  # noqa: F401 — re-exports
+    GTContainer,
+    GroundTruthCloud,
+    PlacementRuntime,
+    TwinBackend,
+)
 
 __all__ = [
     "GTContainer",
@@ -33,24 +36,22 @@ __all__ = [
 ]
 
 
-class Simulation:
-    """Drives one workload through the Decision Engine against the twin.
-
-    Deprecated: thin wrapper over ``PlacementRuntime`` + ``TwinBackend``.
-    """
+class Simulation(PlacementRuntime):
+    """Deprecated alias of ``PlacementRuntime(engine, TwinBackend(twin))``."""
 
     def __init__(self, twin: AWSTwin, engine: DecisionEngine, seed: int = 0,
                  pricing: LambdaPricing | None = None):
-        self.twin = twin
-        self.engine = engine
-        # fleet engines get one (full-speed) twin executor per device; pass
-        # per-device speeds to TwinBackend directly for heterogeneous twins
-        self.backend = TwinBackend(twin, seed=seed, pricing=pricing,
-                                   edge_name=engine.edge_name,
-                                   edge_names=engine.edge_names or None)
-        self.runtime = PlacementRuntime(engine=engine, backend=self.backend)
-        self.gt_cloud = self.backend.gt_cloud  # back-compat alias
-        self.pricing = self.backend.pricing
+        warnings.warn(
+            "repro.core.simulator.Simulation is deprecated; use "
+            "PlacementRuntime(engine, TwinBackend(twin, seed=seed))",
+            DeprecationWarning, stacklevel=2)
+        super().__init__(engine, TwinBackend(
+            twin, seed=seed, pricing=pricing, edge_name=engine.edge_name,
+            edge_names=engine.edge_names or None))
 
-    def run(self, tasks: list[TaskInput], batched: bool = True) -> SimulationResult:
-        return self.runtime.serve(tasks, batched=batched)
+    run = PlacementRuntime.serve
+    # pre-runtime attribute spellings, all views of the backend
+    twin = property(lambda self: self.backend.twin)
+    gt_cloud = property(lambda self: self.backend.gt_cloud)
+    pricing = property(lambda self: self.backend.pricing)
+    runtime = property(lambda self: self)

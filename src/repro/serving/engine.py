@@ -8,6 +8,14 @@ the signatures the dry-run lowers (and the executors compile):
 
 ``generate`` runs greedy/temperature decoding for a batch of prompts using
 those steps — the end-to-end path the live serving benchmark measures.
+
+``make_compiled_steps`` is the executor-facing entry the event-driven live
+driver builds on: model + params + jitted steps in one call, with the params
+optionally *pinned to one jax device*. Committed params make every step of
+that executor run on its device, so a fleet of executors spread over
+``--xla_force_host_platform_device_count`` host devices (or real accelerator
+slices) genuinely overlaps when driven from concurrent dispatch threads —
+the single shared default device would otherwise serialize their streams.
 """
 
 from __future__ import annotations
@@ -17,6 +25,26 @@ from functools import partial
 import jax
 import jax.numpy as jnp
 import numpy as np
+
+
+def make_compiled_steps(model_cfg, seed: int = 0, device=None,
+                        cache_len: int | None = None):
+    """Build (model, params, prefill_fn, decode_fn) for one executor.
+
+    ``device`` pins the params (and therefore every jitted step that consumes
+    them) to one ``jax.Device``. Pass each concurrent executor its own device
+    to let their executions overlap instead of queueing on the default
+    device's stream.
+    """
+    from repro.modeling.registry import build_model
+
+    model = build_model(model_cfg)
+    params = model.init(jax.random.key(seed))
+    if device is not None:
+        params = jax.device_put(params, device)
+    prefill_fn = jax.jit(make_prefill_step(model, cache_len=cache_len))
+    decode_fn = jax.jit(make_decode_step(model))
+    return model, params, prefill_fn, decode_fn
 
 
 def make_prefill_step(model, cache_len: int | None = None):

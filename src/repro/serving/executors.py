@@ -21,10 +21,31 @@ cost for speed. This module runs REAL JAX executions on the local backend:
 - the **edge executor** is a 1-chip slice with a single-slot FIFO queue,
   always-resident executable, and zero marginal cost (the Greengrass
   long-lived function model).
+
+The CONCURRENT dispatch loop (``ExecutorPool.serve_concurrent``) is the live
+half of the event-driven serving runtime: one dispatcher thread per target —
+each edge device, each cloud config — pulls its dispatches in arrival order,
+real executions overlap across targets, and completions land on one shared
+queue *out of arrival order*. That out-of-orderness is why container
+bookkeeping is a ``lease``/``land`` pair (a leased container's virtual
+lifecycle is stale until its completion lands, so it is never reused or
+reaped mid-flight) and why the idle-eviction sweep walks containers in
+COMPLETION-TIME order — push order means nothing once completions interleave.
+Cold compiles are guarded per executor (``LiveExecutor`` owns a lock), and
+executors can be pinned to distinct jax devices so their streams genuinely
+overlap (see ``repro.serving.engine.make_compiled_steps``).
+
+``NetworkProfile`` (off by default) emulates the paper's WAN legs with real
+wall-clock waits: cloud dispatches pay an upload on the feed leg, edge
+dispatches an IoT result-upload on the store leg. Compute overlap is bounded
+by local cores; overlapping these network waits with compute is exactly the
+latency the event-driven driver exists to hide (paper Sec. II-A).
 """
 
 from __future__ import annotations
 
+import queue as queue_mod
+import threading
 import time
 from dataclasses import dataclass, field
 
@@ -32,7 +53,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.serving.engine import make_decode_step, make_prefill_step
+from repro.serving.engine import make_compiled_steps
 
 
 @dataclass(frozen=True)
@@ -43,6 +64,30 @@ class SliceSpec:
     chips: int
     tokens_per_step: int = 16  # tokens retired per compiled step per chip
     is_edge: bool = False
+
+
+@dataclass(frozen=True)
+class NetworkProfile:
+    """Emulated WAN link: ``base_ms + ms_per_byte × payload`` of REAL wait.
+
+    The paper's upload (device → cloud) and IoT-upload (edge → cloud storage)
+    legs are network time; the local testbed has none, so the pool can
+    emulate them netem-style with genuine ``time.sleep`` waits. Off by
+    default everywhere — parity tests and calibration run with zero network.
+    """
+
+    base_ms: float = 0.0
+    ms_per_byte: float = 0.0
+
+    def delay_ms(self, nbytes: float) -> float:
+        return self.base_ms + self.ms_per_byte * float(nbytes)
+
+    def transfer(self, nbytes: float) -> float:
+        """Perform the emulated transfer (a real wall-clock wait); returns ms."""
+        ms = self.delay_ms(nbytes)
+        if ms > 0.0:
+            time.sleep(ms / 1e3)
+        return ms
 
 
 @dataclass
@@ -64,16 +109,28 @@ def _wall_ms() -> float:
 
 
 class LiveExecutor:
-    """One container: a slice holding (or not) a resident compiled model."""
+    """One container: a slice holding (or not) a resident compiled model.
 
-    def __init__(self, spec: SliceSpec, model_cfg, seed: int = 0):
+    Thread-safe for the concurrent pool: the cold compile is guarded by a
+    per-executor lock (a dispatch and a racing hedge can never double-compile
+    the same container), and ``execute`` serializes on the same lock — one
+    executor is one slot. ``device`` pins this executor's params (and so its
+    executions) to one jax device; ``network`` adds the emulated WAN legs.
+    """
+
+    def __init__(self, spec: SliceSpec, model_cfg, seed: int = 0,
+                 device=None, network: NetworkProfile | None = None):
         self.spec = spec
         self.model_cfg = model_cfg
         self.seed = seed
+        self.device = device
+        self.network = network
         self._compiled = None
+        self._lock = threading.Lock()  # cold-compile + single-slot guard
         # virtual-clock lifecycle state (ms on the workload arrival clock)
         self.busy_until: float = 0.0
         self.last_completion: float = 0.0
+        self.in_flight: bool = False  # leased by a concurrent dispatch
 
     def is_warm(self) -> bool:
         return self._compiled is not None
@@ -83,16 +140,19 @@ class LiveExecutor:
         self._compiled = None
 
     def _ensure_compiled(self) -> tuple[float, bool]:
-        """Returns (start_ms, cold). Cold pays real compile + init + warmup."""
+        """Returns (start_ms, cold). Cold pays real compile + init + warmup.
+        Guarded per executor: concurrent callers see exactly one compile."""
         if self._compiled is not None:
             return 0.05, False  # executable lookup
-        from repro.modeling.registry import build_model
+        with self._lock:
+            return self._compile_locked()
 
+    def _compile_locked(self) -> tuple[float, bool]:
+        if self._compiled is not None:
+            return 0.05, False  # a racing caller compiled while we waited
         t0 = _wall_ms()
-        model = build_model(self.model_cfg)
-        params = model.init(jax.random.key(self.seed))
-        prefill_fn = jax.jit(make_prefill_step(model, cache_len=None))
-        decode_fn = jax.jit(make_decode_step(model))
+        model, params, prefill_fn, decode_fn = make_compiled_steps(
+            self.model_cfg, seed=self.seed, device=self.device)
         B, S = 1, 32
         toks = jnp.zeros((B, S), jnp.int32)
         logits, cache = prefill_fn(params, {"tokens": toks})
@@ -104,30 +164,50 @@ class LiveExecutor:
 
     def execute(self, n_tokens: int, payload_bytes: float) -> ExecutionRecord:
         """Run a task of ``n_tokens`` through real compiled steps."""
-        start_ms, cold = self._ensure_compiled()
-        prefill_fn, decode_fn, params, model = self._compiled
+        with self._lock:
+            start_ms, cold = self._compile_locked()
+            prefill_fn, decode_fn, params, model = self._compiled
 
-        t0 = _wall_ms()
-        _ = jax.device_put(np.zeros(max(int(payload_bytes) // 4, 1), np.float32))
-        feed_ms = _wall_ms() - t0
+            t0 = _wall_ms()
+            feed = np.zeros(max(int(payload_bytes) // 4, 1), np.float32)
+            if self.device is not None:
+                _ = jax.device_put(feed, self.device)
+            else:
+                _ = jax.device_put(feed)
+            feed_ms = _wall_ms() - t0
+            if self.network is not None and not self.spec.is_edge:
+                feed_ms += self.network.transfer(payload_bytes)  # WAN upload
 
-        steps = max(int(np.ceil(
-            n_tokens / (self.spec.chips * self.spec.tokens_per_step))), 1)
-        t0 = _wall_ms()
-        B, S = 1, 32
-        logits, cache = prefill_fn(params, {"tokens": jnp.zeros((B, S), jnp.int32)})
-        tok = jnp.zeros((B,), jnp.int32)
-        for _ in range(steps):
-            logits, cache = decode_fn(params, cache, {"token": tok})
-        jax.block_until_ready(logits)
-        comp_ms = _wall_ms() - t0
+            steps = max(int(np.ceil(
+                n_tokens / (self.spec.chips * self.spec.tokens_per_step))), 1)
+            t0 = _wall_ms()
+            B, S = 1, 32
+            logits, cache = prefill_fn(params, {"tokens": jnp.zeros((B, S), jnp.int32)})
+            tok = jnp.zeros((B,), jnp.int32)
+            for _ in range(steps):
+                logits, cache = decode_fn(params, cache, {"token": tok})
+            jax.block_until_ready(logits)
+            comp_ms = _wall_ms() - t0
 
-        t0 = _wall_ms()
-        _ = np.asarray(logits)
-        store_ms = _wall_ms() - t0
+            t0 = _wall_ms()
+            _ = np.asarray(logits)
+            store_ms = _wall_ms() - t0
+            if self.network is not None and self.spec.is_edge:
+                store_ms += self.network.transfer(payload_bytes)  # IoT upload
 
-        return ExecutionRecord(feed_ms=feed_ms, start_ms=start_ms,
-                               comp_ms=comp_ms, store_ms=store_ms, cold=cold)
+            return ExecutionRecord(feed_ms=feed_ms, start_ms=start_ms,
+                                   comp_ms=comp_ms, store_ms=store_ms, cold=cold)
+
+
+@dataclass
+class _Dispatch:
+    """One row of a concurrent dispatch plan (arrival-ordered per target)."""
+
+    idx: int           # position in the plan == position in the result list
+    target: str
+    n_tokens: int
+    payload_bytes: float
+    arrival_ms: float
 
 
 @dataclass
@@ -138,6 +218,13 @@ class ExecutorPool:
     ``edges`` holds one always-resident single-slot executor per edge device
     (the multi-device generalization; ``edge``/``edge_free_at_ms`` survive as
     single-device aliases for the first device).
+
+    Concurrent dispatch makes completions land OUT OF ARRIVAL ORDER, so all
+    cloud container bookkeeping goes through ``lease``/``land``: a leased
+    container is in flight — its virtual lifecycle fields are stale until its
+    completion lands — and is never reused or reaped until then; the
+    idle-eviction sweep (``_reap``) walks containers in completion-time
+    order, never push order.
     """
 
     model_cfg: object
@@ -146,7 +233,11 @@ class ExecutorPool:
     containers: dict[str, list[LiveExecutor]] = field(default_factory=dict)
     edges: dict[str, LiveExecutor] = field(default_factory=dict)
     edge_free_at: dict[str, float] = field(default_factory=dict)
+    network: NetworkProfile | None = None
+    devices: tuple = ()   # jax devices executors are round-robin pinned to
     _seed: int = 0
+    _dev_i: int = 0
+    _lock: threading.Lock = field(default_factory=threading.Lock)
 
     # ------------------------------------- deprecated single-edge conveniences
     @property
@@ -166,36 +257,96 @@ class ExecutorPool:
         self.edge_free_at[next(iter(self.edges))] = value
 
     # ------------------------------------------------------------ cloud side
+    def _next_device(self):
+        """Round-robin executor placement over the configured jax devices."""
+        if not self.devices:
+            return None
+        dev = self.devices[self._dev_i % len(self.devices)]
+        self._dev_i += 1
+        return dev
+
     def _reap(self, name: str, now: float):
+        """Idle-eviction sweep at virtual time ``now``.
+
+        Under the concurrent driver completions land out of arrival order,
+        so push order carries no meaning: each container is judged on its
+        own LANDED completion time, and in-flight (leased) containers are
+        never touched — their lifecycle fields are stale until ``land``
+        runs, and evicting one would leak a warm executable mid-execution.
+        The sweep also normalizes the pool list to completion-time order
+        (that is presentation, not correctness: the per-container judgment
+        is order-independent) so reuse picks and debug dumps read the same
+        no matter how the landings interleaved.
+        """
         pool = self.containers.get(name, [])
-        for c in pool:
-            if c.busy_until <= now and now - c.last_completion > self.t_idl_ms:
-                c.evict()
-        self.containers[name] = [c for c in pool if c.is_warm()
-                                 or c.busy_until > now]
+        keep = []
+        for c in sorted(pool, key=lambda c: c.last_completion):
+            if c.in_flight or c.busy_until > now:
+                keep.append(c)  # running (wall clock) or busy (virtual clock)
+            elif now - c.last_completion > self.t_idl_ms:
+                c.evict()       # idle past its lifetime: provider reclaimed it
+            else:
+                keep.append(c)
+        self.containers[name] = keep
 
     def probe_cold(self, name: str, now: float) -> bool:
         """Would a dispatch at virtual time ``now`` cold-start? (No mutation.)"""
-        pool = self.containers.get(name, [])
-        return not any(
-            c.busy_until <= now and now - c.last_completion <= self.t_idl_ms
-            and c.is_warm() for c in pool)
+        with self._lock:
+            pool = self.containers.get(name, [])
+            return not any(
+                not c.in_flight and c.busy_until <= now
+                and now - c.last_completion <= self.t_idl_ms
+                and c.is_warm() for c in pool)
+
+    def lease(self, name: str, now: float) -> LiveExecutor:
+        """Check out a container for a dispatch arriving at ``now``: sweep the
+        idle-expired, reuse the most-recently-completed idle warm container
+        (AWS reuse order), else provision a fresh one. The lease marks it in
+        flight until ``land``."""
+        with self._lock:
+            self._reap(name, now)
+            pool = self.containers.setdefault(name, [])
+            idle = [c for c in pool
+                    if not c.in_flight and c.busy_until <= now and c.is_warm()]
+            if idle:
+                c = max(idle, key=lambda c: c.last_completion)
+            else:
+                self._seed += 1
+                c = LiveExecutor(self.specs[name], self.model_cfg,
+                                 seed=self._seed, device=self._next_device(),
+                                 network=self.network)
+                pool.append(c)
+            c.in_flight = True
+            return c
+
+    def land(self, c: LiveExecutor, now: float, rec: ExecutionRecord) -> float:
+        """Land a completion (possibly out of arrival order): apply the
+        virtual lifecycle and release the lease. Returns the completion time
+        on the virtual clock."""
+        completion = now + rec.start_ms + rec.comp_ms
+        with self._lock:
+            c.busy_until = completion
+            c.last_completion = completion
+            c.in_flight = False
+        return completion
+
+    def release(self, c: LiveExecutor) -> None:
+        """Release a lease whose execution FAILED: no completion to land, so
+        the lifecycle fields stay as they were — the container goes back to
+        the pool (still warm if it ever compiled) instead of leaking in
+        flight forever."""
+        with self._lock:
+            c.in_flight = False
 
     def execute_cloud(self, name: str, n_tokens: int, payload_bytes: float,
                       now: float) -> ExecutionRecord:
-        self._reap(name, now)
-        pool = self.containers.setdefault(name, [])
-        idle = [c for c in pool if c.busy_until <= now and c.is_warm()]
-        if idle:
-            c = max(idle, key=lambda c: c.last_completion)  # AWS reuse order
-        else:
-            self._seed += 1
-            c = LiveExecutor(self.specs[name], self.model_cfg, seed=self._seed)
-            pool.append(c)
-        rec = c.execute(n_tokens, payload_bytes)
-        completion = now + rec.start_ms + rec.comp_ms
-        c.busy_until = completion
-        c.last_completion = completion
+        c = self.lease(name, now)
+        try:
+            rec = c.execute(n_tokens, payload_bytes)
+        except BaseException:
+            self.release(c)
+            raise
+        self.land(c, now, rec)
         return rec
 
     # ------------------------------------------------------------- edge side
@@ -212,22 +363,126 @@ class ExecutorPool:
         device = device if device is not None else next(iter(self.edges))
         return max(self.edge_free_at[device] - arrival_ms, 0.0)
 
+    # ---------------------------------------------------- concurrent dispatch
+    def serve_concurrent(self, plan: list[_Dispatch],
+                         races: list[tuple[int, int]] | None = None,
+                         ) -> list[ExecutionRecord | None]:
+        """The real concurrent dispatch loop behind ``serve_async`` (live).
+
+        One dispatcher thread per target — each edge device drives its
+        single-slot executor, each cloud config drives its container pool —
+        pulls that target's dispatches in arrival order; executions genuinely
+        overlap across the edge fleet and the cloud slices; completions land
+        on one shared queue in wall-clock order. ``races`` are hedge
+        duplicate pairs ``(primary_idx, hedge_idx)``: the first leg to
+        complete cancels its sibling if the sibling has not started yet
+        (cancelled legs return ``None`` — they ran nowhere and bill nothing);
+        a sibling already running is drained. Returns one entry per plan row.
+
+        Same-config cloud dispatches serialize on their worker — a DELIBERATE
+        divergence from the twin's instant scale-out: the virtual arrival
+        clock is compressed relative to the wall clock, so scaling out per
+        in-flight dispatch would provision (and REALLY compile) a container
+        per near-simultaneous task. One worker per config bounds the real
+        compile cost to the warm/cold dynamics the virtual lifecycle models;
+        it also means a hedge leg can lose its race while still queued (see
+        the README live-overlap caveats).
+        """
+        races = races or []
+        results: list[ExecutionRecord | None] = [None] * len(plan)
+        done: queue_mod.Queue = queue_mod.Queue()
+        sibling = {}
+        for p, h in races:
+            sibling[p] = h
+            sibling[h] = p
+        state_lock = threading.Lock()
+        started: set[int] = set()
+        cancelled: set[int] = set()
+
+        def try_start(i: int) -> bool:
+            with state_lock:
+                if i in cancelled:
+                    return False
+                started.add(i)
+                return True
+
+        def finished(i: int) -> None:
+            sib = sibling.get(i)
+            if sib is not None:
+                with state_lock:
+                    if sib not in started:
+                        cancelled.add(sib)  # race lost before it began
+
+        def run_one(d: _Dispatch) -> None:
+            try:
+                if not try_start(d.idx):
+                    done.put((d.idx, None))  # cancelled: ran nowhere, bills nothing
+                    return
+                if d.target in self.edges:
+                    rec = self.execute_edge(d.n_tokens, d.payload_bytes,
+                                            d.arrival_ms, device=d.target)
+                else:
+                    rec = self.execute_cloud(d.target, d.n_tokens,
+                                             d.payload_bytes, d.arrival_ms)
+                finished(d.idx)
+                done.put((d.idx, rec))
+            except BaseException as e:  # surface worker failures to the caller
+                done.put((d.idx, e))
+
+        by_target: dict[str, list[_Dispatch]] = {}
+        for d in plan:
+            by_target.setdefault(d.target, []).append(d)
+
+        def worker(rows: list[_Dispatch]) -> None:
+            for d in rows:
+                run_one(d)
+
+        threads = [threading.Thread(target=worker, args=(rows,), daemon=True)
+                   for rows in by_target.values()]
+        for t in threads:
+            t.start()
+        failure: BaseException | None = None
+        for _ in range(len(plan)):
+            idx, rec = done.get()
+            if isinstance(rec, BaseException):
+                failure = failure or rec
+            else:
+                results[idx] = rec
+        for t in threads:
+            t.join()
+        if failure is not None:
+            raise failure
+        return results
+
 
 def make_pool(model_cfg, specs: list[SliceSpec], t_idl_ms: float = 120_000.0,
               edge_spec: SliceSpec | None = None,
-              edge_specs: list[SliceSpec] | None = None) -> ExecutorPool:
+              edge_specs: list[SliceSpec] | None = None,
+              network: NetworkProfile | None = None,
+              devices: tuple | None = None) -> ExecutorPool:
     """Build the provider-side pool. ``edge_specs`` provisions a multi-device
     edge fleet (one always-resident executor per device); ``edge_spec`` is the
-    deprecated single-device spelling."""
+    deprecated single-device spelling. ``devices`` (default: all jax devices
+    when more than one is visible) spreads executors round-robin over jax
+    devices so concurrent executions overlap; ``network`` switches on the
+    emulated WAN legs."""
     if edge_specs is None:
         edge_specs = [edge_spec or SliceSpec(name="edge", chips=1, is_edge=True)]
+    if devices is None:
+        all_devs = tuple(jax.devices())
+        devices = all_devs if len(all_devs) > 1 else ()
     pool = ExecutorPool(
         model_cfg=model_cfg,
         specs={s.name: s for s in specs if not s.is_edge},
         t_idl_ms=t_idl_ms,
-        edges={s.name: LiveExecutor(s, model_cfg) for s in edge_specs},
-        edge_free_at={s.name: 0.0 for s in edge_specs},
+        network=network,
+        devices=tuple(devices),
     )
+    pool.edges = {s.name: LiveExecutor(s, model_cfg,
+                                       device=pool._next_device(),
+                                       network=network)
+                  for s in edge_specs}
+    pool.edge_free_at = {s.name: 0.0 for s in edge_specs}
     # each edge device's long-lived function is always resident (Sec. II-A.2):
     # every device pays its own one-time real compile at provisioning, never
     # during serving

@@ -13,12 +13,13 @@ the same Predictor / CIL / Decision Engine — ``repro.core`` is target-agnostic
 - ``LiveBackend`` implements the ``repro.core.runtime.ExecutionBackend``
   contract over the real executor pool: ``execute(task, target, now)`` runs a
   genuine compiled execution and bills slice-seconds; ``probe_cold`` asks the
-  pool whether a dispatch would pay a real XLA compile. The columnar decision
-  core still drives it — ``place_many`` hands the runtime a struct-of-arrays
-  ``DecisionBatch`` and the runtime materializes one lazy
-  ``PlacementDecision`` view per dispatch (real executions are inherently
-  per-task, so there is no ``execute_many`` here); results aggregate into the
-  same columnar ``RecordBatch``-backed ``SimulationResult`` as the twin;
+  pool whether a dispatch would pay a real XLA compile; ``execute_async``
+  runs a whole dispatch plan through the pool's CONCURRENT loop — one worker
+  thread per edge device and per cloud config, hedge legs as first-class
+  races — and returns the same struct-of-arrays ``ExecutionBatch`` as the
+  twin, so ``serve_async`` stays object-free over a columnar
+  ``DecisionBatch``; results aggregate into the same columnar
+  ``RecordBatch``-backed ``SimulationResult`` as the twin;
 - ``make_live_runtime`` wires catalog → predictor → Decision Engine →
   ``PlacementRuntime`` over a ``LiveBackend``: the SAME serve loop as the
   simulator, against real executions (paper Sec. VI-B analog — Table V falls
@@ -48,9 +49,16 @@ from repro.core.records import (  # noqa: F401 — re-export
     SimulationResult,
     TaskRecord,
 )
-from repro.core.runtime import ExecutionOutcome, PlacementRuntime
+from repro.core.runtime import ExecutionBatch, ExecutionOutcome, PlacementRuntime
 from repro.core.workload import PoissonWorkload, TaskInput
-from repro.serving.executors import ExecutorPool, LiveExecutor, SliceSpec, make_pool
+from repro.serving.executors import (
+    ExecutorPool,
+    LiveExecutor,
+    NetworkProfile,
+    SliceSpec,
+    _Dispatch,
+    make_pool,
+)
 
 # The always-on edge device is resource-constrained relative to cloud slices
 # (the paper's RPi-vs-Lambda gap): fewer tokens retired per compiled step.
@@ -327,23 +335,71 @@ class LiveBackend:
                                 cold=cold, completion_ms=now + rec.total_ms,
                                 exec_ms=rec.start_ms + rec.comp_ms)
 
+    # ---------------------------------------------------- concurrent driver
+    def execute_async(self, tasks: list[TaskInput], targets: list[str],
+                      races: list[tuple[int, int]] | None = None,
+                      ) -> ExecutionBatch:
+        """Run the dispatch plan through the pool's REAL concurrent loop.
+
+        One dispatcher thread per target (edge device / cloud config), so
+        fleet executions genuinely overlap on the wall clock; completions
+        land out of arrival order and the pool's lease/land bookkeeping
+        absorbs them. ``races`` are hedge pairs — the losing leg is cancelled
+        when it never started (its row comes back cancelled: zero cost,
+        infinite latency, ignored by the runtime's merge) or drained when it
+        did. Returns the same struct-of-arrays ``ExecutionBatch`` the twin
+        produces, so the async serve path stays object-free.
+        """
+        n = len(tasks)
+        plan = [_Dispatch(idx=i, target=tg, n_tokens=int(t.size),
+                          payload_bytes=t.bytes, arrival_ms=t.arrival_ms)
+                for i, (t, tg) in enumerate(zip(tasks, targets))]
+        recs = self.pool.serve_concurrent(plan, races=races)
+        out = ExecutionBatch(
+            latency_ms=np.full(n, np.inf), cost=np.zeros(n),
+            cold=np.zeros(n, dtype=bool), completion_ms=np.full(n, np.inf),
+            queue_wait_ms=np.zeros(n), exec_ms=np.zeros(n),
+            cancelled=np.zeros(n, dtype=bool))
+        for i, (t, tg, rec) in enumerate(zip(tasks, targets, recs)):
+            if rec is None:
+                out.cancelled[i] = True
+                continue
+            out.latency_ms[i] = rec.total_ms
+            out.completion_ms[i] = t.arrival_ms + rec.total_ms
+            if tg in self.pool.edges:
+                out.queue_wait_ms[i] = rec.queue_ms
+                out.exec_ms[i] = rec.comp_ms
+            else:
+                chips = self.pool.specs[tg].chips
+                out.cost[i] = self.pricing.cost(rec.comp_ms, chips)
+                out.cold[i] = rec.cold
+                out.exec_ms[i] = rec.start_ms + rec.comp_ms
+        return out
+
 
 def make_live_runtime(cat: SliceCatalog, policy: Policy,
                       t_idl_ms: float = 120_000.0,
                       quantile: float | None = None,
-                      n_edge_devices: int = 1) -> PlacementRuntime:
+                      n_edge_devices: int = 1,
+                      network: NetworkProfile | None = None) -> PlacementRuntime:
     """Wire a calibrated catalog into the unified serve loop: catalog →
     Predictor → DecisionEngine → ``PlacementRuntime`` over a ``LiveBackend``.
 
     ``n_edge_devices > 1`` provisions a fleet of always-resident edge
     executors (named ``edge0..``), so the live prototype serves fleets with
-    the same balancer-driven placement as the twin."""
+    the same balancer-driven placement as the twin. The returned runtime
+    exposes BOTH drivers: ``serve`` dispatches sequentially; ``serve_async``
+    runs the pool's concurrent dispatch loop (one worker thread per edge
+    device and per cloud config), overlapping real executions across the
+    fleet. ``network`` switches on the emulated WAN legs (upload / IoT
+    result-upload as real wall-clock waits) — the latency the async driver
+    overlaps with compute."""
     edge_specs = [SliceSpec(name, chips=EDGE_SPEC.chips,
                             tokens_per_step=EDGE_SPEC.tokens_per_step,
                             is_edge=True)
                   for name in _edge_fleet_names(n_edge_devices)]
     pool = make_pool(cat.model_cfg, [s for s in cat.specs if not s.is_edge],
-                     t_idl_ms=t_idl_ms, edge_specs=edge_specs)
+                     t_idl_ms=t_idl_ms, edge_specs=edge_specs, network=network)
     predictor = build_slice_predictor(cat, t_idl_ms=t_idl_ms, quantile=quantile,
                                       n_edge_devices=n_edge_devices)
     engine = DecisionEngine(predictor=predictor, policy=policy, edge_name=EDGE)

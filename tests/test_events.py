@@ -1,0 +1,331 @@
+"""The event-driven serving runtime (ISSUE 4).
+
+Covers:
+- the ``EventHeap`` ordering contract (time order; completion < dispatch <
+  arrival at ties; FIFO within identical (time, kind));
+- ``SingleSlotWorker`` event simulation ≡ the ``fifo_starts`` recurrence;
+- ``TwinBackend.execute_async`` bit-parity with ``execute_many`` (outcomes
+  AND end state), including hedge dispatch lists;
+- ``serve_async`` ≡ ``serve(batched=True)`` metric identity across
+  MinCost / MinLatency / Hedged on 1- and 3-device fleets, object-free
+  (``RecordBatch``) on the columnar path;
+- ``DecisionBatch.rows_by_target`` partitioning (the per-target worker
+  queues) and the graceful fallback for backends without an async driver.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+import pytest
+
+from repro.core.decision import (
+    DecisionBatch,
+    DecisionEngine,
+    HedgedPolicy,
+    MinCostPolicy,
+    MinLatencyPolicy,
+)
+from repro.core.events import (
+    ARRIVAL,
+    COMPLETION,
+    DISPATCH,
+    EventHeap,
+    SingleSlotWorker,
+)
+from repro.core.fit import build_fleet_predictor, build_predictor, fit_app
+from repro.core.records import RecordBatch
+from repro.core.recurrence import fifo_starts
+from repro.core.runtime import PlacementRuntime, TwinBackend
+
+CONFIGS = (1280, 1536, 1792)
+FLEET = {"edge0": 1.0, "edge1": 1.0, "edge2": 0.6}
+
+
+@pytest.fixture(scope="module")
+def fd_setup():
+    return fit_app("FD", seed=0, n_inputs=120, configs=CONFIGS)
+
+
+# ------------------------------------------------------------- heap contract
+def test_heap_pops_in_time_order():
+    heap = EventHeap()
+    for t in (5.0, 1.0, 3.0, 2.0, 4.0):
+        heap.push(t, ARRIVAL, t)
+    assert [e.time_ms for e in heap.drain()] == [1.0, 2.0, 3.0, 4.0, 5.0]
+
+
+def test_heap_tie_order_completion_dispatch_arrival():
+    """At one instant a completion frees capacity a dispatch/arrival may use —
+    never the reverse — so kinds pop completion < dispatch < arrival."""
+    heap = EventHeap()
+    heap.push(7.0, ARRIVAL, "a")
+    heap.push(7.0, COMPLETION, "c")
+    heap.push(7.0, DISPATCH, "d")
+    assert [e.payload for e in heap.drain()] == ["c", "d", "a"]
+
+
+def test_heap_fifo_within_identical_time_and_kind():
+    heap = EventHeap()
+    for i in range(10):
+        heap.push(1.0, COMPLETION, i)
+    assert [e.payload for e in heap.drain()] == list(range(10))
+
+
+def test_heap_push_while_draining_and_rejects_unknown_kind():
+    heap = EventHeap()
+    heap.push(0.0, ARRIVAL, "first")
+    seen = []
+    for ev in heap.drain():
+        seen.append(ev.payload)
+        if ev.payload == "first":
+            heap.push(1.0, COMPLETION, "second")
+    assert seen == ["first", "second"]
+    with pytest.raises(ValueError, match="kind"):
+        heap.push(0.0, 99, None)
+
+
+def test_single_slot_worker_matches_fifo_starts():
+    """The event-driven single-slot FIFO ≡ the cumsum recurrence, including
+    ties (simultaneous arrivals) and idle gaps."""
+    rng = np.random.default_rng(0)
+    gaps = np.round(rng.exponential(50.0, size=200), 0)  # rounding forces ties
+    nows = np.cumsum(gaps) - gaps[0]
+    comp = np.round(rng.exponential(80.0, size=200) + 1.0, 1)
+    ref_starts, ref_free = fifo_starts(25.0, nows, comp)
+
+    heap = EventHeap()
+    w = SingleSlotWorker(free_at=25.0)
+    starts = np.empty(200)
+    for i in range(200):
+        heap.push(float(nows[i]), ARRIVAL, i)
+    for ev in heap.drain():
+        if ev.kind == ARRIVAL:
+            got = w.arrive(ev.time_ms, ev.payload)
+            if got is not None:
+                heap.push(got[0], DISPATCH, got)
+        elif ev.kind == DISPATCH:
+            start, i = ev.payload
+            starts[i] = start
+            heap.push(start + float(comp[i]), COMPLETION, i)
+        else:
+            nxt = w.complete(ev.time_ms)
+            if nxt is not None:
+                heap.push(nxt[0], DISPATCH, nxt)
+    np.testing.assert_array_equal(starts, ref_starts)
+    assert w.free_at == ref_free
+
+
+# ------------------------------------------------- twin event-driver parity
+def _fleet_backend(twin, seed=11):
+    return TwinBackend(twin, seed=seed, edge_names=tuple(FLEET),
+                       edge_speed=FLEET)
+
+
+def test_execute_async_bit_identical_to_execute_many(fd_setup):
+    twin, models = fd_setup
+    tasks = twin.workload(600, seed=2)
+    eng = DecisionEngine(
+        predictor=build_fleet_predictor(models, FLEET, configs=CONFIGS),
+        policy=MinLatencyPolicy(c_max=1e-5, alpha=0.02))  # edge/cloud mix
+    targets = [d.target for d in eng.place_many(tasks)]
+    assert {tg for tg in targets} & set(FLEET), "need edge dispatches"
+    assert {tg for tg in targets} - set(FLEET), "need cloud dispatches"
+
+    b_many = _fleet_backend(twin)
+    b_evts = _fleet_backend(twin)
+    a = b_many.execute_many(tasks, targets)
+    b = b_evts.execute_async(tasks, targets)
+    for f in ("latency_ms", "cost", "cold", "completion_ms",
+              "queue_wait_ms", "exec_ms"):
+        np.testing.assert_array_equal(getattr(a, f), getattr(b, f), err_msg=f)
+    # identical end state: FIFO horizons and the ground-truth container pools
+    assert b_many.edge_free_at == b_evts.edge_free_at
+    assert b_many.gt_cloud.pools.keys() == b_evts.gt_cloud.pools.keys()
+    for cfg, pool in b_many.gt_cloud.pools.items():
+        other = b_evts.gt_cloud.pools[cfg]
+        assert [(c.busy_until, c.last_completion, c.expires_at) for c in pool] \
+            == [(c.busy_until, c.last_completion, c.expires_at) for c in other]
+
+
+def _runtime(twin, models, policy, fleet: bool, seed=17):
+    if fleet:
+        pred = build_fleet_predictor(models, FLEET, configs=CONFIGS)
+        backend = _fleet_backend(twin, seed=seed)
+    else:
+        pred = build_predictor(models, configs=CONFIGS)
+        backend = TwinBackend(twin, seed=seed)
+    return PlacementRuntime(DecisionEngine(predictor=pred, policy=policy),
+                            backend)
+
+
+POLICIES = {
+    "mincost": lambda: MinCostPolicy(deadline_ms=4500.0),
+    "minlat": lambda: MinLatencyPolicy(c_max=2.97e-5, alpha=0.02),
+    "hedged": lambda: HedgedPolicy(MinLatencyPolicy(c_max=8e-5, alpha=0.0),
+                                   hedge_threshold_ms=1500.0),
+}
+
+
+@pytest.mark.parametrize("fleet", [False, True], ids=["1-device", "3-device"])
+@pytest.mark.parametrize("policy", list(POLICIES))
+def test_serve_async_metric_identical_to_batched_serve(fd_setup, policy, fleet):
+    """The ISSUE-4 acceptance bar: serve_async ≡ serve(batched=True) on the
+    twin — identical SimulationResult metrics and per-record outcomes."""
+    twin, models = fd_setup
+    tasks = twin.workload(250, seed=3)
+    a = _runtime(twin, models, POLICIES[policy](), fleet).serve(tasks)
+    b = _runtime(twin, models, POLICIES[policy](), fleet).serve_async(tasks)
+
+    assert a.total_actual_cost == b.total_actual_cost
+    assert a.total_predicted_cost == b.total_predicted_cost
+    assert a.avg_actual_latency_ms == b.avg_actual_latency_ms
+    assert a.p99_actual_latency_ms == b.p99_actual_latency_ms
+    assert a.pct_deadline_violated == b.pct_deadline_violated
+    assert a.pct_cost_violated == b.pct_cost_violated
+    assert a.n_warm_cold_mismatches == b.n_warm_cold_mismatches
+    assert [r.target for r in a.records] == [r.target for r in b.records]
+    assert [r.hedged for r in a.records] == [r.hedged for r in b.records]
+    np.testing.assert_array_equal(a.records.actual_latency_ms,
+                                  b.records.actual_latency_ms)
+    np.testing.assert_array_equal(a.records.completion_ms,
+                                  b.records.completion_ms)
+    if policy == "hedged":
+        assert any(r.hedged for r in b.records), "scenario must hedge"
+    if fleet:
+        assert a.device_summaries() == b.device_summaries()
+
+
+def test_serve_async_columnar_path_stays_object_free(fd_setup):
+    twin, models = fd_setup
+    tasks = twin.workload(120, seed=4)
+    rt = _runtime(twin, models, MinLatencyPolicy(c_max=2.97e-5, alpha=0.02),
+                  fleet=True)
+    res = rt.serve_async(tasks)
+    # columnar decisions + ExecutionBatch outcomes merge straight into the
+    # columnar record store — no TaskRecord objects on the async path
+    assert isinstance(res.records, RecordBatch)
+    assert res.n == 120
+
+
+def test_rows_by_target_partitions_the_batch(fd_setup):
+    twin, models = fd_setup
+    tasks = twin.workload(200, seed=5)
+    eng = DecisionEngine(
+        predictor=build_fleet_predictor(models, FLEET, configs=CONFIGS),
+        policy=MinLatencyPolicy(c_max=2.97e-5, alpha=0.02))
+    batch = eng.place_many(tasks)
+    assert isinstance(batch, DecisionBatch)
+    queues = batch.rows_by_target()
+    # each worker queue is arrival-ordered; together they cover every row once
+    for name, rows in queues.items():
+        assert np.all(np.diff(rows) > 0)
+        assert all(batch.names[batch.target_codes[r]] == name
+                   for r in rows.tolist())
+    merged = np.sort(np.concatenate(list(queues.values())))
+    np.testing.assert_array_equal(merged, np.arange(len(batch)))
+
+
+def test_completion_order_is_the_event_stream(fd_setup):
+    """``RecordBatch.completion_order`` replays rows as the completion-event
+    stream emitted them — sorted by completion time, stable on ties — and is
+    a permutation of the arrival-ordered batch."""
+    twin, models = fd_setup
+    tasks = twin.workload(150, seed=7)
+    res = _runtime(twin, models, MinLatencyPolicy(c_max=1e-5, alpha=0.02),
+                   fleet=True).serve_async(tasks)
+    order = res.records.completion_order()
+    completions = res.records.completion_ms[order]
+    assert np.all(np.diff(completions) >= 0.0)
+    np.testing.assert_array_equal(np.sort(order), np.arange(res.n))
+    # queueing makes completion order genuinely differ from arrival order
+    assert not np.array_equal(order, np.arange(res.n))
+
+
+def test_race_hedge_wins_attributes_execution_to_the_hedge():
+    """When a concurrent driver cancels the PRIMARY leg (the hedge completed
+    while the primary was still queued), the record must report the leg that
+    actually ran — its target, actuals, and device occupancy — with the
+    cancelled primary as the zero-occupancy duplicate."""
+    from repro.core.predictor import Prediction, Predictor
+    from repro.core.runtime import ExecutionBatch
+    from repro.core.workload import TaskInput
+
+    class _Tgt:
+        def __init__(self, name, lat, cost, is_edge=False):
+            self.name, self.is_edge = name, is_edge
+            self._lat, self._cost = lat, cost
+
+        def predict_components(self, task, cold=False, quantile=None):
+            return {"comp": self._lat}
+
+        def cost(self, comp_ms):
+            return self._cost
+
+        def occupancy_ms(self, components):
+            return components["comp"]
+
+    class _NoopBackend:
+        def probe_cold(self, target, now):
+            return False
+
+        def execute(self, task, target, now):
+            raise AssertionError("async path must not call execute()")
+
+    eng = DecisionEngine(
+        predictor=Predictor(cloud_targets=[_Tgt("fast", 100.0, 2.0),
+                                           _Tgt("slow", 120.0, 1.5)],
+                            edge_target=_Tgt("edge", 5000.0, 0.0, is_edge=True)),
+        policy=HedgedPolicy(MinLatencyPolicy(c_max=4.0, alpha=0.0),
+                            hedge_threshold_ms=50.0))
+    rt = PlacementRuntime(eng, _NoopBackend())
+    task = TaskInput(idx=0, arrival_ms=0.0, size=1.0, bytes=1.0)
+    decisions = eng.place_many([task])
+    (d,) = decisions
+    assert d.target == "fast" and d.hedge_target == "slow"
+
+    def run(d_tasks, d_targets, races):
+        assert d_targets == ["fast", "slow"] and races == [(0, 1)]
+        return ExecutionBatch(  # primary cancelled; hedge ran for real
+            latency_ms=np.array([np.inf, 80.0]),
+            cost=np.array([0.0, 1.5]),
+            cold=np.array([False, True]),
+            completion_ms=np.array([np.inf, 80.0]),
+            queue_wait_ms=np.array([0.0, 0.0]),
+            exec_ms=np.array([0.0, 75.0]),
+            cancelled=np.array([True, False]))
+
+    (rec,) = rt._race_decisions([task], decisions, run)
+    assert rec.hedged and rec.target == "slow" and rec.hedge_target == "fast"
+    assert rec.actual_latency_ms == 80.0 and rec.completion_ms == 80.0
+    assert rec.actual_cost == 1.5          # only the leg that ran bills
+    assert rec.actual_cold                 # the WINNING leg's cold compile
+    assert rec.exec_ms == 75.0             # occupancy lands on the run target
+    assert rec.hedge_exec_ms == 0.0        # the cancelled leg occupied nothing
+    assert rec.predicted_cost == pytest.approx(3.5)   # decision-time two-leg bet
+    assert rec.predicted_latency_ms == pytest.approx(100.0)
+
+
+def test_serve_async_without_async_backend_falls_back(fd_setup):
+    """A backend with no concurrent driver serves the identical plan
+    synchronously — serve_async never requires execute_async."""
+    twin, models = fd_setup
+    tasks = twin.workload(60, seed=6)
+
+    class SyncOnly:
+        def __init__(self, inner):
+            self.inner = inner
+
+        def probe_cold(self, target, now):
+            return self.inner.probe_cold(target, now)
+
+        def execute(self, task, target, now):
+            return self.inner.execute(task, target, now)
+
+    a = _runtime(twin, models, MinLatencyPolicy(c_max=2.97e-5, alpha=0.02),
+                 fleet=False).serve(tasks)
+    rt = _runtime(twin, models, MinLatencyPolicy(c_max=2.97e-5, alpha=0.02),
+                  fleet=False)
+    rt.backend = SyncOnly(rt.backend)
+    b = rt.serve_async(tasks)
+    assert a.total_actual_cost == b.total_actual_cost
+    assert [r.target for r in a.records] == [r.target for r in b.records]

@@ -202,6 +202,88 @@ def test_gbrt_predict_jax_matches_numpy(rng):
                                rtol=1e-4, atol=1e-4)
 
 
+# -------------------------------------------------- event-heap ordering (ISSUE 4)
+@given(
+    events=st.lists(
+        st.tuples(
+            # a coarse grid of times forces heavy ties, incl. whole bursts of
+            # simultaneous completions
+            st.sampled_from([0.0, 1.0, 1.0, 2.5, 2.5, 2.5, 7.0, 1e6]),
+            st.sampled_from([0, 1, 2]),  # COMPLETION, DISPATCH, ARRIVAL
+        ),
+        max_size=120,
+    )
+)
+@settings(max_examples=100, deadline=None)
+def test_event_heap_order_total_and_fifo_under_ties(events):
+    """The async serve path is deterministic because heap order is total:
+    nondecreasing time; completion < dispatch < arrival at equal times (a
+    completion frees capacity a simultaneous arrival may use); FIFO (push
+    order) within identical (time, kind) — simultaneous completions pop in
+    the order they were scheduled."""
+    from repro.core.events import EventHeap
+
+    heap = EventHeap()
+    for i, (t, kind) in enumerate(events):
+        heap.push(t, kind, i)
+    popped = list(heap.drain())
+
+    assert len(popped) == len(events)
+    keys = [(e.time_ms, e.kind, e.seq) for e in popped]
+    assert keys == sorted(keys)  # the total order, verbatim
+    # every event popped exactly once
+    assert sorted(e.payload for e in popped) == list(range(len(events)))
+    # FIFO within identical (time, kind): payloads == push indices, so each
+    # tie group must come back strictly increasing
+    groups: dict = {}
+    for e in popped:
+        groups.setdefault((e.time_ms, e.kind), []).append(e.payload)
+    for seq in groups.values():
+        assert seq == sorted(seq)
+
+
+@given(
+    gaps=st.lists(st.sampled_from([0.0, 0.0, 1.0, 5.0, 250.0]),
+                  min_size=1, max_size=60),
+    busy=st.data(),
+    free0=st.sampled_from([0.0, 40.0]),
+)
+@settings(max_examples=60, deadline=None)
+def test_single_slot_worker_equals_fifo_recurrence(gaps, busy, free0):
+    """Event-driven single-slot FIFO ≡ ``fifo_starts`` (the cumsum form) on
+    arbitrary arrival patterns with ties and idle gaps — the equivalence the
+    twin's async edge workers rely on."""
+    from repro.core.events import ARRIVAL, COMPLETION, DISPATCH, EventHeap, SingleSlotWorker
+    from repro.core.recurrence import fifo_starts
+
+    n = len(gaps)
+    nows = np.cumsum(np.asarray(gaps))
+    comp = np.asarray([busy.draw(st.sampled_from([0.5, 3.0, 120.0]))
+                       for _ in range(n)])
+    ref_starts, ref_free = fifo_starts(free0, nows, comp)
+
+    heap = EventHeap()
+    w = SingleSlotWorker(free_at=free0)
+    starts = np.empty(n)
+    for i in range(n):
+        heap.push(float(nows[i]), ARRIVAL, i)
+    for ev in heap.drain():
+        if ev.kind == ARRIVAL:
+            got = w.arrive(ev.time_ms, ev.payload)
+            if got is not None:
+                heap.push(got[0], DISPATCH, got)
+        elif ev.kind == DISPATCH:
+            start, i = ev.payload
+            starts[i] = start
+            heap.push(start + float(comp[i]), COMPLETION, i)
+        else:
+            nxt = w.complete(ev.time_ms)
+            if nxt is not None:
+                heap.push(nxt[0], DISPATCH, nxt)
+    np.testing.assert_array_equal(starts, ref_starts)
+    assert w.free_at == ref_free
+
+
 # ------------------------------------------------------- sharding invariants
 def test_rules_always_divisible_for_all_archs():
     """Every resolved rule must divide the corresponding tensor dims, for

@@ -16,11 +16,19 @@ from repro.configs import smoke_config
 from repro.core.decision import MinCostPolicy, MinLatencyPolicy
 from repro.modeling.registry import build_model
 from repro.serving.engine import batch_prompts, generate
-from repro.serving.executors import LiveExecutor, SliceSpec, make_pool
+from repro.serving.executors import (
+    ExecutionRecord,
+    LiveExecutor,
+    NetworkProfile,
+    SliceSpec,
+    _Dispatch,
+    make_pool,
+)
 from repro.serving.placement import (
     LivePlacementServer,
     calibrate_catalog,
     llm_workload,
+    make_live_runtime,
 )
 
 TINY = dict(n_layers=2, d_model=32, d_ff=64, vocab=64, n_heads=2,
@@ -94,6 +102,143 @@ def test_edge_fifo_queueing(tiny_cfg):
     # arrival while the first is (virtually) still running queues behind it
     r2 = pool.execute_edge(64, 1.0, arrival_ms=0.1)
     assert r2.queue_ms > 0.0
+
+
+# ------------------------------------------- out-of-order completion landing
+def _landed(pool, name, c, arrival_ms, busy_ms, warm=True):
+    """Land a synthetic completion on a leased container (unit-level stand-in
+    for a real execution finishing — lets the test place completions at exact
+    virtual times and in exact landing order)."""
+    if warm:
+        c._compiled = ("stub",) * 4  # resident executable, no real compile
+    pool.land(c, arrival_ms, ExecutionRecord(
+        feed_ms=0.0, start_ms=0.0, comp_ms=busy_ms, store_ms=0.0, cold=False))
+
+
+def test_pool_reap_protects_in_flight_containers(tiny_cfg):
+    """ISSUE-4 bugfix regression: a leased (in-flight) container carries STALE
+    virtual lifecycle fields until its completion lands — the idle-eviction
+    sweep must never evict or drop it (the old push-order sweep dropped it,
+    leaking the warm executable mid-execution)."""
+    pool = make_pool(tiny_cfg, [SliceSpec("s2", 2)], t_idl_ms=1_000.0,
+                     edge_specs=[])
+    c = pool.lease("s2", 0.0)
+    assert c.in_flight and c.last_completion == 0.0  # stale until land
+    # a much later dispatch sweeps while c is still executing: its stale
+    # lifecycle says "idle since t=0, long expired" — it must survive
+    pool._reap("s2", now=50_000.0)
+    assert c in pool.containers["s2"]
+    _landed(pool, "s2", c, arrival_ms=50_000.0, busy_ms=100.0)
+    assert not c.in_flight
+    # now warm and reusable at its landed completion time
+    assert not pool.probe_cold("s2", now=50_150.0)
+    assert pool.lease("s2", 50_150.0) is c
+
+
+def test_pool_eviction_sweeps_completion_order_not_push_order(tiny_cfg):
+    """ISSUE-4 bugfix regression: completions land out of arrival order under
+    the concurrent driver, so push order says nothing about idle time — the
+    sweep must judge each container by its landed completion time."""
+    pool = make_pool(tiny_cfg, [SliceSpec("s2", 2)], t_idl_ms=1_000.0,
+                     edge_specs=[])
+    a = pool.lease("s2", 0.0)   # pushed first
+    b = pool.lease("s2", 0.0)   # pushed second (a is in flight)
+    # completions land in REVERSE push order: b first (busy far into the
+    # virtual future), then a (already idle since t=500)
+    _landed(pool, "s2", b, arrival_ms=0.0, busy_ms=5_000.0)  # completes 5000
+    _landed(pool, "s2", a, arrival_ms=0.0, busy_ms=500.0)    # completes  500
+    # at t=1600: a has idled 1100 > t_idl → reclaimed; b is still busy
+    pool._reap("s2", now=1_600.0)
+    assert pool.containers["s2"] == [b]
+    assert not a.is_warm(), "expired container must drop its executable"
+    # at t=6200: b idled 1200 > t_idl → reclaimed too
+    pool._reap("s2", now=6_200.0)
+    assert pool.containers["s2"] == []
+
+
+def test_pool_failed_execution_releases_the_lease(tiny_cfg, monkeypatch):
+    """A dispatch that raises mid-execution must not leak its lease: the
+    container returns to the pool (lifecycle untouched) instead of staying
+    in flight forever and forcing a cold start on every later dispatch."""
+    pool = make_pool(tiny_cfg, [SliceSpec("s2", 2)], t_idl_ms=60_000.0,
+                     edge_specs=[])
+    boom = RuntimeError("transient executor failure")
+    monkeypatch.setattr(LiveExecutor, "execute",
+                        lambda self, n, b: (_ for _ in ()).throw(boom))
+    with pytest.raises(RuntimeError, match="transient"):
+        pool.execute_cloud("s2", 16, 1.0, now=0.0)
+    (c,) = pool.containers["s2"]
+    assert not c.in_flight, "failed execution must release the lease"
+    monkeypatch.undo()
+    _landed(pool, "s2", c, arrival_ms=10.0, busy_ms=100.0)
+    assert pool.lease("s2", 500.0) is c  # warm and reusable after recovery
+
+
+def test_pool_mru_reuse_follows_landed_completions(tiny_cfg):
+    """Reuse picks the most-recently-COMPLETED idle container (AWS order),
+    judged on landed completion times, not lease order."""
+    pool = make_pool(tiny_cfg, [SliceSpec("s2", 2)], t_idl_ms=60_000.0,
+                     edge_specs=[])
+    a = pool.lease("s2", 0.0)
+    b = pool.lease("s2", 0.0)
+    _landed(pool, "s2", b, arrival_ms=0.0, busy_ms=100.0)   # completes 100
+    _landed(pool, "s2", a, arrival_ms=0.0, busy_ms=900.0)   # completes 900
+    assert pool.lease("s2", 2_000.0) is a  # MRU = a despite b landing... first
+
+
+# ---------------------------------------------------- concurrent dispatch
+def test_serve_concurrent_matches_targets_and_queues(tiny_cfg):
+    """The concurrent loop serves every dispatch on its own target with the
+    same per-device virtual FIFO accounting as the sequential path."""
+    pool = make_pool(tiny_cfg, [SliceSpec("s2", 2, tokens_per_step=4)],
+                     edge_specs=[SliceSpec(f"edge{i}", 1, tokens_per_step=4,
+                                           is_edge=True) for i in range(2)])
+    plan = [
+        _Dispatch(0, "edge0", 64, 16.0, 0.0),
+        _Dispatch(1, "edge1", 64, 16.0, 0.0),
+        _Dispatch(2, "s2", 32, 16.0, 0.0),
+        _Dispatch(3, "edge0", 64, 16.0, 0.1),  # queues behind dispatch 0
+    ]
+    recs = pool.serve_concurrent(plan)
+    assert all(r is not None for r in recs)
+    assert recs[3].queue_ms > 0.0, "virtual FIFO wait must survive concurrency"
+    assert recs[2].cold  # first dispatch to s2 pays the real compile
+    assert pool.edge_free_at["edge0"] > pool.edge_free_at["edge1"]
+
+
+def test_serve_concurrent_cancels_unstarted_race_loser(tiny_cfg):
+    """Hedge races are first-class: when the primary completes while the
+    hedge leg is still queued behind its target's backlog, the loser is
+    cancelled — it ran nowhere and bills nothing."""
+    pool = make_pool(tiny_cfg, [SliceSpec("s2", 2, tokens_per_step=4)],
+                     edge_specs=[SliceSpec("edge", 1, tokens_per_step=4,
+                                           is_edge=True)])
+    plan = [
+        _Dispatch(0, "s2", 6_000, 16.0, 0.0),   # long head-of-line blocker
+        _Dispatch(1, "edge", 8, 16.0, 1.0),     # primary: tiny, finishes fast
+        _Dispatch(2, "s2", 6_000, 16.0, 1.0),   # hedge: queued behind 0
+    ]
+    recs = pool.serve_concurrent(plan, races=[(1, 2)])
+    assert recs[0] is not None and recs[1] is not None
+    assert recs[2] is None, "queued race loser must be cancelled"
+
+
+@pytest.mark.slow
+def test_live_async_serve_overlaps_and_serves_all(tiny_cfg):
+    """serve_async over the real pool: every task served, finite metrics,
+    fleet device accounting intact — the live half of the ISSUE-4 driver."""
+    specs = [SliceSpec("s2", 2, tokens_per_step=4),
+             SliceSpec("s8", 8, tokens_per_step=4)]
+    cat = calibrate_catalog(tiny_cfg, specs, n_tasks=6, n_cold=1, seed=0)
+    tasks = llm_workload(24, rate_per_s=40.0, seed=2, mean_tokens=128)
+    rt = make_live_runtime(cat, MinLatencyPolicy(c_max=0.01, alpha=0.05),
+                           t_idl_ms=30_000.0, n_edge_devices=3,
+                           network=NetworkProfile(base_ms=2.0))
+    res = rt.serve_async(tasks)
+    assert res.n == 24
+    assert np.isfinite(res.avg_actual_latency_ms)
+    assert res.total_actual_cost <= 0.01 * 24
+    assert sum(s.n_tasks for s in res.device_summaries().values()) == res.n_edge
 
 
 @pytest.mark.slow
