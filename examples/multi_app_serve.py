@@ -1,0 +1,92 @@
+"""Cross-application streaming serve: IR + FD + STT as parallel shards.
+
+The paper evaluates each application in isolation; real edge platforms run
+long-lived mixes (EdgeBench's trio). This example:
+
+1. streams ONE application through ``PlacementRuntime.serve_stream`` and
+   shows the parity guarantee — the chunked result is bit-identical to the
+   one-shot ``serve(batched=True)``, at O(chunk) working memory;
+2. serves all three applications as ``AppShard``s through ``serve_sharded``
+   — each shard owns its fitted Predictor, its policy budget, and its own
+   3-device fleet partition — and prints the cross-app report.
+
+    PYTHONPATH=src python examples/multi_app_serve.py
+"""
+
+from __future__ import annotations
+
+import functools
+import time
+
+import numpy as np
+
+from repro.core.decision import DecisionEngine, MinLatencyPolicy
+from repro.core.fit import build_fleet_predictor, fit_app
+from repro.core.multiapp import AppShard, serve_sharded
+from repro.core.runtime import PlacementRuntime, TwinBackend
+
+CONFIGS = (1280, 1536, 1792)
+FLEET = {"edge0": 1.0, "edge1": 1.0, "edge2": 0.6}
+N_PER_APP = 100_000
+CHUNK = 16_384
+
+SETUPS = {app: fit_app(app, seed=0, n_inputs=120, configs=CONFIGS)
+          for app in ("IR", "FD", "STT")}
+
+
+def make_runtime(app: str, c_max: float = 0.0) -> PlacementRuntime:
+    twin, models = SETUPS[app]
+    pred = build_fleet_predictor(models, dict(FLEET), configs=CONFIGS)
+    eng = DecisionEngine(predictor=pred,
+                         policy=MinLatencyPolicy(c_max=c_max, alpha=0.0))
+    backend = TwinBackend(twin, seed=7, edge_names=tuple(FLEET),
+                          edge_speed=FLEET)
+    return PlacementRuntime(eng, backend)
+
+
+def make_workload(app: str, n: int = N_PER_APP):
+    # a generator of columnar TaskChunks: O(chunk) live tasks, bit-identical
+    # to the list the same workload's generate(n) would build
+    return SETUPS[app][0].poisson(seed=3).chunks(n, chunk_size=CHUNK)
+
+
+def main() -> None:
+    # ---- 1. streaming parity: chunked ≡ one-shot, per record --------------
+    tasks = SETUPS["STT"][0].workload(20_000, seed=3)
+    one = make_runtime("STT").serve(tasks, batched=True)
+    streamed = make_runtime("STT").serve_stream(tasks, chunk_size=1024)
+    assert list(streamed.records.targets) == list(one.records.targets)
+    assert np.array_equal(streamed.records.actual_latency_ms,
+                          one.records.actual_latency_ms)
+    assert np.array_equal(streamed.records.completion_ms,
+                          one.records.completion_ms)
+    print("serve_stream(chunk=1024) ≡ serve(batched=True): "
+          f"{streamed.n:,} records identical\n")
+
+    # ---- 2. the cross-application fleet ----------------------------------
+    shards = [AppShard(name=app,
+                       runtime=functools.partial(make_runtime, app),
+                       workload=functools.partial(make_workload, app),
+                       chunk_size=CHUNK)
+              for app in SETUPS]
+    t0 = time.perf_counter()
+    seq = serve_sharded(shards, parallel=False)
+    seq_s = time.perf_counter() - t0
+    t0 = time.perf_counter()
+    par = serve_sharded(shards)  # threads; use_processes=True for isolation
+    par_s = time.perf_counter() - t0
+
+    for app in SETUPS:  # independent shards: scheduling perturbs nothing
+        assert np.array_equal(par.results[app].records.actual_latency_ms,
+                              seq.results[app].records.actual_latency_ms)
+
+    print(f"3 apps × {N_PER_APP:,} tasks   sequential {seq_s:.2f}s   "
+          f"parallel {par_s:.2f}s\n")
+    print(par.table())
+    print("\nper-app stream stats:")
+    for app, st in par.stream_stats.items():
+        print(f"  {app:<4} {st}")
+
+
+if __name__ == "__main__":
+    main()

@@ -13,7 +13,8 @@ Components (paper section in parens):
                      ``hedge``/``observe``) and the Decision Engine:
                      min-cost-s.t.-deadline & min-latency-s.t.-cost, per task
                      (``place``) or batched (``place_many``) (III-B, Alg. 1)
-- ``workload``     — Poisson arrival workload generators (II-B)
+- ``workload``     — Poisson/bursty arrival generators, as task lists or
+                     streaming columnar ``TaskChunk``s (II-B)
 - ``apps``         — AWS digital twin for the paper's IR / FD / STT applications (II-B, IV-C)
 - ``records``      — per-task TaskRecord + aggregate SimulationResult metrics (VI)
 - ``events``       — the event scheduler behind the async serve path: min-heap of
@@ -22,8 +23,11 @@ Components (paper section in parens):
 - ``runtime``      — the unified serve loop: ``PlacementRuntime`` over pluggable
                      ``ExecutionBackend``s (``TwinBackend`` here,
                      ``repro.serving.placement.LiveBackend`` live), with the
-                     synchronous ``serve`` and the event-driven ``serve_async``
-                     drivers (VI-A/B)
+                     synchronous ``serve``, the event-driven ``serve_async``,
+                     and the constant-memory chunked ``serve_stream`` drivers
+                     (VI-A/B)
+- ``multiapp``     — cross-application sharded serving: N independent app
+                     streams (``AppShard``) in parallel workers
 - ``simulator``    — deprecated alias kept for backward compatibility
 """
 
@@ -47,8 +51,26 @@ from repro.core.decision import (
     RandomBalancer,
     RoundRobinBalancer,
 )
-from repro.core.workload import BurstyWorkload, PoissonWorkload, TaskInput
-from repro.core.records import DeviceSummary, RecordBatch, SimulationResult, TaskRecord
+from repro.core.workload import (
+    BurstyWorkload,
+    PoissonWorkload,
+    TaskChunk,
+    TaskInput,
+    task_arrays,
+)
+from repro.core.records import (
+    DeviceSummary,
+    RecordArena,
+    RecordBatch,
+    SimulationResult,
+    TaskRecord,
+)
+from repro.core.multiapp import (
+    AppShard,
+    ShardedResult,
+    ShardedRuntime,
+    serve_sharded,
+)
 from repro.core.recurrence import fifo_starts
 from repro.core.events import Event, EventHeap, SingleSlotWorker
 from repro.core.runtime import (
@@ -93,10 +115,17 @@ __all__ = [
     "PolicyConstraints",
     "PredictedEdgeQueue",
     "PoissonWorkload",
+    "TaskChunk",
     "TaskInput",
+    "task_arrays",
+    "RecordArena",
     "RecordBatch",
     "SimulationResult",
     "TaskRecord",
+    "AppShard",
+    "ShardedResult",
+    "ShardedRuntime",
+    "serve_sharded",
     "Event",
     "EventHeap",
     "SingleSlotWorker",

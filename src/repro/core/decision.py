@@ -65,6 +65,7 @@ from repro.core.cil import ContainerInfoList
 from repro.core.predictor import EDGE as EDGE_NAME
 from repro.core.predictor import Prediction, PredictionBatch, Predictor
 from repro.core.recurrence import horizon_before, surplus_trajectory
+from repro.core.workload import task_arrays
 
 # Columnar speculate-and-repair tuning — all correctness-neutral (only wall
 # time changes): the max/min speculation span (the span tracks a few multiples
@@ -409,9 +410,7 @@ class _ColumnarContext:
         self.has_edge = self.n_dev > 0
         self.T = self.n_cloud + (1 if self.has_edge else 0)
         self.edge_col = self.T - 1 if self.has_edge else -1
-        self.nows = np.array([t.arrival_ms for t in tasks], dtype=np.float64)
-        self.task_idx = np.array([getattr(t, "idx", -1) for t in tasks],
-                                 dtype=np.int64)
+        self.task_idx, self.nows, _, _ = task_arrays(tasks, "ia")
         self.cwarm = [batch.cloud[nm].warm_latency for nm in self.cloud_names]
         self.ccold = [batch.cloud[nm].cold_latency for nm in self.cloud_names]
         self.ccost = [batch.cloud[nm].cost for nm in self.cloud_names]
@@ -467,6 +466,11 @@ class DecisionEngine:
         self.columnar = columnar
         self.decisions: list[PlacementDecision] = []
         self.columnar_stats: dict | None = None
+        # the speculate-and-repair accept-run EMA, persisted across
+        # ``place_many`` calls so a chunked stream resumes speculation at the
+        # span the workload has already earned instead of re-slow-starting
+        # every chunk (correctness-neutral: only wall time changes)
+        self._spec_ema: float | None = None
         missing = [m for m in _POLICY_METHODS if not hasattr(self.policy, m)]
         if missing:
             raise TypeError(
@@ -613,9 +617,15 @@ class DecisionEngine:
         # scalar-on-arrays loop decides a stretch before speculation retries.
         # slow-start the span: clean regimes double their way up to the full
         # chunk within a few segments, while oscillating regimes never pay a
-        # full-chunk pass per repair
-        run_ema = float(COLUMNAR_WALK_STRETCH // 8)
-        span = 8.0 * run_ema
+        # full-chunk pass per repair. A chunked stream resumes from the EMA
+        # the previous chunk converged to (see ``_spec_ema``).
+        if self._spec_ema is not None:
+            run_ema = self._spec_ema
+            span = min(float(COLUMNAR_CHUNK),
+                       max(float(COLUMNAR_MIN_CHUNK), 8.0 * run_ema))
+        else:
+            run_ema = float(COLUMNAR_WALK_STRETCH // 8)
+            span = 8.0 * run_ema
         repairs_streak = 0
         inner = 0
         end = 0
@@ -662,6 +672,7 @@ class DecisionEngine:
         # the last arrival leaves the identical observable end state
         ctx.cil.reap(float(ctx.nows[-1]))
         self.columnar_stats = stats
+        self._spec_ema = run_ema
         return DecisionBatch(
             batch=batch,
             names=tuple(ctx.cloud_names) + tuple(ctx.dev_names),

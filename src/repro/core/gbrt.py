@@ -98,17 +98,15 @@ class GBRT:
             )
         return float(out[0]) if scalar else out
 
-    def predict_const1(self, x0: np.ndarray, c: float) -> np.ndarray:
-        """Fast path for 2-feature models whose feature 1 is fixed at ``c``.
+    def const1_table(self, c: float) -> tuple[np.ndarray, np.ndarray]:
+        """The (breaks, values) step table of ``predict_const1`` for feature 1
+        fixed at ``c`` — built once per (model, c) and cached on the model.
 
-        The serving pipeline evaluates the compute GBRT over (size, memory_mb)
-        with ONE memory value per cloud target, so for a fixed ``c`` every
-        feature-1 predicate is a constant and the whole ensemble collapses to
-        a step function of feature 0. The table is built once per (model, c)
-        by running the ordinary tree walk at one representative point per
-        threshold segment — predictions are therefore BIT-IDENTICAL to
-        ``predict`` (identical leaf paths, identical accumulation order) at a
-        searchsorted's cost instead of a 150-tree walk per row.
+        Exposed so serving-side caches (``repro.core.predictor``'s
+        per-(model, comp_feature) table cache) can hold the table without
+        re-deriving it per call. A refit must swap in a FRESH model object
+        (never mutate a fitted one): both this cache and the serving cache key
+        on the model's identity, so mutation would serve stale tables.
         """
         key = float(c)
         cache = self.__dict__.setdefault("_const1_tables", {})
@@ -124,7 +122,21 @@ class GBRT:
             pts = np.stack([reps, np.full(reps.shape[0], key)], axis=1)
             tab = (breaks, self.predict(pts))
             cache[key] = tab
-        breaks, vals = tab
+        return tab
+
+    def predict_const1(self, x0: np.ndarray, c: float) -> np.ndarray:
+        """Fast path for 2-feature models whose feature 1 is fixed at ``c``.
+
+        The serving pipeline evaluates the compute GBRT over (size, memory_mb)
+        with ONE memory value per cloud target, so for a fixed ``c`` every
+        feature-1 predicate is a constant and the whole ensemble collapses to
+        a step function of feature 0. The table is built once per (model, c)
+        by running the ordinary tree walk at one representative point per
+        threshold segment — predictions are therefore BIT-IDENTICAL to
+        ``predict`` (identical leaf paths, identical accumulation order) at a
+        searchsorted's cost instead of a 150-tree walk per row.
+        """
+        breaks, vals = self.const1_table(c)
         return vals[np.searchsorted(breaks, np.asarray(x0, np.float64),
                                     side="left")]
 

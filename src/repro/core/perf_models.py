@@ -49,12 +49,22 @@ class RidgeModel:
         return cls(theta=fit_ridge(x, y, l2=l2))
 
     def predict(self, x) -> np.ndarray:
+        """Elementwise affine map — deliberately NOT a BLAS matmul.
+
+        ``X @ theta`` routes through gemv, whose reduction order (FMA,
+        blocking) may depend on the batch size, so the same row could predict
+        differently in a 1-row and a 10k-row batch — a last-ULP wobble that
+        would break the streaming serve's bit-parity across chunk sizes.
+        A fixed left-fold of elementwise ops gives the identical float for
+        every element at every batch size.
+        """
         x = np.asarray(x, dtype=np.float64)
         scalar = x.ndim == 0
         if x.ndim <= 1:
             x = np.atleast_1d(x)[:, None]
-        X = np.concatenate([np.ones((x.shape[0], 1)), x], axis=1)
-        out = X @ self.theta
+        out = self.theta[0] + x[:, 0] * self.theta[1]
+        for j in range(1, x.shape[1]):
+            out = out + x[:, j] * self.theta[j + 1]
         return float(out[0]) if scalar else out
 
     def mape(self, x: np.ndarray, y: np.ndarray) -> float:

@@ -41,6 +41,8 @@ against the high variance the paper observed in cloud pipelines.
 from __future__ import annotations
 
 import dataclasses
+import threading
+import weakref
 from dataclasses import dataclass, field
 from typing import Mapping, Protocol
 
@@ -49,6 +51,7 @@ import numpy as np
 from repro.core.cil import ContainerInfoList
 from repro.core.perf_models import NormalModel, RidgeModel, ScaledModel, _norm_ppf
 from repro.core.pricing import EdgePricing, LambdaPricing
+from repro.core.workload import task_arrays
 
 EDGE = "edge"
 
@@ -80,12 +83,80 @@ def _tpu_backend() -> bool:
     return _TPU_BACKEND
 
 
+# Serving-side GBRT step-table cache, keyed ``(id(model), comp_feature)``.
+# The chunked/streaming serve path calls ``predict_batch`` once per chunk; the
+# table must be derived once per (model, memory config) for a whole stream,
+# not once per call. Keying on the model's *identity* (with a weakref guard
+# against id reuse) makes online-refit invalidation automatic: a refit swaps
+# in a fresh model object (never mutates a fitted one — see ROADMAP), so the
+# fresh model simply misses the cache and builds its own table, and the stale
+# entry is evicted the moment its id is recycled or the sweep finds it dead.
+# The lock covers the sharded thread mode: shards predict concurrently, and
+# an unlocked sweep could iterate while another thread inserts.
+_CONST1_TABLES: dict[tuple[int, float], tuple] = {}
+_CONST1_LOCK = threading.Lock()
+
+
+def _const1_table(model, c: float) -> tuple[np.ndarray, np.ndarray]:
+    key = (id(model), float(c))
+    with _CONST1_LOCK:
+        hit = _CONST1_TABLES.get(key)
+        if hit is not None:
+            ref, breaks, vals = hit
+            if ref() is model:
+                return breaks, vals
+            _CONST1_TABLES.pop(key, None)  # id recycled by a swap: stale
+    breaks, vals = model.const1_table(float(c))
+    try:
+        ref = weakref.ref(model)
+    except TypeError:
+        return breaks, vals  # non-weakrefable model: serve uncached
+    with _CONST1_LOCK:
+        if len(_CONST1_TABLES) > 256:  # drop entries whose model is gone
+            for k in [k for k, (r, *_) in _CONST1_TABLES.items()
+                      if r() is None]:
+                _CONST1_TABLES.pop(k, None)
+        _CONST1_TABLES[key] = (ref, breaks, vals)
+    return breaks, vals
+
+
+def _const1_eval(model, x0: np.ndarray, c: float) -> np.ndarray:
+    """One cached-table lookup — the single implementation both batched
+    entry points share (bit-identical to ``GBRT.predict_const1``)."""
+    breaks, vals = _const1_table(model, c)
+    return vals[np.searchsorted(breaks, x0, side="left")]
+
+
+def gbrt_predict_const(model, x0: np.ndarray, c: float) -> np.ndarray:
+    """Batched GBRT predict with feature 1 fixed at ``c`` — no feature stack.
+
+    The serving pipeline's compute models are always evaluated at one
+    ``comp_feature`` per cloud target (memory_mb / chips), so the hot path
+    never needs the ``(n, 2)`` stack, the per-call constant-column scan, or a
+    re-derived step table: the cached ``(breaks, vals)`` pair turns the call
+    into one ``searchsorted``. Bit-identical to the tree walk (see
+    ``GBRT.predict_const1``); the Pallas kernel route and arbitrary models
+    fall back to the stacked ``gbrt_batch_predict``.
+    """
+    x0 = np.asarray(x0, dtype=np.float64)
+    mode = GBRT_KERNEL_MODE
+    kernel = (mode != "off" and hasattr(model, "thresholds")
+              and (mode == "force"
+                   or (x0.shape[0] >= GBRT_KERNEL_MIN_BATCH and _tpu_backend())))
+    if not kernel and hasattr(model, "const1_table"):
+        return _const1_eval(model, x0, c)
+    feats = np.stack([x0, np.full(x0.shape[0], float(c))], axis=1)
+    return gbrt_batch_predict(model, feats)
+
+
 def gbrt_batch_predict(model, feats: np.ndarray) -> np.ndarray:
     """Batched GBRT evaluation: Pallas ensemble kernel when it pays off, the
     constant-feature step-function table for the serving pipeline's
     (size, memory_mb)-with-fixed-memory calls, vectorized numpy tree walk as
     the always-available fallback. All three are decision-equivalent; the
-    table path is bit-identical to the tree walk (see ``GBRT.predict_const1``).
+    table path is bit-identical to the tree walk (see ``GBRT.predict_const1``)
+    and its table is cached per ``(id(model), comp_feature)`` across calls —
+    any chunk size, down to single-task chunks, reuses it.
     """
     mode = GBRT_KERNEL_MODE
     if (mode != "off" and hasattr(model, "thresholds")
@@ -98,11 +169,11 @@ def gbrt_batch_predict(model, feats: np.ndarray) -> np.ndarray:
         except Exception:
             if mode == "force":
                 raise
-    if (hasattr(model, "predict_const1") and feats.ndim == 2
-            and feats.shape[1] == 2 and feats.shape[0] >= 64
+    if (hasattr(model, "const1_table") and feats.ndim == 2
+            and feats.shape[1] == 2 and feats.shape[0] > 0
             and np.all(feats[:, 1] == feats[0, 1])):
-        return np.asarray(model.predict_const1(feats[:, 0], float(feats[0, 1])),
-                          dtype=np.float64)
+        return _const1_eval(model, np.asarray(feats[:, 0], np.float64),
+                            float(feats[0, 1]))
     return np.asarray(model.predict(feats), dtype=np.float64)
 
 
@@ -270,8 +341,7 @@ def cloud_components_batch(sizes: np.ndarray, nbytes: np.ndarray, *,
     break — and a parity test to catch it.
     """
     n = sizes.shape[0]
-    feats = np.stack([sizes, np.full(n, comp_feature)], axis=1)
-    comp = gbrt_batch_predict(comp_model, feats)
+    comp = gbrt_predict_const(comp_model, sizes, comp_feature)
     if quantile is not None:
         z = _norm_ppf(quantile)
         comp = comp * (1.0 + z * comp_std_frac)
@@ -418,8 +488,7 @@ class Predictor:
         """
         if not tasks:
             return PredictionBatch(n=0, cloud={}, edges={})
-        sizes = np.array([t.size for t in tasks], dtype=np.float64)
-        nbytes = np.array([t.bytes for t in tasks], dtype=np.float64)
+        _, _, sizes, nbytes = task_arrays(tasks, "sb")
 
         cloud: dict[str, TargetBatch] = {}
         for tgt in self.cloud_targets:
@@ -432,6 +501,11 @@ class Predictor:
     def _target_batch(self, tgt, sizes: np.ndarray, nbytes: np.ndarray) -> TargetBatch:
         if hasattr(tgt, "predict_components_batch"):
             warm, cold = tgt.predict_components_batch(sizes, nbytes, self.quantile)
+            if cold is not None and getattr(tgt, "is_edge", False):
+                # always-warm targets never cold-start: drop any cold = warm
+                # stack a custom target hands back instead of carrying (and
+                # re-summing) a duplicate component set per chunk
+                cold = None
         else:
             warm, cold = _stack_components(tgt, sizes, nbytes, self.quantile)
         if hasattr(tgt, "cost_batch"):

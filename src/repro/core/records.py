@@ -22,7 +22,7 @@ from typing import Iterator, Sequence
 
 import numpy as np
 
-from repro.core.workload import TaskInput
+from repro.core.workload import TaskChunk, TaskInput
 
 
 @dataclass
@@ -56,9 +56,15 @@ class RecordBatch(Sequence):
     ``target_codes`` indexes into ``target_names``; ``hedge_codes`` uses the
     same table with ``-1`` meaning "no hedge". Indexing or iterating yields
     lazy ``TaskRecord`` views; metrics should use the arrays directly.
+
+    ``tasks`` may be a ``list[TaskInput]``, a columnar ``TaskChunk``, or —
+    for streaming serves that drop per-task objects entirely
+    (``serve_stream(keep_tasks=False)``) — empty, in which case the
+    ``arrivals``/``task_idx`` columns back the metrics and ``__getitem__``
+    synthesizes placeholder tasks (``meta={"streamed": True}``, NaN sizes).
     """
 
-    tasks: list[TaskInput]
+    tasks: "list[TaskInput] | TaskChunk"
     target_codes: np.ndarray        # (n,) int64 — index into target_names
     target_names: tuple[str, ...]
     predicted_latency_ms: np.ndarray
@@ -75,6 +81,9 @@ class RecordBatch(Sequence):
     exec_ms: np.ndarray
     hedge_codes: np.ndarray         # (n,) int64, -1 = no hedge
     hedge_exec_ms: np.ndarray
+    # streaming columns (set when per-task objects are dropped; see class doc)
+    arrivals: np.ndarray | None = None
+    task_idx: np.ndarray | None = None
 
     # ------------------------------------------------------------ construction
     @classmethod
@@ -132,13 +141,23 @@ class RecordBatch(Sequence):
     def __bool__(self) -> bool:
         return len(self) > 0
 
+    def _task_at(self, i: int) -> TaskInput:
+        if len(self.tasks) > 0:
+            return self.tasks[i]
+        # streamed batch: the tasks were never retained — synthesize a
+        # placeholder carrying what the record columns know
+        return TaskInput(
+            idx=int(self.task_idx[i]) if self.task_idx is not None else i,
+            arrival_ms=float(self.arrivals[i]) if self.arrivals is not None else 0.0,
+            size=float("nan"), bytes=float("nan"), meta={"streamed": True})
+
     def __getitem__(self, i):
         if isinstance(i, slice):
             return [self[j] for j in range(*i.indices(len(self)))]
         i = int(i)
         hc = int(self.hedge_codes[i])
         return TaskRecord(
-            task=self.tasks[i],
+            task=self._task_at(i),
             target=self.target_names[int(self.target_codes[i])],
             predicted_latency_ms=float(self.predicted_latency_ms[i]),
             predicted_cost=float(self.predicted_cost[i]),
@@ -163,6 +182,10 @@ class RecordBatch(Sequence):
     # ------------------------------------------------------------- array views
     @cached_property
     def arrival_ms(self) -> np.ndarray:
+        if self.arrivals is not None:
+            return self.arrivals
+        if isinstance(self.tasks, TaskChunk):
+            return self.tasks.arrival_ms
         return np.array([t.arrival_ms for t in self.tasks])
 
     @property
@@ -195,6 +218,116 @@ class RecordBatch(Sequence):
         models, drift monitors) rather than to arrivals.
         """
         return np.argsort(self.completion_ms, kind="stable")
+
+
+_ARENA_F64 = ("predicted_latency_ms", "predicted_cost", "actual_latency_ms",
+              "actual_cost", "allowed_cost", "completion_ms", "queue_wait_ms",
+              "exec_ms", "hedge_exec_ms")
+_ARENA_BOOL = ("predicted_cold", "actual_cold", "feasible", "hedged")
+_ARENA_I64 = ("target_codes", "hedge_codes")
+
+
+class RecordArena:
+    """Growable struct-of-arrays accumulator for streaming serves.
+
+    ``serve_stream`` appends one ``RecordBatch`` per chunk; the arena merges
+    the columns in place into preallocated arrays that grow by geometric
+    doubling — amortized O(1) per row, no per-chunk ``np.concatenate`` churn
+    (which would copy the whole prefix on every chunk: O(n²/chunk) bytes).
+    Target-name tables are unified incrementally: each chunk's codes are
+    remapped through one vectorized table lookup, so batches from different
+    sources (different shards, hedged fallback paths) merge cleanly.
+
+    ``keep_tasks=False`` is the constant-memory mode: per-task objects are
+    never retained — only the ``arrivals``/``task_idx`` columns — which is
+    what holds a 10M-task streaming serve to O(result columns) instead of
+    O(task objects). ``finish()`` returns the trimmed ``RecordBatch`` view;
+    rows already appended are never rewritten, so the view stays valid if
+    more rows are appended afterwards.
+    """
+
+    def __init__(self, keep_tasks: bool = True, capacity: int = 0):
+        self.n = 0
+        self.keep_tasks = keep_tasks
+        self._cap0 = max(int(capacity), 0)  # optional preallocation hint
+        self._cap = 0
+        self._cols: dict[str, np.ndarray] = {}
+        self._names: list[str] = []
+        self._code: dict[str, int] = {}
+        self.tasks: list[TaskInput] = []
+
+    def __len__(self) -> int:
+        return self.n
+
+    @property
+    def nbytes(self) -> int:
+        """Currently allocated column bytes (capacity, not fill)."""
+        return sum(c.nbytes for c in self._cols.values())
+
+    def _reserve(self, need: int) -> None:
+        if need <= self._cap:
+            return
+        new_cap = max(self._cap, self._cap0, 1024)
+        while new_cap < need:
+            new_cap *= 2
+        dtypes = ({k: np.float64 for k in _ARENA_F64 + ("arrivals",)}
+                  | {k: np.bool_ for k in _ARENA_BOOL}
+                  | {k: np.int64 for k in _ARENA_I64 + ("task_idx",)})
+        for name, dt in dtypes.items():
+            fresh = np.empty(new_cap, dtype=dt)
+            old = self._cols.get(name)
+            if old is not None:
+                fresh[:self.n] = old[:self.n]
+            self._cols[name] = fresh
+        self._cap = new_cap
+
+    def _remap_table(self, names: Sequence[str]) -> np.ndarray:
+        """Chunk-local code → arena code, with a trailing -1 slot so hedge
+        codes of -1 pass through (``table[-1] == -1``)."""
+        for nm in names:
+            if nm not in self._code:
+                self._code[nm] = len(self._names)
+                self._names.append(nm)
+        return np.array([self._code[nm] for nm in names] + [-1], dtype=np.int64)
+
+    def append(self, records: "RecordBatch | Sequence[TaskRecord]") -> None:
+        rb = RecordBatch.from_records(records)
+        m = len(rb)
+        if m == 0:
+            return
+        self._reserve(self.n + m)
+        sl = slice(self.n, self.n + m)
+        table = self._remap_table(rb.target_names)
+        cols = self._cols
+        cols["target_codes"][sl] = table[rb.target_codes]
+        cols["hedge_codes"][sl] = table[rb.hedge_codes]
+        for name in _ARENA_F64 + _ARENA_BOOL:
+            cols[name][sl] = getattr(rb, name)
+        cols["arrivals"][sl] = rb.arrival_ms
+        if rb.task_idx is not None:
+            cols["task_idx"][sl] = rb.task_idx
+        elif isinstance(rb.tasks, TaskChunk):
+            cols["task_idx"][sl] = rb.tasks.idx
+        elif len(rb.tasks) > 0:
+            cols["task_idx"][sl] = [getattr(t, "idx", -1) for t in rb.tasks]
+        else:
+            cols["task_idx"][sl] = -1
+        if self.keep_tasks:
+            self.tasks.extend(rb.tasks)
+        self.n += m
+
+    def finish(self) -> RecordBatch:
+        """The accumulated rows as one ``RecordBatch`` (trimmed array views)."""
+        if self.n == 0:
+            return RecordBatch.empty()
+        c = {k: v[:self.n] for k, v in self._cols.items()}
+        return RecordBatch(
+            tasks=self.tasks if self.keep_tasks else [],
+            target_names=tuple(self._names),
+            arrivals=c.pop("arrivals"),
+            task_idx=c.pop("task_idx"),
+            **c,
+        )
 
 
 @dataclass(frozen=True)

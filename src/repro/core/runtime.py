@@ -34,6 +34,16 @@ container-pool and per-device FIFO recurrences stay sequential (cheap Python,
 no model math). This is what makes 100k-task fleet workloads fast — see
 ``benchmarks/bench_runtime.py``.
 
+The STREAMING serve path (``PlacementRuntime.serve_stream``) runs the same
+columnar pipeline over arrival chunks: every sequential state carrier — the
+CIL, the Alg. 1 surplus bank, the predicted edge-queue horizons, the
+per-(substrate, leg) RNG streams, and the twin's ground-truth container pool —
+lives OUTSIDE the chunk, so the concatenated result is bit-identical to the
+one-shot serve for every chunk size while the working set stays
+O(chunk × targets). Outcome columns accumulate in a ``RecordArena``
+(geometric doubling, in-place merge); ``repro.core.multiapp`` fans N
+independent application streams out over this path in parallel shards.
+
 The EVENT-DRIVEN serve path (``PlacementRuntime.serve_async``) reuses the same
 non-blocking placement pass and fans execution out to per-target workers — one
 per edge device, one per cloud config — that pull rows from the columnar
@@ -70,9 +80,9 @@ from repro.core.decision import (
 )
 from repro.core.predictor import Prediction
 from repro.core.pricing import LambdaPricing
-from repro.core.records import RecordBatch, SimulationResult, TaskRecord
+from repro.core.records import RecordArena, RecordBatch, SimulationResult, TaskRecord
 from repro.core.recurrence import fifo_starts
-from repro.core.workload import TaskInput
+from repro.core.workload import TaskChunk, TaskInput, task_arrays
 
 
 @dataclass(frozen=True)
@@ -237,6 +247,9 @@ class TwinBackend:
     compute speed (heterogeneous fleets; actual compute is divided by it).
     """
 
+    # the vectorized drivers consume DecisionBatch targets without a name list
+    accepts_decision_batch = True
+
     def __init__(self, twin: AWSTwin, seed: int = 0,
                  pricing: LambdaPricing | None = None, edge_name: str = "edge",
                  edge_names: Sequence[str] | None = None,
@@ -366,9 +379,28 @@ class TwinBackend:
             rngs["store"].normal(spec.store_edge_mean, spec.store_edge_std, nd), 1.0)
         return {"comp": comp, "iot": iot, "store": store}
 
+    def _encode_targets(self, targets) -> tuple[np.ndarray, Sequence[str]]:
+        """Integer-encode dispatch targets (device i → i, cloud → -1) and
+        return ``(codes, name_of)`` where ``name_of(i)`` is dispatch ``i``'s
+        target name. A columnar ``DecisionBatch`` translates through one tiny
+        per-table lookup — no per-dispatch Python at all — which is what
+        keeps the streaming serve's execution stage GIL-light; a plain name
+        sequence takes the per-dispatch encode it always did.
+        """
+        devmap = {dev: i for i, dev in enumerate(self.edge_names)}
+        if isinstance(targets, DecisionBatch):
+            trans = np.array([devmap.get(nm, -1) for nm in targets.names],
+                             dtype=np.int64)
+            table = targets.names
+            tcodes = targets.target_codes
+            return trans[tcodes], (lambda i: table[tcodes[i]])
+        codes = np.array([devmap.get(tg, -1) for tg in targets],
+                         dtype=np.int64)
+        return codes, (lambda i: targets[i])
+
     # ------------------------------------------------- vectorized ground truth
     def execute_many(self, tasks: Sequence[TaskInput],
-                     targets: Sequence[str]) -> ExecutionBatch:
+                     targets: "Sequence[str] | DecisionBatch") -> ExecutionBatch:
         """Run one dispatch per (task, target) pair, sampling all ground-truth
         randomness in batched numpy; returns the struct-of-arrays view.
 
@@ -378,17 +410,16 @@ class TwinBackend:
         or as one ``size=n`` block; the arithmetic around each draw keeps the
         scalar path's operation order. Only the container pool and the
         per-device FIFO recurrences run sequentially — pure bookkeeping, no
-        model math.
+        model math. ``targets`` may be the columnar ``DecisionBatch`` itself
+        (the runtime's batched path passes it straight through — no
+        per-dispatch name list is ever materialized).
         """
         n = len(tasks)
-        sizes = np.array([t.size for t in tasks])
-        nows = np.array([t.arrival_ms for t in tasks])
+        _, nows, sizes, nbytes_all = task_arrays(tasks, "as")
         scaled = self._scaled_sizes(sizes)
 
-        # integer-encode targets in one pass: device i -> i, cloud -> -1
+        codes, name_of = self._encode_targets(targets)
         devmap = {dev: i for i, dev in enumerate(self.edge_names)}
-        dm_get = devmap.get
-        codes = np.array([dm_get(tg, -1) for tg in targets], dtype=np.int64)
         edge_masks = {dev: codes == i for dev, i in devmap.items()}
         ci = np.nonzero(codes == -1)[0]
 
@@ -401,8 +432,9 @@ class TwinBackend:
         # ---- cloud: batch the 4 normals per dispatch (upld, start, comp, store)
         nc = ci.shape[0]
         if nc:
-            cfgs = [targets[i] for i in ci.tolist()]
-            nbytes = np.array([tasks[i].bytes for i in ci.tolist()])
+            cfgs = [name_of(i) for i in ci.tolist()]
+            nbytes = nbytes_all[ci] if nbytes_all is not None \
+                else np.array([tasks[i].bytes for i in ci.tolist()])
             draws = self._cloud_leg_draws(cfgs, scaled[ci], nbytes)
             upld, comp, store = draws["upld"], draws["comp"], draws["store"]
             warm_start, cold_start = draws["warm_start"], draws["cold_start"]
@@ -543,8 +575,7 @@ class TwinBackend:
             queue_wait_ms=np.zeros(n), exec_ms=np.empty(n))
         if n == 0:
             return out
-        sizes = np.array([t.size for t in tasks])
-        nows = np.array([t.arrival_ms for t in tasks])
+        _, nows, sizes, nbytes_all = task_arrays(tasks, "as")
         if n > 1 and not bool(np.all(np.diff(nows) >= 0.0)):
             # Out-of-order dispatch lists: the heap would replay state in
             # time order while the batched/sequential paths replay dispatch
@@ -554,8 +585,8 @@ class TwinBackend:
             # share their primary's arrival and tie-break by dispatch order).
             return self.execute_many(tasks, targets)
         scaled = self._scaled_sizes(sizes)
+        codes, name_of = self._encode_targets(targets)
         devmap = {dev: i for i, dev in enumerate(self.edge_names)}
-        codes = np.array([devmap.get(tg, -1) for tg in targets], dtype=np.int64)
         ci = np.nonzero(codes == -1)[0]
 
         # every leg draw up front, one block per stream (== execute_many)
@@ -563,8 +594,9 @@ class TwinBackend:
         cdraws = None
         cfgs: list[str] = []
         if ci.shape[0]:
-            cfgs = [targets[i] for i in ci.tolist()]
-            nbytes = np.array([tasks[i].bytes for i in ci.tolist()])
+            cfgs = [name_of(i) for i in ci.tolist()]
+            nbytes = nbytes_all[ci] if nbytes_all is not None \
+                else np.array([tasks[i].bytes for i in ci.tolist()])
             cdraws = self._cloud_leg_draws(cfgs, scaled[ci], nbytes)
             cloud_slot = {int(g): j for j, g in enumerate(ci.tolist())}
         edraws: dict[str, dict[str, np.ndarray]] = {}
@@ -640,6 +672,36 @@ class TwinBackend:
         return out
 
 
+def _iter_chunks(workload, chunk_size: int):
+    """Normalize any workload spelling into an iterator of task chunks.
+
+    Sequences (``list[TaskInput]`` / ``TaskChunk``) are sliced into
+    ``chunk_size`` spans; iterators of ``TaskInput`` are buffered into lists
+    of ``chunk_size``; iterators of ready chunks (what ``Workload.chunks``
+    yields) pass through at their producer's sizing.
+    """
+    if isinstance(workload, (list, tuple, TaskChunk)):
+        for lo in range(0, len(workload), chunk_size):
+            yield workload[lo:lo + chunk_size]
+        return
+    it = iter(workload)
+    first = next(it, None)
+    if first is None:
+        return
+    if isinstance(first, TaskInput):
+        buf = [first]
+        for t in it:
+            buf.append(t)
+            if len(buf) >= chunk_size:
+                yield buf
+                buf = []
+        if buf:
+            yield buf
+        return
+    yield first
+    yield from it
+
+
 # -------------------------------------------------------------- the runtime
 class PlacementRuntime:
     """ONE serve loop over any (DecisionEngine, ExecutionBackend) pair.
@@ -652,6 +714,7 @@ class PlacementRuntime:
     def __init__(self, engine: DecisionEngine, backend: ExecutionBackend):
         self.engine = engine
         self.backend = backend
+        self.stream_stats: dict | None = None  # last serve_stream aggregate
         self.edge_queues = {n: PredictedEdgeQueue() for n in engine.edge_names}
         # cloud-only runtimes keep a zeroed queue behind the deprecated
         # ``edge_queue`` alias, matching the attribute's pre-fleet existence
@@ -693,6 +756,89 @@ class PlacementRuntime:
             records = [self.step(t) for t in tasks]
         return self.result(records)
 
+    def serve_stream(self, workload, chunk_size: int = 65536,
+                     keep_tasks: bool | None = None,
+                     expected_tasks: int | None = None) -> SimulationResult:
+        """Streaming chunked serve: the columnar pipeline over arrival chunks,
+        carrying every piece of sequential state across chunk boundaries.
+
+        ``workload`` may be a task sequence (``list[TaskInput]`` or a columnar
+        ``TaskChunk``, sliced into ``chunk_size`` spans), an iterator of
+        tasks, or an iterator of ready chunks (``PoissonWorkload.chunks`` /
+        ``BurstyWorkload.chunks`` — the constant-memory spelling). Each chunk
+        runs the exact batched path of ``serve(batched=True)``:
+        ``predict_batch`` → the columnar decision core → ``execute_many``,
+        with outcome columns merged into a ``RecordArena``.
+
+        BIT-IDENTICAL to one-shot ``serve(batched=True)`` for EVERY chunk
+        size (including ``chunk_size=1`` and boundaries landing inside a
+        speculate-and-repair segment), because all five sequential state
+        carriers live outside the chunk: the CIL (on the Predictor), the
+        Alg. 1 surplus bank (on the policy), the predicted edge-queue
+        horizons (on this runtime), the per-(substrate, leg) RNG streams and
+        the ground-truth container pool / edge FIFO horizons (on the
+        backend). Numpy Generators produce the same stream drawn in one block
+        or per chunk, and every recurrence is a left fold restarting from a
+        scalar — so chunking changes where passes pause, never what they
+        compute. The parity is hypothesis-tested per record.
+
+        Peak memory is O(chunk_size × targets) working set plus the O(n)
+        result columns — never the O(n × targets) prediction matrices of the
+        one-shot path. ``keep_tasks`` controls whether per-task objects are
+        retained on the result (default: only when ``workload`` is already a
+        materialized list; streamed sources drop them and the result backs
+        its metrics with the arena's arrival/index columns).
+
+        ``stream_stats`` afterwards reports ``{"chunks", "n", "spec_segments",
+        "repairs", "walked"}`` aggregated over the stream. ``expected_tasks``
+        is an optional arena-capacity hint (a known stream length skips the
+        geometric-doubling overshoot — exact-size result columns).
+        """
+        if chunk_size < 1:
+            raise ValueError(f"chunk_size must be >= 1, got {chunk_size}")
+        if keep_tasks is None:
+            keep_tasks = isinstance(workload, (list, tuple))
+        eng = self.engine
+        arena = RecordArena(keep_tasks=keep_tasks,
+                            capacity=expected_tasks or 0)
+        stats = {"chunks": 0, "n": 0, "spec_segments": 0, "repairs": 0,
+                 "walked": 0}
+        prev_last = -np.inf
+        force_walk = False
+        for chunk in _iter_chunks(workload, chunk_size):
+            m = len(chunk)
+            if m == 0:
+                continue
+            first = float(chunk[0].arrival_ms)
+            last = float(chunk[m - 1].arrival_ms)
+            if first < prev_last:
+                # the stream as a whole is out of arrival order: a columnar
+                # chunk would snapshot CIL state the one-shot walk has already
+                # reaped differently — from here on, every chunk must take
+                # the per-task walk (exactly what the one-shot path does)
+                force_walk = True
+            prev_last = max(prev_last, last)
+            was_columnar = eng.columnar
+            eng.columnar_stats = None
+            try:
+                if force_walk:
+                    eng.columnar = False
+                decisions = eng.place_many(chunk, edge_queues=self.edge_queues)
+            finally:
+                eng.columnar = was_columnar
+            arena.append(self._execute_decisions(chunk, decisions))
+            stats["chunks"] += 1
+            stats["n"] += m
+            cs = eng.columnar_stats
+            if cs is not None:
+                stats["spec_segments"] += cs["chunks"]
+                stats["repairs"] += cs["repairs"]
+                stats["walked"] += cs["walked"]
+            else:
+                stats["walked"] += m
+        self.stream_stats = stats
+        return self.result(arena.finish())
+
     def serve_async(self, tasks: list[TaskInput]) -> SimulationResult:
         """The event-driven serve: place like ``serve(batched=True)``, then
         execute through the backend's concurrent driver.
@@ -716,7 +862,9 @@ class PlacementRuntime:
         if run is None:
             records = self._execute_decisions(tasks, decisions)
         elif isinstance(decisions, DecisionBatch):
-            eb = run(tasks, decisions.target_list())
+            eb = run(tasks, decisions
+                     if getattr(self.backend, "accepts_decision_batch", False)
+                     else decisions.target_list())
             records = self._record_batch(tasks, decisions, eb) \
                 if isinstance(eb, ExecutionBatch) \
                 else [self._record(t, d, d.target, d.prediction, o)
@@ -822,7 +970,10 @@ class PlacementRuntime:
         """
         if isinstance(decisions, DecisionBatch):
             if hasattr(self.backend, "execute_many"):
-                eb = self.backend.execute_many(tasks, decisions.target_list())
+                eb = self.backend.execute_many(
+                    tasks, decisions
+                    if getattr(self.backend, "accepts_decision_batch", False)
+                    else decisions.target_list())
                 if isinstance(eb, ExecutionBatch):
                     return self._record_batch(tasks, decisions, eb)
                 return [self._record(t, d, d.target, d.prediction, o)
@@ -857,6 +1008,7 @@ class PlacementRuntime:
             exec_ms=eb.exec_ms,
             hedge_codes=np.full(n, -1, dtype=np.int64),
             hedge_exec_ms=np.zeros(n),
+            task_idx=d.task_idx,
         )
 
     def _run_decision(self, task: TaskInput, d: PlacementDecision) -> TaskRecord:

@@ -284,6 +284,119 @@ def test_single_slot_worker_equals_fifo_recurrence(gaps, busy, free0):
     assert w.free_at == ref_free
 
 
+# --------------------------------------- streaming serve bit-parity (ISSUE 5)
+import functools  # noqa: E402
+
+
+@functools.lru_cache(maxsize=None)
+def _stream_setup():
+    from repro.core.fit import fit_app
+    from repro.core.workload import BurstyWorkload
+
+    twin, models = fit_app("IR", seed=0, n_inputs=100, configs=(1280, 1536))
+    tasks = BurstyWorkload(rate_per_s=4.0, size_sampler=twin.sample_input,
+                           burst_multiplier=8.0, mean_quiet_s=10.0,
+                           mean_burst_s=6.0, seed=13).generate(150)
+    return twin, models, tasks
+
+
+def _stream_runtime():
+    from repro.core.decision import DecisionEngine, MinLatencyPolicy
+    from repro.core.fit import build_fleet_predictor
+    from repro.core.runtime import PlacementRuntime, TwinBackend
+
+    twin, models, _ = _stream_setup()
+    fleet = {"edge0": 1.0, "edge1": 0.7}
+    pred = build_fleet_predictor(models, fleet, configs=(1280, 1536))
+    eng = DecisionEngine(predictor=pred,
+                         policy=MinLatencyPolicy(c_max=5e-6, alpha=0.05))
+    return PlacementRuntime(eng, TwinBackend(
+        twin, seed=11, edge_names=tuple(fleet), edge_speed=fleet))
+
+
+@given(chunk_sizes=st.lists(st.integers(min_value=1, max_value=60),
+                            min_size=1, max_size=12))
+@settings(max_examples=20, deadline=None)
+def test_serve_stream_equals_one_shot_for_random_chunking(chunk_sizes):
+    """``serve_stream`` ≡ ``serve(batched=True)`` per record under ARBITRARY
+    chunk boundaries — including chunk_size=1 and boundaries inside repair
+    segments (the bursty edge/cloud oscillation forces repairs). The chunk
+    sizes cycle, so one example covers many uneven boundary placements."""
+    import itertools
+
+    import repro.core.decision as decision_mod
+
+    _, _, tasks = _stream_setup()
+    old_chunk = decision_mod.COLUMNAR_CHUNK
+    decision_mod.COLUMNAR_CHUNK = 32  # force mid-segment boundaries
+    try:
+        ref = _stream_runtime().serve(tasks, batched=True)
+
+        def chunks():
+            it, sizes = 0, itertools.cycle(chunk_sizes)
+            while it < len(tasks):
+                n = next(sizes)
+                yield tasks[it:it + n]
+                it += n
+
+        res = _stream_runtime().serve_stream(chunks())
+    finally:
+        decision_mod.COLUMNAR_CHUNK = old_chunk
+    assert list(res.records.targets) == list(ref.records.targets)
+    for col in ("predicted_latency_ms", "predicted_cost", "actual_latency_ms",
+                "actual_cost", "allowed_cost", "completion_ms",
+                "queue_wait_ms", "predicted_cold", "actual_cold", "feasible"):
+        assert np.array_equal(getattr(res.records, col),
+                              getattr(ref.records, col)), col
+
+
+@given(
+    spec=st.lists(st.tuples(st.sampled_from(["a", "b", "c", "d"]),
+                            st.sampled_from([None, "a", "c"]),
+                            st.floats(min_value=0.0, max_value=1e6,
+                                      allow_nan=False)),
+              min_size=0, max_size=60),
+    splits=st.lists(st.integers(min_value=1, max_value=9), min_size=1,
+                    max_size=6),
+)
+@settings(max_examples=60, deadline=None)
+def test_record_arena_equals_from_records(spec, splits):
+    """Appending arbitrary per-chunk record slices into a ``RecordArena``
+    must reproduce ``RecordBatch.from_records`` over the concatenation —
+    growth, code remap, and hedge -1 passthrough included."""
+    import itertools
+
+    from repro.core.records import RecordArena, RecordBatch, TaskRecord
+    from repro.core.workload import TaskInput
+
+    records = []
+    for i, (target, hedge, v) in enumerate(spec):
+        records.append(TaskRecord(
+            task=TaskInput(idx=i, arrival_ms=v, size=1.0, bytes=1.0),
+            target=target, predicted_latency_ms=v * 0.5, predicted_cost=v,
+            actual_latency_ms=v * 2, actual_cost=v * 3,
+            predicted_cold=bool(i % 2), actual_cold=bool(i % 3),
+            allowed_cost=v, feasible=bool(i % 5), completion_ms=v + 1,
+            hedged=hedge is not None, queue_wait_ms=v * 0.1, exec_ms=v * 0.2,
+            hedge_target=hedge, hedge_exec_ms=0.0))
+    ref = RecordBatch.from_records(records)
+    arena = RecordArena(keep_tasks=True, capacity=2)
+    it, sizes = 0, itertools.cycle(splits)
+    while it < len(records):
+        n = next(sizes)
+        arena.append(records[it:it + n])
+        it += n
+    got = arena.finish()
+    assert len(got) == len(ref)
+    assert list(got.targets) == list(ref.targets)
+    assert got.hedge_codes.tolist() == [
+        got.target_names.index(r.hedge_target) if r.hedge_target else -1
+        for r in records]
+    for col in ("predicted_latency_ms", "actual_cost", "allowed_cost",
+                "completion_ms", "predicted_cold", "feasible", "hedged"):
+        assert np.array_equal(getattr(got, col), getattr(ref, col)), col
+
+
 # ------------------------------------------------------- sharding invariants
 def test_rules_always_divisible_for_all_archs():
     """Every resolved rule must divide the corresponding tensor dims, for
