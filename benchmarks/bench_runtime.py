@@ -50,6 +50,13 @@ seconds for CI; ``--json`` writes the machine-readable ``BENCH_runtime.json``):
    shards cannot physically exceed ~1x on the 2-core CI class, where the
    parity check is the bench's value; the measured speedup is reported
    either way).
+8. **trace-planner** (ISSUE 6) — replaying a recorded 50k-task trace
+   (``repro.trace.TraceWorkload``) must match the equivalent in-memory
+   stream per record AND land within 1.2x of its wall time (replay slices
+   arrays instead of sampling); plus an 8-candidate what-if capacity search
+   (``repro.planner``, successive halving over fleet sizes × policies) whose
+   winner must be the cheapest SLO-meeting config, verified on the full
+   trace.
 
     PYTHONPATH=src:. python benchmarks/bench_runtime.py [--n 10000]
 """
@@ -665,6 +672,105 @@ def run_sharded(emit, n_per_app: int = 500_000, chunk: int = 65_536,
          f"n={3 * n_per_app}")
 
 
+# --------------------------- 8. trace replay + capacity planner (ISSUE 6)
+def _record_trace(wl, n: int, chunk: int, app: str):
+    """Record a workload's chunk stream into a ``Trace`` (columns only —
+    the bench never materializes per-task objects)."""
+    from repro.trace import Trace
+
+    cols = ([], [], [])
+    for c in wl.chunks(n, chunk):
+        cols[0].append(c.arrival_ms)
+        cols[1].append(c.size)
+        cols[2].append(c.bytes)
+    return Trace.from_arrays(*(np.concatenate(x) for x in cols),
+                             app_names=(app,))
+
+
+def run_trace_planner(emit, n: int = 50_000, chunk: int = 16_384,
+                      max_rel: float = 1.2, smoke: bool = False):
+    """Trace replay rate + what-if planner search (ISSUE 6).
+
+    Replay floor: streaming a recorded trace through ``serve_stream``
+    (``TraceWorkload`` chunk views) must land within ``max_rel``× the wall
+    time of the equivalent in-memory stream (the workload generating the
+    same chunks on the fly) — replay slices arrays instead of sampling, so
+    it has no excuse to be slower; per-record parity between the two runs is
+    asserted. Planner: an 8-candidate successive-halving search (fleet sizes
+    1–4 × edge-only/cloud-budget policies) over the same trace; the winner
+    must meet the SLO, be the cheapest config that does, and be verified on
+    the full trace.
+    """
+    from repro.planner import Candidate, Planner, PolicySpec, SLO
+    from repro.trace import TraceWorkload
+
+    banner(f"bench_runtime/trace-planner — replay + what-if search "
+           f"({n:,}-task STT trace)")
+    twin, models = _shard_setup("STT")
+    wl = twin.poisson(seed=3)
+    trace = _record_trace(wl, n, chunk, "STT")
+    reps = 1 if smoke else 2
+
+    # warm caches outside the measured window
+    _stream_runtime(twin, models).serve_stream(wl.chunks(4_096, chunk),
+                                               chunk_size=chunk)
+    mem_s = rep_s = float("inf")
+    res_mem = res_rep = None
+    for _ in range(reps):
+        rt = _stream_runtime(twin, models)
+        t0 = time.perf_counter()
+        res_mem = rt.serve_stream(wl.chunks(n, chunk), chunk_size=chunk)
+        mem_s = min(mem_s, time.perf_counter() - t0)
+
+        rt = _stream_runtime(twin, models)
+        t0 = time.perf_counter()
+        res_rep = rt.serve_stream(TraceWorkload(trace).chunks(chunk_size=chunk),
+                                  chunk_size=chunk)
+        rep_s = min(rep_s, time.perf_counter() - t0)
+
+    a, b = res_mem.records, res_rep.records
+    identical = (a.target_codes.tolist() == b.target_codes.tolist()
+                 and np.array_equal(a.actual_latency_ms, b.actual_latency_ms)
+                 and np.array_equal(a.actual_cost, b.actual_cost))
+    rel = rep_s / max(mem_s, 1e-12)
+    print(f"in-memory {n / mem_s:>9,.0f} t/s   replay {n / rep_s:>9,.0f} t/s "
+          f"  rel {rel:4.2f}x (floor {max_rel:.1f}x)   identical={identical}")
+    assert identical, "trace replay diverged from the in-memory stream"
+    assert rel <= max_rel, \
+        f"trace replay {rel:.2f}x slower than in-memory (floor {max_rel}x)"
+    emit(f"trace/replay_stream[{n}]", rep_s / n * 1e6,
+         f"n={n};chunk={chunk};speedup={mem_s / max(rep_s, 1e-12):.2f}x")
+
+    # ---- the 8-candidate what-if search
+    edge_only = PolicySpec(kind="min_latency", c_max=0.0)
+    mixed = PolicySpec(kind="min_latency", c_max=C_MAX, alpha=ALPHA)
+    cands = [Candidate.make(f"fleet-{k}-{tag}", k, policy=pol,
+                            cloud_configs=CONFIGS, chunk_size=chunk,
+                            device_rate_per_hour=0.05)
+             for k in (1, 2, 3, 4)
+             for tag, pol in (("edge", edge_only), ("mixed", mixed))]
+    slo = SLO(latency_ms=40_000.0, target=0.95)
+    planner = Planner(trace, slo, fit_seed=0, n_inputs=120,
+                      fit_configs=CONFIGS)
+    t0 = time.perf_counter()
+    res = planner.plan(cands, strategy="halving", rungs=3, min_rung_n=2_048)
+    plan_s = time.perf_counter() - t0
+
+    print(res.table())
+    print(f"planner: {len(cands)} candidates, {res.replayed_tasks:,} tasks "
+          f"replayed ({res.mode}) in {plan_s:.1f}s   best "
+          f"{res.best.candidate.name}")
+    assert res.best.meets_slo, "no candidate met the SLO on the bench fixture"
+    assert res.best.n == trace.n, "winner must be verified on the full trace"
+    meeting = [s for s in res.scores if s.meets_slo]
+    assert res.best.total_cost == min(s.total_cost for s in meeting), \
+        "planner returned a non-cheapest SLO-meeting candidate"
+    emit(f"trace/planner_search[{len(cands)}cand]",
+         plan_s / max(res.replayed_tasks, 1) * 1e6,
+         f"n={res.replayed_tasks};candidates={len(cands)};"
+         f"best={res.best.candidate.name}")
+
+
 # ------------------------------------------------------------------- driver
 def run(emit, n: int | None = None):
     run_decision(emit, n=n)
@@ -676,6 +782,7 @@ def run(emit, n: int | None = None):
         run_million(emit)
         run_streaming(emit)
         run_sharded(emit)
+        run_trace_planner(emit)
 
 
 def run_smoke(emit):
@@ -699,6 +806,10 @@ def run_smoke(emit):
     # checks inside run_sharded are the smoke's real gate (the 2x acceptance
     # floor is judged at full size on >=4 unthrottled cores)
     run_sharded(emit, n_per_app=60_000, chunk=16_384, min_speedup=0.5)
+    # trace replay + planner smoke: same 8-candidate search on a 50k-task
+    # trace; only the replay-rate floor is relaxed (throttled runners), the
+    # parity and cheapest-meets-SLO assertions hold at full strength
+    run_trace_planner(emit, n=50_000, chunk=16_384, max_rel=1.4, smoke=True)
 
 
 def main():

@@ -35,7 +35,9 @@ from concurrent.futures import ProcessPoolExecutor, ThreadPoolExecutor
 from dataclasses import dataclass
 from typing import Callable, Sequence
 
-from repro.core.records import SimulationResult
+import numpy as np
+
+from repro.core.records import RecordArena, RecordBatch, SimulationResult
 from repro.core.runtime import PlacementRuntime
 
 
@@ -96,6 +98,31 @@ class ShardedResult:
     @property
     def total_actual_cost(self) -> float:
         return sum(r.total_actual_cost for r in self.results.values())
+
+    def merged_records(self) -> tuple[RecordBatch, np.ndarray, tuple[str, ...]]:
+        """All shards' rows as ONE batch in global arrival order.
+
+        Returns ``(batch, app_codes, app_names)``: the per-shard record
+        batches merged through a ``RecordArena`` (target tables unified) and
+        stable-sorted by arrival time — ties keep shard declaration order, so
+        the merge is deterministic. ``app_codes[i]`` indexes ``app_names``
+        (the shard names) for row ``i``. This is the cross-application view a
+        recorded multi-app day looks like on the wire, and the natural input
+        for capturing a sharded run back into one multi-app trace
+        (``repro.trace.capture_sharded`` captures per shard and merges the
+        traces the same way).
+        """
+        arena = RecordArena(keep_tasks=False)
+        codes: list[np.ndarray] = []
+        names = tuple(self.results)
+        for k, res in enumerate(self.results.values()):
+            arena.append(res.records)
+            codes.append(np.full(len(res.records), k, dtype=np.int64))
+        rb = arena.finish()
+        code = np.concatenate(codes) if codes else np.zeros(0, np.int64)
+        order = np.argsort(rb.arrival_ms, kind="stable") if len(rb) \
+            else np.zeros(0, np.int64)
+        return rb.take(order), code[order], names
 
     def table(self) -> str:
         """Human-readable cross-application report."""

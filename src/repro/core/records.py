@@ -84,6 +84,11 @@ class RecordBatch(Sequence):
     # streaming columns (set when per-task objects are dropped; see class doc)
     arrivals: np.ndarray | None = None
     task_idx: np.ndarray | None = None
+    # input columns (set by ``RecordArena(keep_inputs=True)``): the task
+    # size/bytes features, retained so a streamed run with no task objects is
+    # still exportable as a replayable trace (``repro.trace.capture``)
+    input_size: np.ndarray | None = None
+    input_bytes: np.ndarray | None = None
 
     # ------------------------------------------------------------ construction
     @classmethod
@@ -149,7 +154,11 @@ class RecordBatch(Sequence):
         return TaskInput(
             idx=int(self.task_idx[i]) if self.task_idx is not None else i,
             arrival_ms=float(self.arrivals[i]) if self.arrivals is not None else 0.0,
-            size=float("nan"), bytes=float("nan"), meta={"streamed": True})
+            size=float(self.input_size[i]) if self.input_size is not None
+            else float("nan"),
+            bytes=float(self.input_bytes[i]) if self.input_bytes is not None
+            else float("nan"),
+            meta={"streamed": True})
 
     def __getitem__(self, i):
         if isinstance(i, slice):
@@ -219,6 +228,71 @@ class RecordBatch(Sequence):
         """
         return np.argsort(self.completion_ms, kind="stable")
 
+    def input_arrays(self) -> tuple[np.ndarray, np.ndarray]:
+        """The ``(size, bytes)`` input-feature columns of this batch's tasks.
+
+        Used by trace capture (``repro.trace.capture``) to make any serve run
+        re-replayable. Prefers the dedicated input columns (streamed runs with
+        ``keep_inputs=True``), then the retained task container. Raises an
+        actionable ``ValueError`` when the inputs were dropped entirely.
+        """
+        if self.input_size is not None and self.input_bytes is not None:
+            return self.input_size, self.input_bytes
+        if isinstance(self.tasks, TaskChunk):
+            return self.tasks.size, self.tasks.bytes
+        if len(self.tasks) > 0:
+            return (np.array([t.size for t in self.tasks], dtype=np.float64),
+                    np.array([t.bytes for t in self.tasks], dtype=np.float64))
+        if len(self) == 0:
+            return np.zeros(0), np.zeros(0)
+        raise ValueError(
+            "task input sizes were not retained on this batch — re-run with "
+            "serve_stream(..., keep_inputs=True) (constant-memory streams) or "
+            "keep_tasks=True so the run can be captured as a replayable trace")
+
+    def take(self, order) -> "RecordBatch":
+        """Rows reordered/selected by an index array, as a new batch.
+
+        Every column (including the optional streaming/input columns) is
+        gathered through the same index, so ``take(completion_order())`` is
+        the completion-event view and cross-shard merges can re-sort into
+        global arrival order (``ShardedResult.merged_records``).
+        """
+        order = np.asarray(order, dtype=np.int64)
+        if isinstance(self.tasks, TaskChunk):
+            t = self.tasks
+            tasks: "list[TaskInput] | TaskChunk" = TaskChunk(
+                idx=t.idx[order], arrival_ms=t.arrival_ms[order],
+                size=t.size[order], bytes=t.bytes[order])
+        elif len(self.tasks) > 0:
+            tasks = [self.tasks[int(i)] for i in order.tolist()]
+        else:
+            tasks = []
+        opt = (lambda a: None if a is None else a[order])
+        return RecordBatch(
+            tasks=tasks,
+            target_codes=self.target_codes[order],
+            target_names=self.target_names,
+            predicted_latency_ms=self.predicted_latency_ms[order],
+            predicted_cost=self.predicted_cost[order],
+            actual_latency_ms=self.actual_latency_ms[order],
+            actual_cost=self.actual_cost[order],
+            predicted_cold=self.predicted_cold[order],
+            actual_cold=self.actual_cold[order],
+            allowed_cost=self.allowed_cost[order],
+            feasible=self.feasible[order],
+            completion_ms=self.completion_ms[order],
+            hedged=self.hedged[order],
+            queue_wait_ms=self.queue_wait_ms[order],
+            exec_ms=self.exec_ms[order],
+            hedge_codes=self.hedge_codes[order],
+            hedge_exec_ms=self.hedge_exec_ms[order],
+            arrivals=opt(self.arrivals),
+            task_idx=opt(self.task_idx),
+            input_size=opt(self.input_size),
+            input_bytes=opt(self.input_bytes),
+        )
+
 
 _ARENA_F64 = ("predicted_latency_ms", "predicted_cost", "actual_latency_ms",
               "actual_cost", "allowed_cost", "completion_ms", "queue_wait_ms",
@@ -244,11 +318,18 @@ class RecordArena:
     O(task objects). ``finish()`` returns the trimmed ``RecordBatch`` view;
     rows already appended are never rewritten, so the view stays valid if
     more rows are appended afterwards.
+
+    ``keep_inputs=True`` additionally retains the task ``size``/``bytes``
+    input-feature columns (two float64 columns — still constant-memory), so a
+    streamed run that dropped its task objects can be exported back to a
+    replayable trace (``repro.trace.capture``) round-trip exactly.
     """
 
-    def __init__(self, keep_tasks: bool = True, capacity: int = 0):
+    def __init__(self, keep_tasks: bool = True, capacity: int = 0,
+                 keep_inputs: bool = False):
         self.n = 0
         self.keep_tasks = keep_tasks
+        self.keep_inputs = keep_inputs
         self._cap0 = max(int(capacity), 0)  # optional preallocation hint
         self._cap = 0
         self._cols: dict[str, np.ndarray] = {}
@@ -270,7 +351,10 @@ class RecordArena:
         new_cap = max(self._cap, self._cap0, 1024)
         while new_cap < need:
             new_cap *= 2
-        dtypes = ({k: np.float64 for k in _ARENA_F64 + ("arrivals",)}
+        f64 = _ARENA_F64 + ("arrivals",)
+        if self.keep_inputs:
+            f64 = f64 + ("input_size", "input_bytes")
+        dtypes = ({k: np.float64 for k in f64}
                   | {k: np.bool_ for k in _ARENA_BOOL}
                   | {k: np.int64 for k in _ARENA_I64 + ("task_idx",)})
         for name, dt in dtypes.items():
@@ -304,6 +388,10 @@ class RecordArena:
         for name in _ARENA_F64 + _ARENA_BOOL:
             cols[name][sl] = getattr(rb, name)
         cols["arrivals"][sl] = rb.arrival_ms
+        if self.keep_inputs:
+            size, nbytes = rb.input_arrays()  # actionable error when dropped
+            cols["input_size"][sl] = size
+            cols["input_bytes"][sl] = nbytes
         if rb.task_idx is not None:
             cols["task_idx"][sl] = rb.task_idx
         elif isinstance(rb.tasks, TaskChunk):
@@ -326,6 +414,8 @@ class RecordArena:
             target_names=tuple(self._names),
             arrivals=c.pop("arrivals"),
             task_idx=c.pop("task_idx"),
+            input_size=c.pop("input_size", None),
+            input_bytes=c.pop("input_bytes", None),
             **c,
         )
 

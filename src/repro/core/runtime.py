@@ -758,7 +758,8 @@ class PlacementRuntime:
 
     def serve_stream(self, workload, chunk_size: int = 65536,
                      keep_tasks: bool | None = None,
-                     expected_tasks: int | None = None) -> SimulationResult:
+                     expected_tasks: int | None = None,
+                     keep_inputs: bool = False) -> SimulationResult:
         """Streaming chunked serve: the columnar pipeline over arrival chunks,
         carrying every piece of sequential state across chunk boundaries.
 
@@ -788,6 +789,9 @@ class PlacementRuntime:
         retained on the result (default: only when ``workload`` is already a
         materialized list; streamed sources drop them and the result backs
         its metrics with the arena's arrival/index columns).
+        ``keep_inputs=True`` retains the task size/bytes feature columns on
+        the result even in constant-memory mode, so the run can be exported
+        as a replayable trace (``repro.trace.capture``) without task objects.
 
         ``stream_stats`` afterwards reports ``{"chunks", "n", "spec_segments",
         "repairs", "walked"}`` aggregated over the stream. ``expected_tasks``
@@ -800,7 +804,8 @@ class PlacementRuntime:
             keep_tasks = isinstance(workload, (list, tuple))
         eng = self.engine
         arena = RecordArena(keep_tasks=keep_tasks,
-                            capacity=expected_tasks or 0)
+                            capacity=expected_tasks or 0,
+                            keep_inputs=keep_inputs)
         stats = {"chunks": 0, "n": 0, "spec_segments": 0, "repairs": 0,
                  "walked": 0}
         prev_last = -np.inf

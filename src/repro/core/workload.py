@@ -83,6 +83,21 @@ class TaskChunk(Sequence):
             yield self[i]
 
 
+def first_disorder(arrival_ms) -> int:
+    """Index of the first out-of-arrival-order element, ``-1`` if sorted.
+
+    The serve paths treat a non-monotone arrival stream as a signal to fall
+    back to the per-task walk; trace ingestion (``repro.trace``) instead
+    REJECTS unsorted traces up front — this is the shared detector, so the
+    error can name the exact offending record.
+    """
+    a = np.asarray(arrival_ms, dtype=np.float64)
+    if a.shape[0] < 2:
+        return -1
+    bad = np.nonzero(np.diff(a) < 0.0)[0]
+    return int(bad[0]) + 1 if bad.size else -1
+
+
 def task_arrays(tasks, fields: str = "iasb",
                 ) -> tuple[np.ndarray | None, np.ndarray | None,
                            np.ndarray | None, np.ndarray | None]:

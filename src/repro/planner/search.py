@@ -1,0 +1,292 @@
+"""What-if capacity search: replay a trace against candidate configurations.
+
+The planner answers the operator's question directly: *what is the cheapest
+fleet/policy configuration that would have served this recorded traffic
+within its SLO?* Every candidate is replayed against the trace through the
+real serve path — the same columnar ``serve_stream`` the production runtime
+uses, via ``ShardedRuntime`` workers — and scored from the resulting record
+arrays: actual cloud spend, fleet capacity cost, latency percentiles, and
+SLO attainment. Nothing is approximated with queueing formulas; the digital
+twin executes the trace.
+
+Two search strategies:
+
+- **grid** — replay every candidate against the full trace. Exhaustive, and
+  embarrassingly parallel: each (candidate × app) pair is one independent
+  shard, so candidates evaluate concurrently in threads or processes with
+  bit-identical results in every mode.
+- **halving** — successive halving over trace prefixes: replay all
+  candidates on a short prefix, prune the bottom half, double the prefix,
+  repeat — the final rung replays the FULL trace, so the winner is always
+  verified on everything, never extrapolated from a prefix.
+"""
+
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass, field
+
+import numpy as np
+
+from repro.core.apps import APPS, MEMORY_CONFIGS_MB
+from repro.core.multiapp import AppShard, ShardedRuntime
+from repro.core.records import SimulationResult
+from repro.planner.candidates import Candidate, TwinRuntimeFactory
+from repro.trace.format import Trace, TraceError
+from repro.trace.replay import TraceChunkFactory
+
+MS_PER_HOUR = 3_600_000.0
+
+
+@dataclass(frozen=True)
+class SLO:
+    """Service-level objective: ``target`` fraction of tasks within
+    ``latency_ms`` (e.g. 99% of requests under 30 s end-to-end)."""
+
+    latency_ms: float
+    target: float = 0.99
+
+    def __post_init__(self):
+        if not self.latency_ms > 0:
+            raise ValueError(f"SLO latency must be > 0, got {self.latency_ms}")
+        if not 0.0 < self.target <= 1.0:
+            raise ValueError(
+                f"SLO target must be in (0, 1], got {self.target}")
+
+
+@dataclass
+class CandidateScore:
+    """One candidate's replay outcome, scored from the record arrays."""
+
+    candidate: Candidate
+    n: int                       # tasks replayed (prefix length on early rungs)
+    cloud_cost: float            # Σ actual billed cost (edge marginal = 0)
+    fleet_cost: float            # device_rate_per_hour × Σspeed × makespan h
+    mean_latency_ms: float
+    p50_latency_ms: float
+    p95_latency_ms: float
+    p99_latency_ms: float
+    attainment: float            # fraction of tasks within slo.latency_ms
+    meets_slo: bool
+    makespan_ms: float           # first arrival → last completion, cross-app
+    per_app_attainment: dict[str, float] = field(default_factory=dict)
+
+    @property
+    def total_cost(self) -> float:
+        return self.cloud_cost + self.fleet_cost
+
+    def row(self) -> str:
+        flag = "meets" if self.meets_slo else "MISSES"
+        return (f"{self.candidate.name:<18} ${self.total_cost:>10.5f} "
+                f"(cloud {self.cloud_cost:.5f} + fleet {self.fleet_cost:.5f})"
+                f"  p99 {self.p99_latency_ms:>8,.0f} ms"
+                f"  attain {self.attainment:7.2%}  {flag}")
+
+
+def score_candidate(candidate: Candidate,
+                    results: dict[str, SimulationResult],
+                    slo: SLO) -> CandidateScore:
+    """Score one candidate's per-app replay results against the SLO.
+
+    All metrics are array reductions over the concatenated record columns.
+    Fleet cost charges the candidate's aggregate relative capacity
+    (``Σ device speeds``) at ``device_rate_per_hour`` for the run's makespan
+    — so over-provisioned fleets pay for the capacity that bought their
+    latency, which is the trade the planner exists to arbitrate.
+    """
+    lats = [r.records.actual_latency_ms for r in results.values()]
+    lat = np.concatenate(lats) if lats else np.zeros(0)
+    n = int(lat.shape[0])
+    per_app = {
+        app: float(np.count_nonzero(
+            r.records.actual_latency_ms <= slo.latency_ms)) / max(r.n, 1)
+        for app, r in results.items()}
+    attain = float(np.count_nonzero(lat <= slo.latency_ms)) / max(n, 1)
+    t0 = min((float(np.min(r.records.arrival_ms))
+              for r in results.values() if r.n), default=0.0)
+    t1 = max((float(np.max(r.records.completion_ms))
+              for r in results.values() if r.n), default=0.0)
+    makespan = max(t1 - t0, 0.0)
+    fleet_cost = (candidate.device_rate_per_hour
+                  * candidate.fleet_speed_total * makespan / MS_PER_HOUR)
+    return CandidateScore(
+        candidate=candidate,
+        n=n,
+        cloud_cost=float(sum(r.total_actual_cost for r in results.values())),
+        fleet_cost=fleet_cost,
+        mean_latency_ms=float(np.mean(lat)) if n else 0.0,
+        p50_latency_ms=float(np.percentile(lat, 50)) if n else 0.0,
+        p95_latency_ms=float(np.percentile(lat, 95)) if n else 0.0,
+        p99_latency_ms=float(np.percentile(lat, 99)) if n else 0.0,
+        attainment=attain,
+        meets_slo=attain >= slo.target,
+        makespan_ms=makespan,
+        per_app_attainment=per_app,
+    )
+
+
+def _rank_key(s: CandidateScore):
+    """SLO-meeting candidates first, cheapest wins; among SLO-missers,
+    closest to the target wins (then cheapest). Name breaks exact ties so
+    the ranking is a total order — identical across evaluation modes."""
+    if s.meets_slo:
+        return (0, s.total_cost, s.candidate.name)
+    return (1, -s.attainment, s.total_cost, s.candidate.name)
+
+
+@dataclass
+class PlanResult:
+    """Outcome of one ``Planner.plan`` search."""
+
+    best: CandidateScore               # verified on the FULL trace
+    scores: list[CandidateScore]       # final-rung (full-trace) scores, ranked
+    rungs: list[dict]                  # per-rung summaries (halving)
+    strategy: str
+    mode: str
+    replayed_tasks: int                # Σ tasks replayed across all rungs
+
+    def table(self) -> str:
+        rows = [s.row() for s in self.scores]
+        rows.append(f"best: {self.best.candidate.name} "
+                    f"(${self.best.total_cost:.5f}, "
+                    f"attain {self.best.attainment:.2%})")
+        return "\n".join(rows)
+
+
+class Planner:
+    """Replay a trace against candidate configurations; find the cheapest
+    that meets the SLO.
+
+    Each (candidate × app) pair becomes one independent ``AppShard`` — its
+    runtime a ``TwinRuntimeFactory`` (rebuilt from seeds, fit-cached), its
+    workload the candidate-agnostic per-app sub-trace — so one
+    ``ShardedRuntime.serve`` evaluates the whole candidate set through the
+    existing worker machinery. Shards share no state; scores are
+    bit-identical across sequential, thread, and process modes.
+    """
+
+    def __init__(self, trace: Trace, slo: SLO, fit_seed: int = 0,
+                 n_inputs: int | None = 120,
+                 fit_configs: tuple[int, ...] | None = None,
+                 twin_seed: int = 11, max_workers: int | None = None):
+        trace.validate()
+        if trace.n == 0:
+            raise TraceError("cannot plan over an empty trace")
+        for app in trace.app_names:
+            if app not in APPS:
+                raise TraceError(
+                    f"trace app {app!r} is not a known application; known "
+                    f"apps are {sorted(APPS)}")
+        self.trace = trace
+        self.slo = slo
+        self.fit_seed = fit_seed
+        self.n_inputs = n_inputs
+        if fit_configs is None:
+            fit_configs = tuple(MEMORY_CONFIGS_MB)
+        self.fit_configs = tuple(fit_configs)
+        self.twin_seed = twin_seed
+        self.max_workers = max_workers
+        self.last_mode = "none"  # mode of the most recent evaluate()
+
+    # ------------------------------------------------------------- evaluate
+    def _shards(self, candidates: list[Candidate],
+                prefix_n: int | None) -> list[AppShard]:
+        sub = (self.trace if prefix_n is None
+               else self.trace.prefix(prefix_n)).split_by_app()
+        shards = []
+        for cand in candidates:
+            for app, t in sub.items():
+                shards.append(AppShard(
+                    name=f"{cand.name}/{app}",
+                    runtime=TwinRuntimeFactory(
+                        app=app, candidate=cand, fit_seed=self.fit_seed,
+                        n_inputs=self.n_inputs, fit_configs=self.fit_configs,
+                        twin_seed=self.twin_seed),
+                    workload=TraceChunkFactory(t),
+                    chunk_size=cand.chunk_size,
+                    keep_tasks=False))
+        return shards
+
+    def evaluate(self, candidates, prefix_n: int | None = None,
+                 parallel: bool = True,
+                 use_processes: bool = False) -> list[CandidateScore]:
+        """Replay every candidate against the trace (or its first
+        ``prefix_n`` records); return scores ranked best-first."""
+        candidates = list(candidates)
+        if not candidates:
+            raise ValueError("no candidates to evaluate")
+        names = [c.name for c in candidates]
+        if len(set(names)) != len(names):
+            raise ValueError(f"duplicate candidate names: {names}")
+        sharded = ShardedRuntime(
+            self._shards(candidates, prefix_n),
+            max_workers=self.max_workers,
+        ).serve(parallel=parallel, use_processes=use_processes)
+        self.last_mode = sharded.mode
+        apps = self.trace.app_names
+        scores = [
+            score_candidate(
+                cand,
+                {app: sharded.results[f"{cand.name}/{app}"] for app in apps
+                 if f"{cand.name}/{app}" in sharded.results},
+                self.slo)
+            for cand in candidates]
+        return sorted(scores, key=_rank_key)
+
+    # ----------------------------------------------------------------- plan
+    def plan(self, candidates, strategy: str = "grid", rungs: int = 3,
+             min_rung_n: int = 512, parallel: bool = True,
+             use_processes: bool = False) -> PlanResult:
+        """The cheapest configuration that serves this trace within SLO.
+
+        ``strategy="grid"`` replays every candidate on the full trace;
+        ``"halving"`` prunes the bottom half of the ranking after each
+        prefix rung, doubling the prefix each time — the last rung is always
+        the full trace, so ``best`` is verified on every record either way.
+        If no candidate meets the SLO, the best-attainment one is returned
+        (``best.meets_slo`` says which case you are in).
+        """
+        candidates = list(candidates)
+        if strategy not in ("grid", "halving"):
+            raise ValueError(
+                f"unknown strategy {strategy!r}; expected 'grid' or 'halving'")
+        rung_log: list[dict] = []
+        replayed = 0
+        survivors = candidates
+        if strategy == "halving" and rungs > 1 and len(candidates) > 1:
+            n = self.trace.n
+            for k in range(rungs - 1):
+                rung_n = max(min_rung_n, n >> (rungs - 1 - k))
+                if rung_n >= n:
+                    break  # prefix would not be shorter than the full trace
+                ranked = self.evaluate(survivors, prefix_n=rung_n,
+                                       parallel=parallel,
+                                       use_processes=use_processes)
+                replayed += sum(s.n for s in ranked)
+                keep = max(1, math.ceil(len(ranked) / 2))
+                rung_log.append({
+                    "rung": k, "prefix_n": rung_n,
+                    "evaluated": [s.candidate.name for s in ranked],
+                    "kept": [s.candidate.name for s in ranked[:keep]]})
+                survivors = [s.candidate for s in ranked[:keep]]
+        final = self.evaluate(survivors, prefix_n=None, parallel=parallel,
+                              use_processes=use_processes)
+        replayed += sum(s.n for s in final)
+        return PlanResult(best=final[0], scores=final, rungs=rung_log,
+                          strategy=strategy, mode=self.last_mode,
+                          replayed_tasks=replayed)
+
+
+def plan(trace: Trace, candidates, slo: SLO, strategy: str = "grid",
+         **kwargs) -> PlanResult:
+    """Convenience: ``Planner(trace, slo).plan(candidates, strategy)``.
+
+    Planner construction kwargs (``fit_seed``, ``n_inputs``, ``twin_seed``,
+    ``max_workers``, ``fit_configs``) and plan kwargs (``rungs``,
+    ``parallel``, ``use_processes``, ``min_rung_n``) are split automatically.
+    """
+    plan_keys = {"rungs", "min_rung_n", "parallel", "use_processes"}
+    plan_kw = {k: v for k, v in kwargs.items() if k in plan_keys}
+    ctor_kw = {k: v for k, v in kwargs.items() if k not in plan_keys}
+    return Planner(trace, slo, **ctor_kw).plan(candidates, strategy=strategy,
+                                               **plan_kw)

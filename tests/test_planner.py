@@ -1,0 +1,216 @@
+"""What-if capacity planner (ISSUE 6): candidate search over recorded traffic.
+
+Covers:
+- the seeded 3-candidate fleet fixture: ``plan()`` returns the
+  verified-cheapest SLO-meeting configuration (fleet-2: fleet-1 is
+  saturated and misses, fleet-3 meets but pays for capacity it doesn't
+  need) — and the verdict is identical across sequential, thread, and
+  process evaluation modes;
+- successive halving prunes on prefixes but verifies the winner on the
+  full trace, agreeing with grid search on the fixture;
+- scoring arithmetic (fleet capacity cost, attainment, ranking order) on
+  hand-built records;
+- candidate/policy/SLO validation errors.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+import pytest
+
+from repro.core.records import SimulationResult, TaskRecord
+from repro.core.workload import PoissonWorkload, TaskInput
+from repro.planner import (
+    SLO,
+    Candidate,
+    Planner,
+    PolicySpec,
+    plan,
+    score_candidate,
+)
+from repro.planner.candidates import fitted
+from repro.trace import Trace, TraceError
+
+CONFIGS = (1280, 1536, 1792, 2048)
+
+
+@pytest.fixture(scope="module")
+def stt_trace():
+    """600 STT arrivals at 0.12/s: ~11 s edge compute ⇒ one device is
+    saturated (util ≈ 1.3), two are stable — fleet size discriminates."""
+    twin, _ = fitted("STT", seed=0, n_inputs=120, configs=CONFIGS)
+    tasks = PoissonWorkload(rate_per_s=0.12, size_sampler=twin.sample_input,
+                            seed=5).generate(600)
+    return Trace.from_tasks(tasks, app="STT")
+
+
+def _fixture_candidates():
+    # c_max=0 keeps every task on the fleet, so the search is purely about
+    # edge capacity vs its hourly price
+    pol = PolicySpec(kind="min_latency", c_max=0.0)
+    return [Candidate.make(f"fleet-{k}", k, policy=pol, cloud_configs=CONFIGS,
+                           device_rate_per_hour=0.05) for k in (1, 2, 3)]
+
+
+def _fixture_planner(trace):
+    return Planner(trace, SLO(latency_ms=40_000.0, target=0.95),
+                   fit_seed=0, n_inputs=120, fit_configs=CONFIGS)
+
+
+def _score_key(s):
+    return (s.candidate.name, s.n, s.total_cost, s.attainment,
+            s.p99_latency_ms, s.mean_latency_ms, s.makespan_ms)
+
+
+# ------------------------------------------------------------- the fixture
+def test_plan_returns_verified_cheapest_slo_meeting_config(stt_trace):
+    planner = _fixture_planner(stt_trace)
+    res = planner.plan(_fixture_candidates(), strategy="grid", parallel=False)
+
+    assert res.best.candidate.name == "fleet-2"
+    assert res.best.meets_slo
+    assert res.best.n == stt_trace.n  # verified on the FULL trace
+    # verified-cheapest: nothing that meets the SLO is cheaper
+    meeting = [s for s in res.scores if s.meets_slo]
+    assert {s.candidate.name for s in meeting} == {"fleet-2", "fleet-3"}
+    assert res.best.total_cost == min(s.total_cost for s in meeting)
+    # the saturated single device misses by a mile
+    worst = next(s for s in res.scores if s.candidate.name == "fleet-1")
+    assert not worst.meets_slo and worst.attainment < 0.5
+
+
+def test_plan_identical_across_execution_modes(stt_trace):
+    planner = _fixture_planner(stt_trace)
+    cands = _fixture_candidates()
+    seq = planner.plan(cands, strategy="grid", parallel=False)
+    thr = planner.plan(cands, strategy="grid", parallel=True)
+    prc = planner.plan(cands, strategy="grid", parallel=True,
+                       use_processes=True)
+    assert (seq.mode, thr.mode, prc.mode) == ("sequential", "thread",
+                                              "process")
+    for other in (thr, prc):
+        assert other.best.candidate.name == seq.best.candidate.name
+        assert [_score_key(s) for s in other.scores] \
+            == [_score_key(s) for s in seq.scores]
+
+
+def test_halving_agrees_with_grid_and_verifies_on_full_trace(stt_trace):
+    planner = _fixture_planner(stt_trace)
+    grid = planner.plan(_fixture_candidates(), strategy="grid")
+    halv = planner.plan(_fixture_candidates(), strategy="halving", rungs=3,
+                        min_rung_n=100)
+    assert halv.best.candidate.name == grid.best.candidate.name
+    assert halv.best.n == stt_trace.n
+    assert _score_key(halv.best) == _score_key(grid.best)
+    # pruning actually happened, and replayed fewer task-evaluations
+    assert halv.rungs and all(len(r["kept"]) < len(r["evaluated"])
+                              for r in halv.rungs)
+    assert halv.replayed_tasks < grid.replayed_tasks
+    assert grid.replayed_tasks == stt_trace.n * 3
+
+
+def test_plan_convenience_wrapper(stt_trace):
+    res = plan(stt_trace, _fixture_candidates(),
+               SLO(latency_ms=40_000.0, target=0.95), strategy="halving",
+               rungs=2, min_rung_n=100, fit_configs=CONFIGS, n_inputs=120)
+    assert res.best.candidate.name == "fleet-2"
+    assert res.strategy == "halving"
+    assert "best: fleet-2" in res.table()
+
+
+def test_no_candidate_meets_slo_returns_best_attainment(stt_trace):
+    planner = Planner(stt_trace, SLO(latency_ms=1.0, target=0.99),
+                      fit_seed=0, n_inputs=120, fit_configs=CONFIGS)
+    res = planner.plan(_fixture_candidates()[:2], strategy="grid")
+    assert not res.best.meets_slo
+    assert res.best.attainment == max(s.attainment for s in res.scores)
+
+
+# ------------------------------------------------------------------ scoring
+def _fake_result(arrivals, completions, latencies, costs):
+    recs = [TaskRecord(
+        task=TaskInput(idx=i, arrival_ms=a, size=1.0, bytes=1.0),
+        target="edge0", predicted_latency_ms=lat, predicted_cost=c,
+        actual_latency_ms=lat, actual_cost=c, predicted_cold=False,
+        actual_cold=False, allowed_cost=float("inf"), feasible=True,
+        completion_ms=cm)
+        for i, (a, cm, lat, c) in enumerate(
+            zip(arrivals, completions, latencies, costs))]
+    return SimulationResult(records=recs)
+
+
+def test_score_candidate_arithmetic():
+    cand = Candidate.make("c", {"edge0": 1.0, "edge1": 0.5},
+                          device_rate_per_hour=0.10)
+    # makespan: first arrival 0 → last completion 1.8e6 ms = 0.5 h
+    res = _fake_result(arrivals=[0.0, 1000.0],
+                       completions=[500.0, 1_800_000.0],
+                       latencies=[100.0, 900.0], costs=[2e-6, 3e-6])
+    slo = SLO(latency_ms=500.0, target=0.5)
+    s = score_candidate(cand, {"STT": res}, slo)
+    assert s.n == 2
+    assert s.cloud_cost == pytest.approx(5e-6)
+    # 0.10 $/h × 1.5 aggregate speed × 0.5 h
+    assert s.fleet_cost == pytest.approx(0.075)
+    assert s.total_cost == pytest.approx(0.075 + 5e-6)
+    assert s.attainment == 0.5 and s.meets_slo
+    assert s.per_app_attainment == {"STT": 0.5}
+    assert s.makespan_ms == pytest.approx(1_800_000.0)
+
+
+def test_ranking_prefers_meeting_then_cheapest():
+    cand = Candidate.make("x", 1)
+    slo = SLO(latency_ms=500.0, target=0.9)
+    cheap_missing = score_candidate(cand, {"A": _fake_result(
+        [0.0], [100.0], [1000.0], [1e-6])}, slo)
+    costly_meeting = score_candidate(
+        Candidate.make("y", 1, device_rate_per_hour=1.0), {"A": _fake_result(
+            [0.0], [3_600_000.0], [100.0], [1e-6])}, slo)
+    from repro.planner.search import _rank_key
+    assert _rank_key(costly_meeting) < _rank_key(cheap_missing)
+
+
+# --------------------------------------------------------------- validation
+def test_candidate_and_policy_validation():
+    with pytest.raises(ValueError, match="unknown policy kind"):
+        PolicySpec(kind="yolo")
+    with pytest.raises(ValueError, match="empty fleet"):
+        Candidate(name="c", fleet=())
+    with pytest.raises(ValueError, match="duplicate fleet devices"):
+        Candidate(name="c", fleet=(("e0", 1.0), ("e0", 2.0)))
+    with pytest.raises(ValueError, match="count must be >= 1"):
+        Candidate.make("c", 0)
+    assert Candidate.make("c", 2).fleet == (("edge0", 1.0), ("edge1", 1.0))
+    assert PolicySpec(kind="min_cost", deadline_ms=5.0).build().deadline_ms == 5.0
+    hedged = PolicySpec(kind="hedged", c_max=1e-5,
+                        hedge_threshold_ms=100.0).build()
+    assert hedged.hedge_threshold_ms == 100.0
+
+
+def test_slo_validation():
+    with pytest.raises(ValueError, match="target"):
+        SLO(latency_ms=100.0, target=0.0)
+    with pytest.raises(ValueError, match="latency"):
+        SLO(latency_ms=0.0)
+
+
+def test_planner_rejects_bad_inputs(stt_trace):
+    planner = _fixture_planner(stt_trace)
+    with pytest.raises(ValueError, match="duplicate candidate names"):
+        planner.evaluate([Candidate.make("a", 1), Candidate.make("a", 2)])
+    with pytest.raises(ValueError, match="no candidates"):
+        planner.evaluate([])
+    with pytest.raises(ValueError, match="unknown strategy"):
+        planner.plan(_fixture_candidates(), strategy="bogus")
+    with pytest.raises(TraceError, match="empty trace"):
+        Planner(Trace.from_arrays([], [], [], app_names=("STT",)),
+                SLO(latency_ms=1.0))
+    with pytest.raises(TraceError, match="not a known application"):
+        Planner(Trace.from_arrays([0.0], [1.0], [1.0],
+                                  app_names=("mystery",)),
+                SLO(latency_ms=1.0))
+
+
+def test_unknown_app_in_fit_cache():
+    with pytest.raises(ValueError, match="unknown app 'nope'"):
+        fitted("nope")

@@ -423,3 +423,75 @@ def test_rules_always_divisible_for_all_archs():
                         for a in r:
                             size *= mesh.shape[a]
                         assert dim % size == 0, (arch, path, ax, dim, size)
+
+
+# ------------------------------------------------------ trace format (ISSUE 6)
+@given(
+    gaps=st.lists(st.floats(min_value=1e-3, max_value=1e5, allow_nan=False),
+                  min_size=0, max_size=40),
+    seed=st.integers(min_value=0, max_value=2**16),
+    with_lat=st.booleans(),
+)
+@settings(max_examples=40, deadline=None)
+def test_trace_disk_round_trip_bit_exact(gaps, seed, with_lat):
+    """JSONL (shortest-repr floats) and NPZ round trips reproduce every
+    column bit-exactly for arbitrary valid traces."""
+    import os
+    import tempfile
+
+    from repro.trace import Trace, load
+
+    rng = np.random.default_rng(seed)
+    n = len(gaps)
+    t = Trace.from_arrays(
+        np.cumsum(np.array(gaps, dtype=np.float64)),
+        rng.uniform(0.0, 1e7, n), rng.uniform(0.0, 1e7, n),
+        app_codes=rng.integers(0, 2, n), app_names=("IR", "STT"),
+        observed_latency_ms=rng.uniform(0.0, 1e6, n) if with_lat else None)
+    with tempfile.TemporaryDirectory() as d:
+        for name in ("t.jsonl", "t.npz"):
+            p = os.path.join(d, name)
+            t.save(p)
+            assert load(p).equal(t)
+
+
+@given(chunk_size=st.integers(min_value=1, max_value=200),
+       prefix=st.integers(min_value=0, max_value=150))
+@settings(max_examples=40, deadline=None)
+def test_trace_workload_chunks_prefix_bit_exact(chunk_size, prefix):
+    """``TraceWorkload.chunks`` over any chunk size / replay prefix yields
+    exactly the trace's own columns — the workload-level half of the
+    bit-identical replay guarantee (the serve-level half is pinned in
+    tests/test_trace.py)."""
+    from repro.trace import Trace, TraceWorkload
+
+    _, _, tasks = _stream_setup()
+    trace = Trace.from_tasks(tasks, app="IR")
+    chunks = list(TraceWorkload(trace).chunks(n=prefix,
+                                              chunk_size=chunk_size))
+    cat = (lambda col: np.concatenate([getattr(c, col) for c in chunks])
+           if chunks else np.zeros(0))
+    p = trace.prefix(prefix)
+    assert np.array_equal(cat("arrival_ms"), p.arrival_ms)
+    assert np.array_equal(cat("size"), p.size)
+    assert np.array_equal(cat("bytes"), p.bytes)
+    assert np.array_equal(cat("idx") if chunks else np.zeros(0, np.int64),
+                          np.arange(prefix, dtype=np.int64))
+    assert all(len(c) <= chunk_size for c in chunks)
+
+
+@given(seed=st.integers(min_value=0, max_value=2**16),
+       n=st.integers(min_value=0, max_value=60))
+@settings(max_examples=40, deadline=None)
+def test_trace_split_merge_roundtrip(seed, n):
+    """``merge(t.split_by_app())`` reproduces any multi-app trace exactly
+    (strictly increasing arrivals ⇒ the stable interleave is unique)."""
+    from repro.trace import Trace, merge
+
+    rng = np.random.default_rng(seed)
+    t = Trace.from_arrays(
+        np.cumsum(rng.uniform(1e-3, 1e4, n)),
+        rng.uniform(0.0, 1e6, n), rng.uniform(0.0, 1e6, n),
+        app_codes=rng.integers(0, 3, n), app_names=("IR", "FD", "STT"),
+        observed_latency_ms=rng.uniform(0.0, 1e5, n))
+    assert merge(t.split_by_app()).equal(t)

@@ -1,0 +1,382 @@
+"""Trace format + replay (ISSUE 6): ingestion, bit-exact replay, capture.
+
+Covers:
+- JSONL and NPZ round trips are bit-exact (JSONL via shortest-repr floats);
+  ``load`` dispatches on extension and rejects unknown ones;
+- malformed traces are rejected at ingestion with the offending record named
+  (unsorted arrivals, NaN/negative sizes, bad app codes, mixed latency
+  columns, wrong schema/version) — never silently degraded;
+- ``TraceWorkload`` replay through ``serve_stream`` is bit-identical PER
+  RECORD to serving the equivalent in-memory task list, at chunk sizes from
+  1 upward;
+- capture → replay round-trips exactly, for kept-task runs and for
+  constant-memory streams with ``keep_inputs=True``; dropped inputs raise
+  the actionable error;
+- multi-app: ``split_by_app``/``merge`` invert each other; ``trace_shards``
+  replay ≡ filtering the trace per app up front; ``capture_sharded`` and
+  ``ShardedResult.merged_records`` agree on global arrival order.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+import pytest
+
+from repro.core.decision import DecisionEngine, MinLatencyPolicy
+from repro.core.fit import build_fleet_predictor, fit_app
+from repro.core.multiapp import serve_sharded
+from repro.core.runtime import PlacementRuntime, TwinBackend
+from repro.core.workload import BurstyWorkload, PoissonWorkload, first_disorder
+from repro.trace import (
+    Trace,
+    TraceError,
+    TraceWorkload,
+    capture,
+    capture_sharded,
+    load,
+    merge,
+    trace_shards,
+)
+
+CONFIGS = (1280, 1536, 1792)
+FLEET = {"edge0": 1.0, "edge1": 1.0, "edge2": 0.6}
+NAMES = tuple(FLEET)
+
+RECORD_COLS = ("predicted_latency_ms", "predicted_cost", "actual_latency_ms",
+               "actual_cost", "allowed_cost", "completion_ms", "queue_wait_ms",
+               "exec_ms", "hedge_exec_ms", "predicted_cold", "actual_cold",
+               "feasible", "hedged")
+
+
+@pytest.fixture(scope="module")
+def ir_setup():
+    return fit_app("IR", seed=0, n_inputs=120, configs=CONFIGS)
+
+
+@pytest.fixture(scope="module")
+def stt_setup():
+    return fit_app("STT", seed=0, n_inputs=120, configs=CONFIGS)
+
+
+def _runtime(twin, models, c_max=6e-6, alpha=0.05, seed=11):
+    pred = build_fleet_predictor(models, dict(FLEET), configs=CONFIGS)
+    eng = DecisionEngine(predictor=pred,
+                         policy=MinLatencyPolicy(c_max=c_max, alpha=alpha))
+    backend = TwinBackend(twin, seed=seed, edge_names=NAMES, edge_speed=FLEET)
+    return PlacementRuntime(eng, backend)
+
+
+def _bursty_trace(twin, n, seed=31, app="IR"):
+    tasks = BurstyWorkload(rate_per_s=4.0, size_sampler=twin.sample_input,
+                           burst_multiplier=8.0, mean_quiet_s=10.0,
+                           mean_burst_s=6.0, seed=seed).generate(n)
+    return tasks, Trace.from_tasks(tasks, app=app)
+
+
+def assert_records_equal(a, b):
+    assert len(a) == len(b)
+    assert list(a.targets) == list(b.targets)
+    for col in RECORD_COLS:
+        assert np.array_equal(getattr(a, col), getattr(b, col)), col
+    assert np.array_equal(a.arrival_ms, b.arrival_ms)
+
+
+def _toy_trace(n=50, seed=3, apps=("IR",)):
+    rng = np.random.default_rng(seed)
+    codes = rng.integers(0, len(apps), size=n)
+    return Trace.from_arrays(
+        arrival_ms=np.cumsum(rng.exponential(250.0, size=n)),
+        size=rng.uniform(1e4, 1e6, size=n),
+        bytes=rng.uniform(1e3, 1e5, size=n),
+        app_codes=codes, app_names=apps,
+        observed_latency_ms=rng.uniform(10.0, 5e4, size=n),
+        meta={"source": "toy"})
+
+
+# ------------------------------------------------------------ format round trips
+def test_jsonl_and_npz_round_trips_bit_exact(tmp_path):
+    t = _toy_trace(apps=("IR", "STT"))
+    pj, pn = tmp_path / "t.jsonl", tmp_path / "t.npz"
+    t.save(pj)
+    t.save(pn)
+    for p in (pj, pn):
+        back = load(p)
+        assert back.equal(t)
+        assert back.app_names == t.app_names
+        assert back.meta == {"source": "toy"}
+        # bit-exact, not approximately equal
+        assert np.array_equal(back.arrival_ms, t.arrival_ms)
+        assert np.array_equal(back.observed_latency_ms, t.observed_latency_ms)
+
+
+def test_round_trip_without_observed_latency(tmp_path):
+    t = _toy_trace()
+    t = Trace.from_arrays(t.arrival_ms, t.size, t.bytes, t.app_codes,
+                          t.app_names)
+    assert t.observed_latency_ms is None
+    for name in ("a.jsonl", "a.npz"):
+        t.save(tmp_path / name)
+        assert load(tmp_path / name).equal(t)
+
+
+def test_load_save_reject_unknown_extension(tmp_path):
+    t = _toy_trace()
+    with pytest.raises(TraceError, match="cannot infer trace format"):
+        t.save(tmp_path / "t.csv")
+    with pytest.raises(TraceError, match="cannot infer trace format"):
+        load(tmp_path / "t.csv")
+
+
+def test_jsonl_rejects_wrong_header_and_bad_rows(tmp_path):
+    p = tmp_path / "bad.jsonl"
+    p.write_text('{"not": "a trace"}\n')
+    with pytest.raises(TraceError, match="header"):
+        load(p)
+    p.write_text('{"schema": "repro.trace", "version": 1, "apps": ["IR"]}\n'
+                 '{"t": 1.0, "size": 5.0, "bytes": 2.0}\n')
+    with pytest.raises(TraceError, match="line 2.*'app'"):
+        load(p)
+    # all-or-none observed latency, offending line named
+    p.write_text('{"schema": "repro.trace", "version": 1, "apps": ["IR"]}\n'
+                 '{"t": 1.0, "app": 0, "size": 5.0, "bytes": 2.0, "lat": 9.0}\n'
+                 '{"t": 2.0, "app": 0, "size": 5.0, "bytes": 2.0}\n')
+    with pytest.raises(TraceError, match="line 3.*all-or-none"):
+        load(p)
+
+
+def test_version_gate(tmp_path):
+    p = tmp_path / "new.jsonl"
+    p.write_text('{"schema": "repro.trace", "version": 99, "apps": ["IR"]}\n')
+    with pytest.raises(TraceError, match="version 99"):
+        load(p)
+
+
+# ------------------------------------------------------------------ validation
+def test_unsorted_trace_rejected_with_offending_index():
+    arr = [0.0, 10.0, 5.0, 20.0]
+    with pytest.raises(TraceError) as e:
+        Trace.from_arrays(arr, [1, 1, 1, 1], [1, 1, 1, 1])
+    msg = str(e.value)
+    assert "record 2" in msg and "10.0" in msg and "5.0" in msg
+    # the error names the same index the serve-path detector computes
+    assert first_disorder(arr) == 2
+    # rather than silently dropping to the per-task walk
+    assert "per-task walk" in msg
+
+
+def test_nan_and_negative_inputs_rejected_with_index():
+    with pytest.raises(TraceError, match="record 1: NaN size"):
+        Trace.from_arrays([0.0, 1.0], [1.0, float("nan")], [1.0, 1.0])
+    with pytest.raises(TraceError, match="record 0: negative bytes"):
+        Trace.from_arrays([0.0, 1.0], [1.0, 1.0], [-3.0, 1.0])
+    with pytest.raises(TraceError, match="non-finite arrival"):
+        Trace.from_arrays([0.0, float("inf")], [1.0, 1.0], [1.0, 1.0])
+
+
+def test_app_code_and_name_validation():
+    with pytest.raises(TraceError, match="record 1: app code 7"):
+        Trace.from_arrays([0.0, 1.0], [1, 1], [1, 1], app_codes=[0, 7],
+                          app_names=("IR",))
+    with pytest.raises(TraceError, match="duplicate app names"):
+        Trace.from_arrays([0.0], [1], [1], app_names=("IR", "IR"))
+    t = _toy_trace()
+    with pytest.raises(TraceError, match="unknown app 'FD'.*IR"):
+        t.for_app("FD")
+
+
+def test_column_length_mismatch_rejected():
+    with pytest.raises(TraceError, match="'size' has 1 records but"):
+        Trace.from_arrays([0.0, 1.0], [1.0], [1.0, 1.0])
+
+
+# --------------------------------------------------------------- replay parity
+def test_trace_replay_bit_identical_to_in_memory(ir_setup):
+    """The tentpole guarantee: a ``TraceWorkload`` streamed through
+    ``serve_stream`` produces per-record identical results to serving the
+    in-memory task list it was recorded from — at every chunk size."""
+    twin, models = ir_setup
+    tasks, trace = _bursty_trace(twin, 700)
+    ref = _runtime(twin, models).serve(tasks, batched=True)
+    tw = TraceWorkload(trace)
+    for chunk_size in (1, 53, 256, 700, 5000):
+        rt = _runtime(twin, models)
+        res = rt.serve_stream(tw.chunks(chunk_size=chunk_size))
+        assert_records_equal(res.records, ref.records)
+    # the whole-trace TaskChunk spelling, sliced by serve_stream itself
+    res = _runtime(twin, models).serve_stream(tw.task_chunk(), chunk_size=97)
+    assert_records_equal(res.records, ref.records)
+
+
+def test_trace_replay_after_disk_round_trip(ir_setup, tmp_path):
+    twin, models = ir_setup
+    tasks, trace = _bursty_trace(twin, 300, seed=5)
+    ref = _runtime(twin, models).serve(tasks, batched=True)
+    for name in ("t.jsonl", "t.npz"):
+        trace.save(tmp_path / name)
+        res = _runtime(twin, models).serve_stream(
+            TraceWorkload(load(tmp_path / name)).chunks(chunk_size=64))
+        assert_records_equal(res.records, ref.records)
+
+
+def test_trace_workload_generate_matches_chunks(ir_setup):
+    twin, models = ir_setup
+    _, trace = _bursty_trace(twin, 200, seed=8)
+    tw = TraceWorkload(trace)
+    gen = tw.generate()
+    assert len(gen) == 200
+    flat = [t for c in tw.chunks(chunk_size=17) for t in c]
+    for a, b in zip(gen, flat):
+        assert (a.arrival_ms, a.size, a.bytes) == (b.arrival_ms, b.size, b.bytes)
+    with pytest.raises(TraceError, match="only 200 records"):
+        tw.generate(201)
+
+
+# ------------------------------------------------------------------- capture
+def test_capture_replay_round_trip(ir_setup):
+    twin, models = ir_setup
+    tasks, _ = _bursty_trace(twin, 400, seed=13)
+    ref = _runtime(twin, models).serve(tasks, batched=True)
+    t = capture(ref, app="IR")
+    # captured inputs are the served inputs, observed latency the actual one
+    assert np.array_equal(t.observed_latency_ms, ref.records.actual_latency_ms)
+    res = _runtime(twin, models).serve_stream(
+        TraceWorkload(t).chunks(chunk_size=71), keep_inputs=True)
+    assert_records_equal(res.records, ref.records)
+    # and capture of the replay equals the original capture
+    assert capture(res, app="IR").equal(t)
+
+
+def test_capture_from_constant_memory_stream(ir_setup):
+    twin, models = ir_setup
+    tasks, trace = _bursty_trace(twin, 300, seed=21)
+    ref = _runtime(twin, models).serve(tasks, batched=True)
+    rt = _runtime(twin, models)
+    res = rt.serve_stream(TraceWorkload(trace).chunks(chunk_size=64),
+                          keep_tasks=False, keep_inputs=True)
+    assert res.records.tasks == []  # genuinely constant-memory
+    t = capture(res, app="IR")
+    assert t.equal(capture(ref, app="IR"))
+
+    # without keep_inputs the capture fails with the actionable fix
+    rt2 = _runtime(twin, models)
+    res2 = rt2.serve_stream(TraceWorkload(trace).chunks(chunk_size=64),
+                            keep_tasks=False)
+    with pytest.raises(ValueError, match="keep_inputs=True"):
+        capture(res2, app="IR")
+
+
+# ------------------------------------------------------------------ multi-app
+def _multiapp_trace(ir_setup, stt_setup, n_ir=200, n_stt=60):
+    ir_twin, _ = ir_setup
+    stt_twin, _ = stt_setup
+    ir = Trace.from_tasks(
+        PoissonWorkload(rate_per_s=4.0, size_sampler=ir_twin.sample_input,
+                        seed=3).generate(n_ir), app="IR")
+    stt = Trace.from_tasks(
+        PoissonWorkload(rate_per_s=0.5, size_sampler=stt_twin.sample_input,
+                        seed=4).generate(n_stt), app="STT")
+    return merge({"IR": ir, "STT": stt})
+
+
+def test_merge_split_invert(ir_setup, stt_setup):
+    m = _multiapp_trace(ir_setup, stt_setup)
+    assert m.app_names == ("IR", "STT")
+    assert first_disorder(m.arrival_ms) == -1
+    parts = m.split_by_app()
+    assert merge(parts).equal(m)
+    assert parts["IR"].n + parts["STT"].n == m.n
+    with pytest.raises(TraceError, match="single-app"):
+        merge({"both": m})
+
+
+def test_sharded_replay_equals_upfront_filter(ir_setup, stt_setup):
+    """Satellite regression: replaying a multi-app trace through
+    ``ShardedRuntime`` shards ≡ filtering the trace per app up front and
+    serving each filtered trace alone."""
+    ir_twin, ir_models = ir_setup
+    stt_twin, stt_models = stt_setup
+    m = _multiapp_trace(ir_setup, stt_setup)
+
+    shards = trace_shards(
+        m, {"IR": _runtime(ir_twin, ir_models),
+            "STT": _runtime(stt_twin, stt_models)}, chunk_size=64)
+    sharded = serve_sharded(shards, parallel=False)
+
+    for app, twin, models in (("IR", ir_twin, ir_models),
+                              ("STT", stt_twin, stt_models)):
+        solo = _runtime(twin, models).serve_stream(
+            TraceWorkload(m.for_app(app)).chunks(chunk_size=64))
+        assert_records_equal(sharded.results[app].records, solo.records)
+
+    # runtime factories for every trace app are mandatory
+    with pytest.raises(TraceError, match=r"\['STT'\]"):
+        trace_shards(m, {"IR": _runtime(ir_twin, ir_models)})
+
+
+def test_capture_sharded_round_trip(ir_setup, stt_setup):
+    ir_twin, ir_models = ir_setup
+    stt_twin, stt_models = stt_setup
+    m = _multiapp_trace(ir_setup, stt_setup, n_ir=150, n_stt=40)
+    shards = trace_shards(
+        m, {"IR": _runtime(ir_twin, ir_models),
+            "STT": _runtime(stt_twin, stt_models)},
+        chunk_size=64, keep_tasks=True)
+    sharded = serve_sharded(shards, parallel=False)
+
+    t = capture_sharded(sharded)
+    # inputs survive the capture exactly; only latency is new information
+    assert np.array_equal(t.arrival_ms, m.arrival_ms)
+    assert np.array_equal(t.size, m.size)
+    assert np.array_equal(t.bytes, m.bytes)
+    assert np.array_equal(t.app_codes, m.app_codes)
+    assert t.observed_latency_ms is not None
+
+    # merged_records orders rows exactly like the captured trace
+    rb, codes, names = sharded.merged_records()
+    assert names == ("IR", "STT")
+    assert np.array_equal(rb.arrival_ms, t.arrival_ms)
+    assert np.array_equal(codes, t.app_codes)
+    lat_by_arrival = rb.actual_latency_ms
+    assert np.array_equal(lat_by_arrival, t.observed_latency_ms)
+
+
+def test_trace_shards_process_mode(ir_setup):
+    """``as_factories=True`` + runtime factories: full process isolation,
+    results bit-identical to the sequential replay."""
+    twin, models = ir_setup
+    _, trace = _bursty_trace(twin, 200, seed=17)
+    single = merge({"IR": trace})
+
+    seq = serve_sharded(
+        trace_shards(single, {"IR": _make_ir_runtime}, chunk_size=64),
+        parallel=False)
+    proc = serve_sharded(
+        trace_shards(single, {"IR": _make_ir_runtime}, chunk_size=64,
+                     as_factories=True),
+        parallel=True, use_processes=True)
+    assert proc.mode == "process"
+    assert_records_equal(seq.results["IR"].records, proc.results["IR"].records)
+
+
+def _make_ir_runtime():
+    """Top-level runtime factory (picklable) for the process-mode test."""
+    twin, models = fit_app("IR", seed=0, n_inputs=120, configs=CONFIGS)
+    return _runtime(twin, models)
+
+
+# ---------------------------------------------------------------- misc shapes
+def test_prefix_and_duration():
+    t = _toy_trace(n=20)
+    p = t.prefix(7)
+    assert p.n == 7 and np.array_equal(p.arrival_ms, t.arrival_ms[:7])
+    assert t.prefix(10_000).n == 20
+    assert t.prefix(0).n == 0
+    assert t.duration_ms == float(t.arrival_ms[-1] - t.arrival_ms[0])
+
+
+def test_empty_trace_round_trip(tmp_path):
+    t = Trace.from_arrays([], [], [], app_names=("IR",))
+    assert t.n == 0 and t.duration_ms == 0.0
+    for name in ("e.jsonl", "e.npz"):
+        t.save(tmp_path / name)
+        assert load(tmp_path / name).equal(t)
