@@ -57,6 +57,16 @@ seconds for CI; ``--json`` writes the machine-readable ``BENCH_runtime.json``):
    (``repro.planner``, successive halving over fleet sizes × policies) whose
    winner must be the cheapest SLO-meeting config, verified on the full
    trace.
+9. **jax-core** (ISSUE 7) — the device-resident predict→place pipeline
+   (``repro.core.jax_core``) vs the numpy columnar path. Full: a 1M-task
+   steady stream served with ``array_backend="jax"``; on an accelerator the
+   device core must clear ≥ 2x the numpy rate (on CPU the measured ratio is
+   report-only — XLA's sequential-scan overhead dominates there, the
+   decision-equality assertion is the CPU value). Smoke: a small-N parity
+   gate — ``"jax_interpret"`` bit-identical per record to the oracle,
+   compiled ``"jax"`` decision-identical — plus the compile-cache check:
+   after a warmup serve, a second same-shape stream must NOT retrace
+   (``JaxPlacementCore.compile_stats()`` stable).
 
     PYTHONPATH=src:. python benchmarks/bench_runtime.py [--n 10000]
 """
@@ -771,6 +781,93 @@ def run_trace_planner(emit, n: int = 50_000, chunk: int = 16_384,
          f"best={res.best.candidate.name}")
 
 
+# --------------------------------------------- 9. device core (ISSUE 7)
+def run_jax_core(emit, n: int = 1_000_000, chunk: int = 65_536,
+                 min_speedup: float = 2.0, smoke: bool = False):
+    """Device-resident predict→place (ISSUE 7): jax core vs numpy oracle.
+
+    Full: a steady Poisson STT stream (containers stay warm — the container
+    pool and the fixed-point pass count sit at their steady state) served
+    end-to-end with ``array_backend="jax"`` vs ``"numpy"``; decisions must be
+    identical, and on an accelerator the device core must clear
+    ``min_speedup``× the numpy rate (report-only on CPU, where XLA's
+    sequential scans lose to numpy's cumsum segments — the same trace is the
+    fast path on TPU). Smoke: bit-parity of ``"jax_interpret"`` against the
+    oracle per record, decision-equality of compiled ``"jax"``, and the
+    no-retrace gate — a second same-shape stream must reuse every jit cache
+    entry after the warmup serve.
+    """
+    import jax as jax_mod
+
+    from repro.core import jax_core
+
+    backend_name = jax_mod.default_backend()
+    on_accel = backend_name != "cpu"
+    banner(f"bench_runtime/jax-core — device-resident placement at {n:,} "
+           f"tasks (chunk {chunk:,}, backend {backend_name})")
+    twin, models = fit_app("STT", seed=0, n_inputs=120, configs=CONFIGS)
+
+    def _serve(backend, n_tasks, seed=3):
+        rt = _stream_runtime(twin, models, c_max=FLEET_C_MAX)
+        src = twin.poisson(seed=seed)
+        t0 = time.perf_counter()
+        res = rt.serve_stream(src.chunks(n_tasks, chunk), chunk_size=chunk,
+                              array_backend=backend)
+        return res, time.perf_counter() - t0, rt
+
+    if smoke:
+        n = min(n, 3_000)
+        # ---- parity gate: interpret vs oracle, bit-identical per record
+        ref, _, _ = _serve("numpy", n)
+        it, _, rt_it = _serve("jax_interpret", n)
+        cols = ("predicted_latency_ms", "predicted_cost", "actual_latency_ms",
+                "actual_cost", "allowed_cost", "completion_ms",
+                "queue_wait_ms", "predicted_cold", "actual_cold", "feasible")
+        bit_ok = (ref.records.target_codes.tolist()
+                  == it.records.target_codes.tolist()
+                  and all(np.array_equal(getattr(ref.records, c),
+                                         getattr(it.records, c))
+                          for c in cols))
+        assert bit_ok, "jax_interpret diverged from the numpy oracle"
+        assert rt_it.engine.jax_stats["interpret"]
+        print(f"interpret parity  : {n:,} records bit-identical "
+              f"(stats {rt_it.engine.jax_stats})")
+
+    # first serve compiles and grows the container-pool cap to steady state;
+    # the second stream reuses the SAME engine (and so the same jit caches):
+    # same chunk shapes ⇒ it must not retrace, and its time is compile-free
+    comp, jax_s, rt_jx = _serve("jax", n)
+    core = jax_core.core_for(rt_jx.engine)
+    stats_before = core.compile_stats()
+    t0 = time.perf_counter()
+    rt_jx.serve_stream(twin.poisson(seed=5).chunks(n, chunk),
+                       chunk_size=chunk, array_backend="jax")
+    jax2_s = time.perf_counter() - t0
+    assert jax_core.core_for(rt_jx.engine) is core
+    stats_after = core.compile_stats()
+    assert stats_after == stats_before, \
+        f"jax core retraced on a same-shape stream: " \
+        f"{stats_before} -> {stats_after}"
+    jax_s = min(jax_s, jax2_s)
+
+    ref, np_s, _ = _serve("numpy", n)
+    assert (ref.records.target_codes.tolist()
+            == comp.records.target_codes.tolist()), \
+        "compiled jax decisions diverged from the numpy oracle"
+    speedup = np_s / max(jax_s, 1e-12)
+    bar = f"(floor {min_speedup:.1f}x)" if on_accel else "(report-only on CPU)"
+    print(f"numpy {n / np_s:>9,.0f} t/s   jax[{backend_name}] "
+          f"{n / jax_s:>9,.0f} t/s   speedup {speedup:4.2f}x {bar}   "
+          f"no-retrace OK {stats_after}")
+    if on_accel:
+        assert speedup >= min_speedup, \
+            f"device core {speedup:.2f}x below the {min_speedup}x floor " \
+            f"on {backend_name}"
+    emit(f"runtime/jax_core[{n}]", jax_s / n * 1e6,
+         f"n={n};chunk={chunk};backend={backend_name};"
+         f"speedup={speedup:.2f}x;accel={int(on_accel)}")
+
+
 # ------------------------------------------------------------------- driver
 def run(emit, n: int | None = None):
     run_decision(emit, n=n)
@@ -783,6 +880,7 @@ def run(emit, n: int | None = None):
         run_streaming(emit)
         run_sharded(emit)
         run_trace_planner(emit)
+        run_jax_core(emit)
 
 
 def run_smoke(emit):
@@ -810,6 +908,10 @@ def run_smoke(emit):
     # trace; only the replay-rate floor is relaxed (throttled runners), the
     # parity and cheapest-meets-SLO assertions hold at full strength
     run_trace_planner(emit, n=50_000, chunk=16_384, max_rel=1.4, smoke=True)
+    # jax-core smoke: small-N bit-parity (interpret) + decision-equality
+    # (compiled) + the no-retrace compile-cache gate; the >=2x speedup floor
+    # is judged at full size on an accelerator only
+    run_jax_core(emit, n=3_000, chunk=1_024, smoke=True)
 
 
 def main():

@@ -1,0 +1,85 @@
+"""Device-resident placement: the jit-compiled JAX predict→place pipeline.
+
+Serves the same bursty stream three ways — the numpy columnar oracle,
+``array_backend="jax_interpret"`` (the bit-parity audit mode), and compiled
+``array_backend="jax"`` — and verifies the parity contract on the spot:
+interpret mode must match the oracle bit-for-bit on every record column,
+compiled mode must make identical decisions with floats within tolerance.
+
+    PYTHONPATH=src python examples/jax_serve.py
+"""
+
+import time
+
+import numpy as np
+
+from repro.core import jax_core
+from repro.core.decision import DecisionEngine, MinLatencyPolicy
+from repro.core.fit import build_fleet_predictor, fit_app
+from repro.core.runtime import PlacementRuntime, TwinBackend
+from repro.core.workload import BurstyWorkload
+
+N_TASKS = 2_000
+CHUNK = 512
+CONFIGS = (1280, 1536, 1792)
+FLEET = {"edge0": 1.0, "edge1": 1.0, "edge2": 0.6}
+C_MAX = 6e-6            # $/task budget (Alg. 1)
+ALPHA = 0.05
+
+print("fitting IR component models (twin ground truth)...")
+twin, models = fit_app("IR", seed=0, n_inputs=120, configs=CONFIGS)
+tasks = BurstyWorkload(rate_per_s=4.0, size_sampler=twin.sample_input,
+                       burst_multiplier=8.0, mean_quiet_s=10.0,
+                       mean_burst_s=6.0, seed=31).generate(N_TASKS)
+
+
+def runtime():
+    pred = build_fleet_predictor(models, dict(FLEET), configs=CONFIGS)
+    eng = DecisionEngine(predictor=pred,
+                         policy=MinLatencyPolicy(c_max=C_MAX, alpha=ALPHA))
+    backend = TwinBackend(twin, seed=11, edge_names=tuple(FLEET),
+                          edge_speed=FLEET)
+    return PlacementRuntime(eng, backend)
+
+
+def serve(backend):
+    rt = runtime()
+    t0 = time.perf_counter()
+    res = rt.serve_stream(tasks, chunk_size=CHUNK, array_backend=backend)
+    dt = time.perf_counter() - t0
+    return res, dt, rt.engine
+
+
+print(f"serving {N_TASKS} bursty tasks, chunk={CHUNK}, 3-device fleet...")
+ref, t_np, _ = serve("numpy")
+interp, t_it, eng_it = serve("jax_interpret")
+comp, t_jx, eng_jx = serve("jax")
+
+COLS = ("predicted_latency_ms", "predicted_cost", "actual_latency_ms",
+        "actual_cost", "allowed_cost", "completion_ms", "queue_wait_ms",
+        "exec_ms", "predicted_cold", "actual_cold", "feasible")
+
+bit_equal = (list(ref.records.targets) == list(interp.records.targets)
+             and all(np.array_equal(getattr(ref.records, c),
+                                    getattr(interp.records, c))
+                     for c in COLS))
+dec_equal = list(ref.records.targets) == list(comp.records.targets)
+close = all(np.allclose(getattr(ref.records, c).astype(float),
+                        getattr(comp.records, c).astype(float), rtol=1e-9)
+            for c in COLS)
+assert bit_equal, "interpret mode must be bit-identical to the numpy oracle"
+assert dec_equal and close, "compiled mode must be decision-identical"
+
+core = jax_core.core_for(eng_jx)
+print(f"\nnumpy oracle          : {t_np:.2f} s")
+print(f"jax_interpret (audit) : {t_it:.2f} s  bit-identical: {bit_equal}")
+print(f"jax (compiled)        : {t_jx:.2f} s  decision-identical: "
+      f"{dec_equal}  floats close: {close}")
+print(f"fixed-point passes    : {eng_jx.jax_stats['passes']} "
+      f"(last chunk, rows={eng_jx.jax_stats['rows']})")
+print(f"jit cache entries     : {core.compile_stats()}")
+print(f"avg latency           : {ref.avg_actual_latency_ms:.1f} ms   "
+      f"total cost: ${ref.total_actual_cost:.6f}")
+print("\nOn CPU the compiled path loses to numpy (XLA scan overhead); on an "
+      "accelerator\nthe same code is the fast path — see "
+      "benchmarks/bench_runtime.py section 9.")

@@ -57,7 +57,7 @@ from __future__ import annotations
 
 import abc
 from dataclasses import dataclass
-from typing import Iterator, Mapping, Sequence
+from typing import Callable, Iterator, Mapping, Sequence
 
 import numpy as np
 
@@ -314,9 +314,14 @@ class DecisionBatch(Sequence):
     Indexing/iterating materializes lazy ``PlacementDecision`` views (the
     columnar policies never hedge, so views carry no hedge); the vectorized
     runtime consumes the arrays directly and never builds a view.
+
+    ``batch`` may be ``None`` when the decisions came from the device-resident
+    jax core, which never runs the host prediction pass — ``batch_factory``
+    then rebuilds the ``PredictionBatch`` on first view access (only per-task
+    consumers pay it; the vectorized runtime reads arrays only).
     """
 
-    batch: PredictionBatch          # source predictions, for lazy components
+    batch: PredictionBatch | None   # source predictions, for lazy components
     names: tuple[str, ...]
     n_cloud: int
     task_idx: np.ndarray            # (n,) int64
@@ -329,6 +334,7 @@ class DecisionBatch(Sequence):
     feasible: np.ndarray            # bool
     allowed_cost: np.ndarray
     edge_device_codes: np.ndarray | None  # (n,) device idx, None = no fleet
+    batch_factory: "Callable[[], PredictionBatch] | None" = None
 
     def __len__(self) -> int:
         return self.target_codes.shape[0]
@@ -359,6 +365,13 @@ class DecisionBatch(Sequence):
         if isinstance(i, slice):
             return [self[j] for j in range(*i.indices(len(self)))]
         i = int(i)
+        if self.batch is None:
+            if self.batch_factory is None:
+                raise RuntimeError(
+                    "DecisionBatch carries no PredictionBatch (device-resident "
+                    "placement) and no batch_factory to rebuild one; per-task "
+                    "views are unavailable")
+            self.batch = self.batch_factory()
         code = int(self.target_codes[i])
         name = self.names[code]
         if code >= self.n_cloud:
@@ -450,13 +463,23 @@ class DecisionEngine:
     ``{"chunks": speculation segments opened, "repairs": mispredicted
     decisions repaired, "walked": rows decided by the scalar-on-arrays
     fallback, "n": batch size}``.
+
+    ``array_backend`` selects the chunk pipeline implementation:
+    ``"numpy"`` (default, the oracle), ``"jax"`` (jit-compiled
+    device-resident ``repro.core.jax_core`` — decision-identical, float
+    agreement at tolerance), or ``"jax_interpret"`` (op-by-op float64 jax —
+    bit-identical to numpy, the parity-test mode). Anything the jax core
+    cannot replicate (hedged/custom policies, quantile prediction,
+    out-of-order arrivals, ``record_decisions``, custom target/model types)
+    silently takes the numpy path, chunk by chunk.
     """
 
     def __init__(self, predictor: Predictor, policy: Policy,
                  edge_name: str = EDGE_NAME,
                  balancer: EdgeBalancer | None = None,
                  record_decisions: bool = False,
-                 columnar: bool = True):
+                 columnar: bool = True,
+                 array_backend: str = "numpy"):
         self.predictor = predictor
         self.policy = policy
         self.edge_name = edge_name
@@ -464,6 +487,11 @@ class DecisionEngine:
             else LeastPredictedWaitBalancer()
         self.record_decisions = record_decisions
         self.columnar = columnar
+        if array_backend not in ("numpy", "jax", "jax_interpret"):
+            raise ValueError(
+                f"array_backend must be 'numpy', 'jax' or 'jax_interpret', "
+                f"got {array_backend!r}")
+        self.array_backend = array_backend
         self.decisions: list[PlacementDecision] = []
         self.columnar_stats: dict | None = None
         # the speculate-and-repair accept-run EMA, persisted across
@@ -510,7 +538,6 @@ class DecisionEngine:
         device, created fresh when omitted); ``edge_queue`` is the deprecated
         single-device spelling.
         """
-        batch = self.predictor.predict_batch(tasks)
         names = self.edge_names
         if edge_queues is None:
             if edge_queue is not None:
@@ -521,6 +548,21 @@ class DecisionEngine:
                 edge_queues = {names[0]: edge_queue}
             else:
                 edge_queues = {n: PredictedEdgeQueue() for n in names}
+        # device-resident route, BEFORE the (expensive) host prediction pass
+        # it exists to avoid; record_decisions stays on the numpy path (its
+        # views would rebuild the prediction batch anyway)
+        if tasks and self.columnar and self.array_backend != "numpy" \
+                and not self.record_decisions and self._columnar_eligible():
+            from repro.core import jax_core
+
+            core = jax_core.core_for(self)
+            if core is not None:
+                out = core.place_chunk(
+                    self, tasks, edge_queues,
+                    interpret=self.array_backend == "jax_interpret")
+                if out is not None:
+                    return out
+        batch = self.predictor.predict_batch(tasks)
         if tasks and self.columnar and self._columnar_eligible():
             out = self._place_columnar(tasks, batch, edge_queues)
             if out is not None:

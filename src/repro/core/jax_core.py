@@ -1,0 +1,892 @@
+"""Device-resident placement core: the jit-compiled JAX predict→place pass.
+
+The columnar decision core (``repro.core.decision``) is pure numpy: one
+vectorized predict pass, then speculate-and-repair over the three sequential
+recurrences. This module ports that hot per-chunk pipeline to JAX so a whole
+chunk runs device-resident under ``jax.jit`` — selected per engine with
+``DecisionEngine(array_backend="jax")`` or per stream with
+``serve_stream(..., array_backend="jax")``. The numpy path stays the
+correctness oracle.
+
+Structure of one chunk (chunk boundaries are the only host↔device syncs):
+
+1. **Predict** — ridge upload / edge-compute models, normal-model scalars and
+   Lambda pricing as jnp expressions; the GBRT compute model as a device-side
+   gather over the serving step tables (``predictor.const1_serving_table``,
+   padded to one ``(n_configs, B)`` matrix), or through the
+   ``repro.kernels.gbrt_predict`` Pallas kernel on TPU / ``GBRT_KERNEL_MODE
+   == "force"``.
+2. **Place** — a chunk-level fixed-point driver replaces the host
+   speculate-and-repair loop: a ``lax.while_loop`` carries the speculated
+   policy-view codes (``-1`` = "no state effects yet", the frozen-state
+   guess), and each iteration replays ALL THREE sequential recurrences from
+   the chunk-start state under the current guess — the surplus bank and FIFO
+   busy horizons as ``lax.scan`` left folds (or max-plus
+   ``lax.associative_scan`` / ``repro.kernels.linear_scan`` forms in
+   ``assoc`` mode, see ``recurrence.maxplus_combine``), the CIL warm/cold
+   event walk as a ``lax.scan`` over fixed-capacity container pools. By the
+   same induction the numpy repair loop relies on, the exact prefix grows by
+   ≥ 1 row per iteration, so the fixed point (``pass(g) == g``) IS the true
+   sequential trajectory and is reached in ≤ R+1 passes (2–3 in practice).
+3. **Commit** — outputs are sliced to the chunk on host; CIL pools, edge
+   horizons and the surplus bank are written back exactly like the numpy
+   accept step (including the final ``reap`` at the last arrival).
+
+Parity contract (mirrors the Pallas kernel tests):
+
+- ``array_backend="jax_interpret"`` — float64 op-by-op execution
+  (``jax.disable_jit``): BIT-IDENTICAL per record to the numpy path. XLA's
+  compiled CPU pipeline contracts ``a + b*c`` into FMAs and reassociates
+  constant chains, so the compiled path cannot promise last-ULP equality —
+  interpret mode is the oracle, exactly like ``interpret=True`` Pallas.
+- ``array_backend="jax"`` — jit-compiled: decision-equality (identical
+  ``target_codes``) with tolerance-level float agreement.
+
+Fallback rules (all BEFORE any balancer/RNG state is consumed, so a fallback
+chunk is indistinguishable from a numpy chunk): hedged/custom policies,
+non-columnar balancers, quantile prediction, ``record_decisions``, custom
+target/model/pricing types, and out-of-order arrivals all take the existing
+numpy path. Chunks are padded to power-of-two rows (pad rows carry code
+``-1`` and no effects) so streaming tails never retrace the jit cache.
+"""
+
+from __future__ import annotations
+
+import contextlib
+import weakref
+from dataclasses import dataclass
+
+import numpy as np
+
+from repro.core.cil import ContainerInfoList, ContainerRecord
+from repro.core.perf_models import NormalModel, RidgeModel, ScaledModel
+from repro.core.predictor import (
+    EdgeTarget,
+    LambdaTarget,
+    Predictor,
+    const1_serving_table,
+)
+from repro.core.pricing import EdgePricing, LambdaPricing
+from repro.core.workload import task_arrays
+
+# "seq"   — sequential lax.scan left folds (bit-exact association vs numpy);
+# "assoc" — max-plus associative_scan / cumsum forms (reassociated float sums:
+#           decision-equality contract only);
+# "auto"  — seq on CPU (where bit-parity matters), assoc elsewhere.
+SCAN_MODE = "auto"
+# Route the assoc-mode surplus prefix through the repro.kernels.linear_scan
+# Pallas kernel (f32 — decision-equality contract; exercised by tests/bench).
+SURPLUS_LINEAR_SCAN = False
+
+POOL_MIN_CAP = 8        # starting CIL container-pool capacity (doubles on demand)
+PAD_MIN = 8             # minimum padded chunk rows
+MAX_BACKENDS = ("numpy", "jax", "jax_interpret")
+
+
+class CoreIneligible(Exception):
+    """This engine's policy/targets/models are outside the jax core's replica."""
+
+
+_JAX = None  # cached import probe: () = unavailable, (jax, jnp, lax) = ready
+
+
+def _modules():
+    global _JAX
+    if _JAX is None:
+        try:
+            import jax
+            import jax.numpy as jnp
+            from jax import lax
+
+            _JAX = (jax, jnp, lax)
+        except Exception:  # pragma: no cover - jax is baked into the image
+            _JAX = ()
+    return _JAX if _JAX else None
+
+
+def available() -> bool:
+    return _modules() is not None
+
+
+def _next_pow2(n: int) -> int:
+    p = 1
+    while p < n:
+        p <<= 1
+    return p
+
+
+# --------------------------------------------------------------------- spec
+@dataclass
+class _CloudSpec:
+    name: str
+    memory_mb: float
+    up_theta: tuple[float, float]
+    start_warm: float          # max(mean, 0) — precomputed like the batch path
+    start_cold: float
+    store: float
+    quantum: float
+    gb: float
+    rate: float
+    breaks: np.ndarray
+    vals: np.ndarray
+
+
+@dataclass
+class _EdgeSpec:
+    name: str
+    theta: tuple[float, float]
+    scale: float
+    iot: float
+    store: float
+
+
+def _ridge2(model) -> tuple[float, float]:
+    if type(model) is not RidgeModel or model.theta.shape != (2,):
+        raise CoreIneligible("non-affine upload/edge model")
+    return float(model.theta[0]), float(model.theta[1])
+
+
+def _normal_mean(model) -> float:
+    if type(model) is not NormalModel:
+        raise CoreIneligible("non-normal component model")
+    return max(model.predict(), 0.0)
+
+
+def _extract_cloud(tgt) -> _CloudSpec:
+    if type(tgt) is not LambdaTarget:
+        raise CoreIneligible(f"cloud target {tgt!r} is not a LambdaTarget")
+    if type(tgt.pricing) is not LambdaPricing \
+            or tgt.pricing.include_request_charge:
+        raise CoreIneligible("non-Lambda or request-charge pricing")
+    model = tgt.comp_model
+    if not (hasattr(model, "const1_table") and hasattr(model, "thresholds")):
+        raise CoreIneligible("cloud comp model is not a GBRT")
+    breaks, vals = const1_serving_table(model, float(tgt.memory_mb))
+    return _CloudSpec(
+        name=tgt.name, memory_mb=float(tgt.memory_mb),
+        up_theta=_ridge2(tgt.upld_model),
+        start_warm=_normal_mean(tgt.start_warm),
+        start_cold=_normal_mean(tgt.start_cold),
+        store=_normal_mean(tgt.store_model),
+        quantum=float(tgt.pricing.quantum_ms),
+        gb=tgt.memory_mb / 1024.0,
+        rate=float(tgt.pricing.gb_second_rate),
+        breaks=np.asarray(breaks, np.float64),
+        vals=np.asarray(vals, np.float64))
+
+
+def _extract_edge(dev) -> _EdgeSpec:
+    if type(dev) is not EdgeTarget:
+        raise CoreIneligible(f"edge device {dev!r} is not an EdgeTarget")
+    if type(dev.pricing) is not EdgePricing:
+        raise CoreIneligible("edge pricing is not EdgePricing")
+    model = dev.comp_model
+    scale = 1.0
+    if type(model) is ScaledModel:
+        scale = float(model.scale)
+        model = model.base
+    t0, t1 = _ridge2(model)
+    return _EdgeSpec(name=dev.name, theta=(t0, t1), scale=scale,
+                     iot=_normal_mean(dev.iotup_model),
+                     store=_normal_mean(dev.store_model))
+
+
+def _engine_key(engine) -> tuple:
+    """Cheap identity key for the per-engine core cache. Model swaps (online
+    refit) change ids; ``valid_for`` weakref-guards against id recycling."""
+    from repro.core import predictor as predictor_mod
+
+    pred = engine.predictor
+    ids = [id(pred), id(engine.policy), type(engine.policy),
+           type(engine.balancer), pred.quantile,
+           predictor_mod.GBRT_KERNEL_MODE, SCAN_MODE, SURPLUS_LINEAR_SCAN]
+    for tgt in pred.cloud_targets:
+        ids.append((id(tgt), id(tgt.comp_model), id(tgt.upld_model),
+                    id(tgt.start_warm), id(tgt.start_cold),
+                    id(tgt.store_model)))
+    for dev in (pred.edge_fleet or ()):
+        ids.append((id(dev), id(dev.comp_model), id(dev.iotup_model),
+                    id(dev.store_model)))
+    return tuple(ids)
+
+
+# --------------------------------------------------------------------- core
+class JaxPlacementCore:
+    """One engine's compiled predict→place pipeline.
+
+    Built lazily per engine (``core_for``), revalidated per chunk against the
+    captured model identities — a refit-by-swap misses the cache and triggers
+    a rebuild, exactly like the serving step-table cache.
+    """
+
+    def __init__(self, engine):
+        mods = _modules()
+        if mods is None:
+            raise CoreIneligible("jax unavailable")
+        self.jax, self.jnp, self.lax = mods
+        if not engine._columnar_eligible():
+            raise CoreIneligible("engine is not columnar-eligible")
+        pred: Predictor = engine.predictor
+        if pred.quantile is not None:
+            raise CoreIneligible("quantile prediction is host-side only")
+        self.cloud = [_extract_cloud(t) for t in pred.cloud_targets]
+        self._kernel_models = [t.comp_model for t in pred.cloud_targets]
+        self.edges = [_extract_edge(d) for d in (pred.edge_fleet or ())]
+        self.n_cloud = len(self.cloud)
+        self.n_dev = len(self.edges)
+        self.has_edge = self.n_dev > 0
+        self.T = self.n_cloud + (1 if self.has_edge else 0)
+        self.edge_col = self.T - 1 if self.has_edge else -1
+        self.t_idl = float(pred.cil.t_idl_ms)
+
+        from repro.core import predictor as predictor_mod
+        from repro.core.decision import (
+            LeastPredictedWaitBalancer,
+            MinLatencyPolicy,
+        )
+
+        self.is_minlat = type(engine.policy) is MinLatencyPolicy
+        self.lpw = (self.n_dev > 1
+                    and type(engine.balancer) is LeastPredictedWaitBalancer)
+        mode = predictor_mod.GBRT_KERNEL_MODE
+        tpu = self.jax.default_backend() == "tpu"
+        self.use_gbrt_kernel = mode == "force" or (tpu and mode == "auto")
+        self.dtype = self.jnp.float32 if tpu else self.jnp.float64
+        self._x64 = not tpu
+        self.seq = SCAN_MODE == "seq" or (SCAN_MODE == "auto"
+                                          and self.jax.default_backend() == "cpu")
+        self.key = _engine_key(engine)
+        self._refs = [weakref.ref(o) for o in (
+            [pred, engine.policy]
+            + [t for t in pred.cloud_targets]
+            + [t.comp_model for t in pred.cloud_targets]
+            + [d for d in (pred.edge_fleet or ())])]
+        self._cap_hint = POOL_MIN_CAP
+        with self._scope():
+            self._tables = self._device_tables()
+            self._state_fn = self._build_state()
+            self._choose_fn = self._build_choose()
+            self._finalize_fn = self._build_finalize()
+            self._predict = self.jax.jit(self._build_predict())
+            self._place = self.jax.jit(self._build_place())
+            # interpret-mode hosts the fixed point itself on these pieces
+            self._state = self.jax.jit(self._state_fn)
+            self._choose = self.jax.jit(self._choose_fn)
+            self._finalize = self.jax.jit(self._finalize_fn)
+        self.last_stats: dict | None = None
+
+    # ------------------------------------------------------------ lifecycle
+    def _scope(self):
+        if not self._x64:
+            return contextlib.nullcontext()
+        from jax.experimental import enable_x64
+
+        return enable_x64()
+
+    def valid_for(self, engine) -> bool:
+        return (self.key == _engine_key(engine)
+                and all(r() is not None for r in self._refs))
+
+    def compile_stats(self) -> dict:
+        """jit-cache sizes — the bench's no-retrace probe."""
+        return {"predict": self._predict._cache_size(),
+                "place": self._place._cache_size(),
+                "state": self._state._cache_size(),
+                "choose": self._choose._cache_size()}
+
+    # ------------------------------------------------------- device operands
+    def _device_tables(self) -> dict:
+        jnp = self.jnp
+        t: dict = {}
+        if self.n_cloud:
+            bmax = max(1, max(c.breaks.shape[0] for c in self.cloud))
+            BR = np.full((self.n_cloud, bmax), np.inf)
+            VL = np.zeros((self.n_cloud, bmax + 1))
+            for i, c in enumerate(self.cloud):
+                nb = c.breaks.shape[0]
+                BR[i, :nb] = c.breaks
+                VL[i, :nb + 1] = c.vals
+                VL[i, nb + 1:] = c.vals[-1]
+            t["BR"] = jnp.asarray(BR)
+            t["VL"] = jnp.asarray(VL)
+            t["UP0"] = jnp.asarray(np.array([c.up_theta[0] for c in self.cloud]))
+            t["UP1"] = jnp.asarray(np.array([c.up_theta[1] for c in self.cloud]))
+            t["SW"] = jnp.asarray(np.array([c.start_warm for c in self.cloud]))
+            t["SC"] = jnp.asarray(np.array([c.start_cold for c in self.cloud]))
+            t["ST"] = jnp.asarray(np.array([c.store for c in self.cloud]))
+            t["QNT"] = jnp.asarray(np.array([c.quantum for c in self.cloud]))
+            t["GB"] = jnp.asarray(np.array([c.gb for c in self.cloud]))
+            t["RATE"] = jnp.asarray(np.array([c.rate for c in self.cloud]))
+        if self.has_edge:
+            t["ET0"] = jnp.asarray(np.array([e.theta[0] for e in self.edges]))
+            t["ET1"] = jnp.asarray(np.array([e.theta[1] for e in self.edges]))
+            t["ESC"] = jnp.asarray(np.array([e.scale for e in self.edges]))
+            t["EIO"] = jnp.asarray(np.array([e.iot for e in self.edges]))
+            t["EST"] = jnp.asarray(np.array([e.store for e in self.edges]))
+        return t
+
+    def _gbrt_kernel_operands(self):
+        """Per-config Pallas-kernel operands (host-prepared, f32 like the
+        ``gbrt_predict`` wrapper)."""
+        from repro.kernels.gbrt_predict.ops import kernel_operands
+
+        ops = []
+        for c, tgt in zip(self.cloud, self._kernel_models):
+            feats, thr, lvs = kernel_operands(tgt)
+            ops.append((feats, thr, lvs, int(tgt.config.max_depth),
+                        float(tgt.config.learning_rate), float(tgt.base),
+                        c.memory_mb))
+        return ops
+
+    # ----------------------------------------------------------- predict jit
+    def _build_predict(self):
+        jax, jnp = self.jax, self.jnp
+        t = self._tables
+        nc, nd = self.n_cloud, self.n_dev
+        use_kernel = self.use_gbrt_kernel
+        kernel_ops = None
+        if use_kernel and nc:
+            from repro.kernels.gbrt_predict.kernel import gbrt_predict_blocked
+
+            interpret = jax.default_backend() != "tpu"
+            kernel_ops = self._gbrt_kernel_operands()
+
+        def predict(sizes, nbytes):
+            out = {}
+            if nc:
+                if use_kernel:
+                    cols = []
+                    for feats, thr, lvs, depth, lr, base, mem in kernel_ops:
+                        x32 = jnp.stack(
+                            [sizes, jnp.full(sizes.shape[0], mem)],
+                            axis=1).astype(jnp.float32)
+                        bn = min(256, x32.shape[0])
+                        cols.append(gbrt_predict_blocked(
+                            x32, feats, thr, lvs, depth=depth, lr=lr,
+                            base=base, block_n=bn,
+                            interpret=interpret).astype(sizes.dtype))
+                    comp = jnp.stack(cols, axis=1)
+                else:
+                    comp = jax.vmap(
+                        lambda b, v: v[jnp.searchsorted(b, sizes, side="left")]
+                    )(t["BR"], t["VL"]).T
+                compc = jnp.maximum(comp, 0.0)
+                upld = jnp.maximum(
+                    t["UP0"][None, :] + nbytes[:, None] * t["UP1"][None, :],
+                    0.0)
+                # associate exactly like sum(warm.values()) / occupancy_ms:
+                # ((upld + start) + comp) (+ store)
+                occ_w = (upld + t["SW"][None, :]) + compc
+                occ_c = (upld + t["SC"][None, :]) + compc
+                out["LATW"] = occ_w + t["ST"][None, :]
+                out["LATC"] = occ_c + t["ST"][None, :]
+                out["OCCW"] = occ_w
+                out["OCCC"] = occ_c
+                out["COMPC"] = compc
+                billed = jnp.ceil(
+                    jnp.maximum(jnp.round(compc), 1.0) / t["QNT"][None, :]
+                ) * t["QNT"][None, :]
+                out["COSTC"] = ((billed / 1000.0) * t["GB"][None, :]) \
+                    * t["RATE"][None, :]
+            if nd:
+                ec = jnp.maximum(
+                    (t["ET0"][None, :] + sizes[:, None] * t["ET1"][None, :])
+                    * t["ESC"][None, :], 0.0)
+                out["ECOMP"] = ec
+                out["ELAT"] = (ec + t["EIO"][None, :]) + t["EST"][None, :]
+            return out
+
+        return predict
+
+    # ----------------------------------------------------------- place parts
+    # The per-chunk pass is split in three so interpret mode can keep the one
+    # FMA-prone operation out of XLA: ``state`` (the three recurrences, the
+    # CIL event walk and the policy-view matrices — additions, compares and
+    # gathers only, which compiled XLA executes bit-exactly in sequential
+    # order) → ``allowed = c_max + α·s_before`` (the ONLY multiply on the
+    # place side; XLA CPU contracts mul+add chains into FMAs regardless of
+    # optimization barriers, so interpret mode computes it op-by-op under
+    # ``jax.disable_jit``) → ``choose`` (masked lexicographic argmins: exact
+    # compares and min-reductions). Compiled mode composes all three inside
+    # one jitted ``lax.while_loop`` fixed-point driver under the
+    # decision-equality contract; interpret mode hosts the same fixed point
+    # in Python over the jitted pieces and stays bit-exact.
+    def _build_state(self):
+        jax, jnp, lax = self.jax, self.jnp, self.lax
+        nc, nd, T = self.n_cloud, self.n_dev, self.T
+        edge_col, has_edge = self.edge_col, self.has_edge
+        is_minlat, lpw, seq = self.is_minlat, self.lpw, self.seq
+        t_idl = self.t_idl
+        surplus_kernel = SURPLUS_LINEAR_SCAN and not seq
+        from repro.core.recurrence import maxplus_combine
+
+        def state_fn(guess, P):
+            """One full state replay of the chunk under speculated codes
+            ``guess`` (policy-view; -1 = no state effects yet — the
+            frozen-state guess)."""
+            nows, valid = P["nows"], P["valid"]
+            R = nows.shape[0]
+            rr = jnp.arange(R)
+            is_edge_g = (guess == edge_col) if has_edge \
+                else jnp.zeros(R, dtype=bool)
+            is_cloud_g = (guess >= 0) & ~is_edge_g
+
+            # --- edge busy horizons / nominations / induced waits ----------
+            nom = ew = HB = h_fin = None
+            if has_edge:
+                ECOMP = P["ECOMP"]
+                if lpw:
+                    # winner feeds back into the next argmin: sequential only
+                    def estep(h, xs):
+                        now, ec, ie = xs
+                        w = jnp.maximum(h - now, 0.0)
+                        d = jnp.argmin(w)           # first-min == fleet order
+                        upd = jnp.maximum(h[d], now) + ec[d]
+                        h2 = h.at[d].set(jnp.where(ie, upd, h[d]))
+                        return h2, (h, d)
+
+                    h_fin, (HB, nom) = lax.scan(
+                        estep, P["h0"], (nows, ECOMP, is_edge_g))
+                else:
+                    nom = P["nom_fixed"]
+                    pushm = is_edge_g[:, None] \
+                        & (nom[:, None] == jnp.arange(nd)[None, :])
+                    if seq:
+                        def estep(h, xs):
+                            now, ec, pm = xs
+                            return jnp.where(
+                                pm, jnp.maximum(h, now) + ec, h), h
+
+                        h_fin, HB = lax.scan(
+                            estep, P["h0"], (nows, ECOMP, pushm))
+                    else:
+                        # exclusive max-plus scan: h_i = max(h0 + A_i, B_i)
+                        a = jnp.where(pushm, ECOMP, 0.0)
+                        b = jnp.where(pushm, nows[:, None] + ECOMP, -jnp.inf)
+                        A, B = lax.associative_scan(
+                            lambda x, y: maxplus_combine(x, y, jnp.maximum),
+                            (a, b), axis=0)
+                        z = jnp.zeros((1, nd), a.dtype)
+                        ninf = jnp.full((1, nd), -jnp.inf, b.dtype)
+                        Ax = jnp.concatenate([z, A[:-1]], axis=0)
+                        Bx = jnp.concatenate([ninf, B[:-1]], axis=0)
+                        HB = jnp.maximum(P["h0"][None, :] + Ax, Bx)
+                        h_fin = jnp.maximum(P["h0"] + A[-1], B[-1])
+                waits = jnp.maximum(HB - nows[:, None], 0.0)
+                if nom is None:
+                    nom = P["nom_fixed"]
+                ew = waits[rr, nom]
+
+            # --- CIL pools: one scan, per-config cold flags + dispatches ---
+            overflow = jnp.asarray(False)
+            if nc:
+                cap = P["busy0"].shape[1]
+                cidx = jnp.clip(guess, 0, nc - 1)
+
+                def cstep(carry, xs):
+                    busy, last, cnt = carry
+                    now, ci, isc, occw, occc = xs
+                    idle = (busy <= now) & (now <= last + t_idl)
+                    cold_row = ~idle.any(axis=1)        # per-config, pre-row
+                    idle_c = idle[ci]
+                    # MRU reuse: first-max == the walk's strict > update
+                    j_warm = jnp.argmax(
+                        jnp.where(idle_c, last[ci], -jnp.inf))
+                    is_cold = ~idle_c.any()
+                    j = jnp.where(is_cold, cnt[ci], j_warm)
+                    ovf = isc & is_cold & (j >= cap)
+                    jc = jnp.minimum(j, cap - 1)
+                    occ = jnp.where(is_cold, occc[ci], occw[ci])
+                    completion = now + occ
+                    do = isc & ~ovf
+                    busy = busy.at[ci, jc].set(
+                        jnp.where(do, completion, busy[ci, jc]))
+                    last = last.at[ci, jc].set(
+                        jnp.where(do, completion, last[ci, jc]))
+                    cnt = cnt.at[ci].add(
+                        jnp.where(do & is_cold, 1, 0))
+                    return (busy, last, cnt), (cold_row, ovf)
+
+                (busyF, lastF, cntF), (COLD, OVF) = lax.scan(
+                    cstep, (P["busy0"], P["last0"], P["cnt0"]),
+                    (nows, cidx, is_cloud_g, P["OCCW"], P["OCCC"]))
+                overflow = OVF.any()
+            else:
+                busyF = lastF = cntF = None
+                COLD = jnp.zeros((R, 0), dtype=bool)
+
+            # --- (R, T) policy-view matrices -------------------------------
+            cols_lat, cols_cost, cols_comp = [], [], []
+            if nc:
+                cols_lat.append(jnp.where(COLD, P["LATC"], P["LATW"]))
+                cols_cost.append(P["COSTC"])
+                cols_comp.append(P["COMPC"])
+            if has_edge:
+                cols_lat.append((ew + P["ELAT"][rr, nom])[:, None])
+                cols_cost.append(P["ECOST"][rr, nom][:, None])
+                cols_comp.append(P["ECOMP"][rr, nom][:, None])
+            LAT = jnp.concatenate(cols_lat, axis=1)
+            COST = jnp.concatenate(cols_cost, axis=1)
+            COMP = jnp.concatenate(cols_comp, axis=1)
+
+            # --- surplus bank (the third recurrence; MinLatency only) ------
+            s_before = s_fin = None
+            if is_minlat:
+                safe_g = jnp.clip(guess, 0, T - 1)
+                delta = jnp.where(guess >= 0,
+                                  P["c_max"] - COST[rr, safe_g], 0.0)
+                if seq:
+                    def sstep(s, d):
+                        return s + d, s
+
+                    s_fin, s_before = lax.scan(sstep, P["s0"], delta)
+                elif surplus_kernel:
+                    from repro.kernels.linear_scan.ops import prefix_sum
+
+                    incl = prefix_sum(delta).astype(delta.dtype)
+                    s_before = P["s0"] + jnp.concatenate(
+                        [jnp.zeros(1, delta.dtype), incl[:-1]])
+                    s_fin = P["s0"] + incl[-1]
+                else:
+                    incl = jnp.cumsum(delta)
+                    s_before = P["s0"] + jnp.concatenate(
+                        [jnp.zeros(1, delta.dtype), incl[:-1]])
+                    s_fin = P["s0"] + incl[-1]
+            return {"nom": nom, "ew": ew, "LAT": LAT, "COST": COST,
+                    "COMP": COMP, "COLD": COLD, "s_before": s_before,
+                    "s_fin": s_fin, "h_fin": h_fin, "busyF": busyF,
+                    "lastF": lastF, "cntF": cntF, "overflow": overflow}
+
+        return state_fn
+
+    def _build_choose(self):
+        jnp = self.jnp
+        T, edge_col, has_edge = self.T, self.edge_col, self.has_edge
+        is_minlat = self.is_minlat
+
+        def choose_fn(LAT, COST, allowed, deadline, valid):
+            R = LAT.shape[0]
+            if is_minlat:
+                feas = COST <= allowed[:, None]
+                none_f = ~feas.any(axis=1)
+                if has_edge:
+                    onehot = (jnp.arange(T) == edge_col)[None, :]
+                    feas = jnp.where(none_f[:, None], onehot, feas)
+                else:
+                    feas = feas | none_f[:, None]
+                l1 = jnp.where(feas, LAT, jnp.inf)
+                lmin = l1.min(axis=1)
+                tie = feas & (LAT == lmin[:, None])
+                c2 = jnp.where(tie, COST, jnp.inf)
+                cmin = c2.min(axis=1)
+                final = tie & (COST == cmin[:, None])
+                code = final.argmax(axis=1).astype(jnp.int32)
+                feas_out = jnp.ones(R, dtype=bool)
+            else:  # MinCostPolicy (edge column guaranteed by eligibility)
+                feas = LAT <= deadline
+                any_f = feas.any(axis=1)
+                c1 = jnp.where(feas, COST, jnp.inf)
+                cmin = c1.min(axis=1)
+                tie = feas & (COST == cmin[:, None])
+                l2 = jnp.where(tie, LAT, jnp.inf)
+                lmin = l2.min(axis=1)
+                final = tie & (LAT == lmin[:, None])
+                code = final.argmax(axis=1).astype(jnp.int32)
+                code = jnp.where(any_f, code, edge_col)
+                feas_out = any_f
+            return jnp.where(valid, code, -1), feas_out
+
+        return choose_fn
+
+    def _build_finalize(self):
+        jnp = self.jnp
+        nc, T = self.n_cloud, self.T
+        edge_col, has_edge = self.edge_col, self.has_edge
+        is_minlat = self.is_minlat
+
+        def finalize(st, code, feas, allowed, P):
+            """Chosen-row gathers + committed-state bundle for one chunk."""
+            R = code.shape[0]
+            rr = jnp.arange(R)
+            safe = jnp.clip(code, 0, T - 1)
+            res = {"code": code, "overflow": st["overflow"],
+                   "lat": st["LAT"][rr, safe], "cost": st["COST"][rr, safe],
+                   "comp": st["COMP"][rr, safe], "allowed": allowed,
+                   "feas": feas}
+            if is_minlat:
+                res["s_fin"] = st["s_fin"]
+            cold = (st["COLD"][rr, jnp.clip(code, 0, nc - 1)] if nc
+                    else jnp.zeros(R, dtype=bool))
+            if has_edge:
+                is_edge_ch = code == edge_col
+                res["cold"] = jnp.where(is_edge_ch, False, cold)
+                res["wait"] = jnp.where(is_edge_ch, st["ew"], 0.0)
+                res["nom"] = st["nom"]
+                res["gcode"] = jnp.where(is_edge_ch, nc + st["nom"], code)
+                res["h_fin"] = st["h_fin"]
+            else:
+                res["cold"] = cold
+                res["wait"] = jnp.zeros(R)
+                res["gcode"] = code
+            if nc:
+                res["busyF"], res["lastF"], res["cntF"] = \
+                    st["busyF"], st["lastF"], st["cntF"]
+            return res
+
+        return finalize
+
+    def _build_place(self):
+        jnp, lax = self.jnp, self.lax
+        is_minlat = self.is_minlat
+        state_fn = self._state_fn
+        choose_fn = self._choose_fn
+        finalize = self._finalize_fn
+
+        def step(guess, P):
+            st = state_fn(guess, P)
+            if is_minlat:
+                allowed = P["c_max"] + P["alpha"] * st["s_before"]
+            else:
+                allowed = jnp.full(guess.shape[0], jnp.inf)
+            code, feas = choose_fn(st["LAT"], st["COST"], allowed,
+                                   P["deadline"], P["valid"])
+            return st, code, feas, allowed
+
+        def place(P):
+            R = P["nows"].shape[0]
+            g0 = jnp.full(R, -1, dtype=jnp.int32)
+            g1 = step(g0, P)[1]
+
+            def cond(c):
+                gp, g, i = c
+                return jnp.any(gp != g) & (i < R + 2)
+
+            def body(c):
+                _, g, i = c
+                return g, step(g, P)[1], i + 1
+
+            _, gF, iters = lax.while_loop(cond, body, (g0, g1, jnp.int32(1)))
+            st, code, feas, allowed = step(gF, P)  # fixed point: code == gF
+            res = finalize(st, code, feas, allowed, P)
+            res["iters"] = iters
+            res["converged"] = ~jnp.any(code != gF)
+            return res
+
+        return place
+
+    def _run_interpret(self, P, R: int) -> dict:
+        """Host-driven fixed point over the jitted FMA-free pieces: bit-exact
+        (the α·s_before multiply runs op-by-op) at compiled-scan speed."""
+        jax, jnp = self.jax, self.jnp
+        g = jnp.asarray(np.full(R, -1, np.int32))
+        g_np = np.asarray(g)
+        st = code = feas = allowed = None
+        iters = 0
+        converged = False
+        for _ in range(R + 2):
+            st = self._state(g, P)
+            if self.is_minlat:
+                with jax.disable_jit():
+                    allowed = P["c_max"] + P["alpha"] * st["s_before"]
+            else:
+                allowed = jnp.full(R, jnp.inf)
+            code, feas = self._choose(st["LAT"], st["COST"], allowed,
+                                      P["deadline"], P["valid"])
+            iters += 1
+            c_np = np.asarray(code)
+            if np.array_equal(c_np, g_np):
+                converged = True
+                break
+            g, g_np = code, c_np
+        res = dict(self._finalize(st, code, feas, allowed, P))
+        # the converging (verification) pass isn't an iteration, matching the
+        # compiled driver's count
+        res["iters"] = max(iters - 1, 1)
+        res["converged"] = converged
+        return res
+
+    # ----------------------------------------------------------- chunk entry
+    def place_chunk(self, engine, tasks, edge_queues, interpret: bool):
+        """Run one chunk device-resident; returns a ``DecisionBatch`` with
+        committed host state, or ``None`` to fall back (no state consumed)."""
+        from repro.core.decision import (
+            DecisionBatch,
+            RandomBalancer,
+            RoundRobinBalancer,
+        )
+
+        jnp = self.jnp
+        n = len(tasks)
+        task_idx, nows_np, sizes_np, nbytes_np = task_arrays(tasks)
+        if not self.has_edge and self.is_minlat and not self.cloud:
+            return None  # nothing to choose from — let the walk raise
+        if n > 1 and not bool(np.all(np.diff(nows_np) >= 0.0)):
+            return None  # out-of-order arrivals: host walk replays reaps
+
+        # Everything below may consume balancer state — no fallback past here.
+        nom_fixed = None
+        if self.has_edge and not self.lpw:
+            if self.n_dev == 1:
+                nom_fixed = np.zeros(n, dtype=np.int64)
+            else:
+                bal = engine.balancer
+                if type(bal) is RoundRobinBalancer:
+                    nom_fixed = (bal._i + np.arange(n, dtype=np.int64)) \
+                        % self.n_dev
+                    bal._i += n
+                elif type(bal) is RandomBalancer:
+                    nom_fixed = bal.rng.integers(
+                        self.n_dev, size=n).astype(np.int64)
+
+        R = max(PAD_MIN, _next_pow2(n))
+        pad = R - n
+        cil: ContainerInfoList = engine.predictor.cil
+        cloud_names = [c.name for c in self.cloud]
+        dev_names = [e.name for e in self.edges]
+        pools = [cil.containers.get(nm, []) for nm in cloud_names]
+        max_existing = max((len(p) for p in pools), default=0)
+        cap = _next_pow2(max(self._cap_hint, POOL_MIN_CAP))
+
+        with self._scope():
+            sizes = jnp.asarray(np.pad(sizes_np, (0, pad), mode="edge"))
+            nbytes = jnp.asarray(np.pad(nbytes_np, (0, pad), mode="edge"))
+            if interpret:
+                # op-by-op: the predict pass is where the FMA-prone
+                # multiplies live (ridge, pricing); eager execution keeps
+                # every op individually rounded, bit-identical to numpy
+                with self.jax.disable_jit():
+                    P = dict(self._predict(sizes, nbytes))
+            else:
+                P = dict(self._predict(sizes, nbytes))
+            P["nows"] = jnp.asarray(np.pad(nows_np, (0, pad), mode="edge"))
+            P["valid"] = jnp.asarray(np.arange(R) < n)
+            if self.has_edge:
+                P["h0"] = jnp.asarray(np.array(
+                    [edge_queues[nm].horizon_ms for nm in dev_names]))
+                P["ECOST"] = jnp.zeros((R, self.n_dev))
+                if nom_fixed is not None:
+                    P["nom_fixed"] = jnp.asarray(np.pad(
+                        nom_fixed, (0, pad)).astype(np.int32))
+                else:
+                    P["nom_fixed"] = jnp.zeros(R, dtype=jnp.int32)
+            policy = engine.policy
+            if self.is_minlat:
+                P["s0"] = float(policy.surplus)
+                P["c_max"] = float(policy.c_max)
+                P["alpha"] = float(policy.alpha)
+                P["deadline"] = 0.0
+            else:
+                P["s0"] = 0.0
+                P["c_max"] = 0.0
+                P["alpha"] = 0.0
+                P["deadline"] = float(policy.deadline_ms)
+            res = None
+            while True:
+                if cap < max_existing + 1:
+                    cap = _next_pow2(max_existing + 1)
+                if self.n_cloud:
+                    busy0 = np.full((self.n_cloud, cap), np.inf)
+                    last0 = np.full((self.n_cloud, cap), -np.inf)
+                    cnt0 = np.zeros(self.n_cloud, dtype=np.int32)
+                    for ci, recs in enumerate(pools):
+                        for j, rec in enumerate(recs):
+                            busy0[ci, j] = rec.busy_until
+                            last0[ci, j] = rec.last_completion
+                        cnt0[ci] = len(recs)
+                    P["busy0"] = jnp.asarray(busy0)
+                    P["last0"] = jnp.asarray(last0)
+                    P["cnt0"] = jnp.asarray(cnt0)
+                else:
+                    P["busy0"] = jnp.zeros((0, cap))
+                    P["last0"] = jnp.zeros((0, cap))
+                    P["cnt0"] = jnp.zeros(0, dtype=jnp.int32)
+                res = self._run_interpret(P, R) if interpret \
+                    else self._place(P)
+                if not bool(res["overflow"]) and bool(res["converged"]):
+                    break
+                # pool too small for this chunk's cold starts (clamped
+                # writes may also stall convergence): results are discarded
+                # (no state was committed) and the chunk re-runs against a
+                # doubled pool, capped at existing+R where overflow is
+                # impossible and convergence is guaranteed
+                new_cap = min(cap * 2, _next_pow2(max_existing + R))
+                if new_cap <= cap:
+                    raise RuntimeError(
+                        "jax placement did not converge with an "
+                        "overflow-proof container pool")
+                cap = new_cap
+            self._cap_hint = cap
+
+            out = {k: np.asarray(res[k])[:n] for k in
+                   ("gcode", "lat", "cost", "cold", "comp", "wait",
+                    "feas", "allowed")}
+            iters = int(res["iters"])
+            # ---- commit host state (the numpy accept step, once) ----------
+            if self.is_minlat:
+                policy.surplus = float(res["s_fin"])
+            if self.has_edge:
+                h_fin = np.asarray(res["h_fin"])
+                for d, nm in enumerate(dev_names):
+                    edge_queues[nm].horizon_ms = float(h_fin[d])
+            if self.n_cloud:
+                t_last = float(nows_np[-1])
+                busyF = np.asarray(res["busyF"])
+                lastF = np.asarray(res["lastF"])
+                cntF = np.asarray(res["cntF"])
+                for ci, nm in enumerate(cloud_names):
+                    k = int(cntF[ci])
+                    b, l = busyF[ci, :k], lastF[ci, :k]
+                    # reap at the last arrival == the walk's end state
+                    keep = (t_last < b) | (t_last <= l + self.t_idl)
+                    recs = [ContainerRecord(nm, float(bb), float(ll))
+                            for bb, ll, kp in zip(b, l, keep) if kp]
+                    if recs:
+                        cil.containers[nm] = recs
+                    else:
+                        cil.containers.pop(nm, None)
+
+        nom_out = None
+        if self.has_edge:
+            nom_out = np.asarray(res["nom"])[:n].astype(np.int64)
+        engine.columnar_stats = {"chunks": 1, "repairs": max(iters - 1, 0),
+                                 "walked": 0, "n": n}
+        self.last_stats = {"n": n, "passes": iters + 1, "rows": R,
+                           "pool_cap": cap, "interpret": interpret}
+        engine.jax_stats = dict(self.last_stats)
+        return DecisionBatch(
+            batch=None,
+            names=tuple(cloud_names) + tuple(dev_names),
+            n_cloud=self.n_cloud,
+            task_idx=task_idx,
+            target_codes=out["gcode"].astype(np.int64),
+            latency_ms=out["lat"].astype(np.float64),
+            cost=out["cost"].astype(np.float64),
+            cold=out["cold"].astype(bool),
+            comp_ms=out["comp"].astype(np.float64),
+            queue_wait_ms=out["wait"].astype(np.float64),
+            feasible=out["feas"].astype(bool),
+            allowed_cost=out["allowed"].astype(np.float64),
+            edge_device_codes=nom_out,
+            batch_factory=lambda pred=engine.predictor, ts=tasks:
+                pred.predict_batch(ts),
+        )
+
+
+# ------------------------------------------------------------------ caching
+def core_for(engine) -> JaxPlacementCore | None:
+    """The engine's cached core, rebuilt when model identities / policy /
+    kernel mode change; ``None`` when jax or the engine shape is ineligible."""
+    if not available():
+        return None
+    key = _engine_key(engine)
+    hit = engine.__dict__.get("_jax_core_cache")
+    if hit is not None and hit[0] == key:
+        core = hit[1]
+        if core is None or core.valid_for(engine):
+            return core
+    try:
+        core = JaxPlacementCore(engine)
+    except CoreIneligible:
+        core = None
+    engine.__dict__["_jax_core_cache"] = (key, core)
+    return core

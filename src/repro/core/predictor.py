@@ -120,6 +120,16 @@ def _const1_table(model, c: float) -> tuple[np.ndarray, np.ndarray]:
     return breaks, vals
 
 
+def const1_serving_table(model, c: float) -> tuple[np.ndarray, np.ndarray]:
+    """Public handle on the cached serving step table ``(breaks, vals)`` for
+    one ``(model, comp_feature)`` pair — the same weakref-guarded entries the
+    numpy hot path reads, so a consumer that re-hosts the table (e.g. the
+    device-resident jax core's gather operands) sees bit-identical values and
+    inherits refit-by-swap invalidation for free (fresh model ⇒ fresh id ⇒
+    cache miss)."""
+    return _const1_table(model, float(c))
+
+
 def _const1_eval(model, x0: np.ndarray, c: float) -> np.ndarray:
     """One cached-table lookup — the single implementation both batched
     entry points share (bit-identical to ``GBRT.predict_const1``)."""

@@ -93,3 +93,22 @@ def surplus_trajectory(s0: float, c_max: float,
     loop's exact association).
     """
     return np.cumsum(np.concatenate(([s0], c_max - chosen_cost)))
+
+
+def maxplus_combine(x, y, maximum=np.maximum):
+    """Associative combine for the FIFO/edge-horizon recurrence in (max, +).
+
+    ``h_i = max(h_{i-1}, now_i) + comp_i`` (a push) and ``h_i = h_{i-1}`` (no
+    push) are both affine maps in the max-plus semiring, ``f(h) = max(h + a,
+    b)`` with ``(a, b) = (comp, now + comp)`` resp. ``(0, -inf)``. Composition
+    stays in that family — ``(f2 ∘ f1)(h) = max(h + (a1 + a2), max(b1 + a2,
+    b2))`` — which is exactly this combine, so the whole horizon trajectory is
+    one ``associative_scan`` over ``(a, b)`` pairs with no segment fallback.
+    Reassociating float sums is NOT bit-stable, so the device core only uses
+    this form under its decision-equality contract (``SCAN_MODE="assoc"``);
+    the sequential folds stay the bit-parity path. Pass ``jnp.maximum`` to use
+    it inside a jit trace.
+    """
+    a1, b1 = x
+    a2, b2 = y
+    return a1 + a2, maximum(b1 + a2, b2)

@@ -759,7 +759,8 @@ class PlacementRuntime:
     def serve_stream(self, workload, chunk_size: int = 65536,
                      keep_tasks: bool | None = None,
                      expected_tasks: int | None = None,
-                     keep_inputs: bool = False) -> SimulationResult:
+                     keep_inputs: bool = False,
+                     array_backend: str | None = None) -> SimulationResult:
         """Streaming chunked serve: the columnar pipeline over arrival chunks,
         carrying every piece of sequential state across chunk boundaries.
 
@@ -797,12 +798,25 @@ class PlacementRuntime:
         "repairs", "walked"}`` aggregated over the stream. ``expected_tasks``
         is an optional arena-capacity hint (a known stream length skips the
         geometric-doubling overshoot — exact-size result columns).
+
+        ``array_backend`` overrides the engine's chunk-pipeline backend for
+        this stream only (``"numpy"`` / ``"jax"`` / ``"jax_interpret"`` — see
+        ``DecisionEngine``): ``serve_stream(..., array_backend="jax")`` runs
+        every eligible chunk device-resident through ``repro.core.jax_core``
+        and falls back per chunk exactly like the engine-level setting.
         """
         if chunk_size < 1:
             raise ValueError(f"chunk_size must be >= 1, got {chunk_size}")
         if keep_tasks is None:
             keep_tasks = isinstance(workload, (list, tuple))
         eng = self.engine
+        was_backend = eng.array_backend
+        if array_backend is not None:
+            if array_backend not in ("numpy", "jax", "jax_interpret"):
+                raise ValueError(
+                    f"array_backend must be 'numpy', 'jax' or "
+                    f"'jax_interpret', got {array_backend!r}")
+            eng.array_backend = array_backend
         arena = RecordArena(keep_tasks=keep_tasks,
                             capacity=expected_tasks or 0,
                             keep_inputs=keep_inputs)
@@ -810,37 +824,42 @@ class PlacementRuntime:
                  "walked": 0}
         prev_last = -np.inf
         force_walk = False
-        for chunk in _iter_chunks(workload, chunk_size):
-            m = len(chunk)
-            if m == 0:
-                continue
-            first = float(chunk[0].arrival_ms)
-            last = float(chunk[m - 1].arrival_ms)
-            if first < prev_last:
-                # the stream as a whole is out of arrival order: a columnar
-                # chunk would snapshot CIL state the one-shot walk has already
-                # reaped differently — from here on, every chunk must take
-                # the per-task walk (exactly what the one-shot path does)
-                force_walk = True
-            prev_last = max(prev_last, last)
-            was_columnar = eng.columnar
-            eng.columnar_stats = None
-            try:
-                if force_walk:
-                    eng.columnar = False
-                decisions = eng.place_many(chunk, edge_queues=self.edge_queues)
-            finally:
-                eng.columnar = was_columnar
-            arena.append(self._execute_decisions(chunk, decisions))
-            stats["chunks"] += 1
-            stats["n"] += m
-            cs = eng.columnar_stats
-            if cs is not None:
-                stats["spec_segments"] += cs["chunks"]
-                stats["repairs"] += cs["repairs"]
-                stats["walked"] += cs["walked"]
-            else:
-                stats["walked"] += m
+        try:
+            for chunk in _iter_chunks(workload, chunk_size):
+                m = len(chunk)
+                if m == 0:
+                    continue
+                first = float(chunk[0].arrival_ms)
+                last = float(chunk[m - 1].arrival_ms)
+                if first < prev_last:
+                    # the stream as a whole is out of arrival order: a
+                    # columnar chunk would snapshot CIL state the one-shot
+                    # walk has already reaped differently — from here on,
+                    # every chunk must take the per-task walk (exactly what
+                    # the one-shot path does)
+                    force_walk = True
+                prev_last = max(prev_last, last)
+                was_columnar = eng.columnar
+                eng.columnar_stats = None
+                try:
+                    if force_walk:
+                        eng.columnar = False
+                    decisions = eng.place_many(
+                        chunk, edge_queues=self.edge_queues)
+                finally:
+                    eng.columnar = was_columnar
+                arena.append(self._execute_decisions(chunk, decisions))
+                stats["chunks"] += 1
+                stats["n"] += m
+                cs = eng.columnar_stats
+                if cs is not None:
+                    stats["spec_segments"] += cs["chunks"]
+                    stats["repairs"] += cs["repairs"]
+                    stats["walked"] += cs["walked"]
+                else:
+                    stats["walked"] += m
+        finally:
+            eng.array_backend = was_backend
         self.stream_stats = stats
         return self.result(arena.finish())
 

@@ -9,6 +9,22 @@ import numpy as np
 from repro.kernels.gbrt_predict.kernel import gbrt_predict_blocked
 
 
+def kernel_operands(model) -> tuple:
+    """Device-ready ensemble operands for ``gbrt_predict_blocked``.
+
+    Returns ``(features i32, thresholds f32, leaves f32)`` as jnp arrays.
+    +inf thresholds mark pass-through nodes; the kernel compares in f32, so
+    thresholds are clipped to the finite f32 range host-side. Shared by the
+    wrapper below and the device-resident placement core
+    (``repro.core.jax_core``), which hosts one tuple per cloud config.
+    """
+    big = np.float32(3.0e38)
+    thr = np.clip(model.thresholds, -big, big).astype(np.float32)
+    return (jnp.asarray(np.asarray(model.features, np.int32)),
+            jnp.asarray(thr),
+            jnp.asarray(np.asarray(model.leaves, np.float32)))
+
+
 def gbrt_predict(model, x, *, block_n: int = 256,
                  interpret: bool | None = None) -> np.ndarray:
     """model: repro.core.gbrt.GBRT; x: (N, F). Returns np.ndarray (N,)."""
@@ -18,16 +34,13 @@ def gbrt_predict(model, x, *, block_n: int = 256,
     if x.ndim == 1:
         x = x[:, None]
     N = x.shape[0]
-    # +inf thresholds mark pass-through nodes; the kernel compares in f32
-    big = np.float32(3.0e38)
-    thr = np.clip(model.thresholds, -big, big).astype(np.float32)
+    feats, thr, lvs = kernel_operands(model)
     bn = min(block_n, max(N, 1))
     pad = (-N) % bn
     if pad:
         x = np.pad(x, ((0, pad), (0, 0)))
     out = gbrt_predict_blocked(
-        jnp.asarray(x), jnp.asarray(model.features, jnp.int32),
-        jnp.asarray(thr), jnp.asarray(model.leaves, jnp.float32),
+        jnp.asarray(x), feats, thr, lvs,
         depth=model.config.max_depth, lr=float(model.config.learning_rate),
         base=float(model.base), block_n=bn, interpret=interpret)
     return np.asarray(out)[:N]

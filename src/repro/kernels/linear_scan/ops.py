@@ -23,3 +23,18 @@ def linear_scan(x, a, *, chunk: int = 256, interpret: bool | None = None):
         a = jnp.pad(a, ((0, 0), (0, pad), (0, 0)), constant_values=1.0)
     y, state = linear_scan_bsd(x, a, chunk=Q, interpret=interpret)
     return y[:, :S], state
+
+
+def prefix_sum(delta, *, chunk: int = 256, interpret: bool | None = None):
+    """Inclusive prefix sum of a 1-D sequence via the scan kernel (a ≡ 1).
+
+    ``delta``: (S,). Returns an (S,) fp32 array with ``out[i] = Σ_{j<=i}
+    delta[j]``. A plain running sum is the degenerate RG-LRU recurrence with
+    unit decay, so this routes the surplus-bank prefix of the device
+    placement core (``repro.core.jax_core``, ``SURPLUS_LINEAR_SCAN``) through
+    the same blocked kernel. fp32 accumulation: decision-equality use only.
+    """
+    x = jnp.asarray(delta, jnp.float32)[None, :, None]
+    a = jnp.ones(x.shape, jnp.float32)
+    h, _state = linear_scan(x, a, chunk=chunk, interpret=interpret)
+    return h[0, :, 0]

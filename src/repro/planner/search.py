@@ -24,7 +24,7 @@ Two search strategies:
 from __future__ import annotations
 
 import math
-from dataclasses import dataclass, field
+from dataclasses import dataclass, field, replace
 
 import numpy as np
 
@@ -233,10 +233,66 @@ class Planner:
             for cand in candidates]
         return sorted(scores, key=_rank_key)
 
+    # -------------------------------------------------------- budget bisect
+    def _refine_budget(self, best: CandidateScore, lo: float, iters: int,
+                       rel_tol: float, parallel: bool,
+                       use_processes: bool) -> tuple[CandidateScore, list]:
+        """Bisect the winner's per-task budget ``c_max`` down to the cheapest
+        value that still meets the SLO.
+
+        The structural search picks a *configuration*; ``c_max`` is the one
+        continuous knob left on the table, and total cost is (weakly)
+        monotone in it — a smaller budget pushes work to the edge, trading
+        cloud spend for latency until attainment drops below target. So the
+        cheapest SLO-meeting budget sits at a threshold that bisection finds
+        in O(log) full-trace replays: the invariant is that ``hi`` always
+        meets the SLO (it starts at the verified winner), ``lo`` always
+        misses (checked by the first probe — if the floor itself meets, it
+        is returned outright). Every probe replays the FULL trace through
+        ``evaluate``, so the refined winner is verified on every record,
+        never interpolated.
+        """
+        cand, spec = best.candidate, best.candidate.policy
+        if (not best.meets_slo or spec.kind == "min_cost"
+                or not spec.c_max > lo):
+            return best, []
+        probes: list[CandidateScore] = []
+
+        def probe(c_max: float) -> CandidateScore:
+            pc = replace(cand, name=f"{cand.name}~cmax{len(probes)}",
+                         policy=replace(spec, c_max=c_max))
+            s = self.evaluate([pc], parallel=parallel,
+                              use_processes=use_processes)[0]
+            probes.append(s)
+            return s
+
+        hi, winner = spec.c_max, best
+        lo_score = probe(lo)
+        if lo_score.meets_slo:
+            lo_score = replace(lo_score, candidate=replace(
+                lo_score.candidate, name=cand.name))
+            return (min((lo_score, best), key=_rank_key), probes)
+        for _ in range(max(iters, 0)):
+            if hi - lo <= rel_tol * max(abs(hi), 1e-12):
+                break
+            mid = 0.5 * (lo + hi)
+            s = probe(mid)
+            if s.meets_slo:
+                hi, winner = mid, s
+            else:
+                lo = mid
+        if winner is not best:
+            winner = replace(winner, candidate=replace(
+                winner.candidate, name=cand.name))
+            winner = min((winner, best), key=_rank_key)
+        return winner, probes
+
     # ----------------------------------------------------------------- plan
     def plan(self, candidates, strategy: str = "grid", rungs: int = 3,
              min_rung_n: int = 512, parallel: bool = True,
-             use_processes: bool = False) -> PlanResult:
+             use_processes: bool = False, budget_strategy: str = "none",
+             budget_lo: float = 0.0, budget_iters: int = 8,
+             budget_rel_tol: float = 0.02) -> PlanResult:
         """The cheapest configuration that serves this trace within SLO.
 
         ``strategy="grid"`` replays every candidate on the full trace;
@@ -245,11 +301,23 @@ class Planner:
         the full trace, so ``best`` is verified on every record either way.
         If no candidate meets the SLO, the best-attainment one is returned
         (``best.meets_slo`` says which case you are in).
+
+        ``budget_strategy="bisect"`` then refines the winner's continuous
+        ``c_max`` knob (min-latency/hedged policies only): bisect down to the
+        cheapest budget that still meets the SLO, ``budget_iters`` probes at
+        most, stopping once the bracket is within ``budget_rel_tol`` of the
+        meeting endpoint. Probes replay the full trace, and the refined
+        winner keeps the original candidate name — it is the same
+        configuration with a tighter budget.
         """
         candidates = list(candidates)
         if strategy not in ("grid", "halving"):
             raise ValueError(
                 f"unknown strategy {strategy!r}; expected 'grid' or 'halving'")
+        if budget_strategy not in ("none", "bisect"):
+            raise ValueError(
+                f"unknown budget_strategy {budget_strategy!r}; expected "
+                f"'none' or 'bisect'")
         rung_log: list[dict] = []
         replayed = 0
         survivors = candidates
@@ -272,7 +340,18 @@ class Planner:
         final = self.evaluate(survivors, prefix_n=None, parallel=parallel,
                               use_processes=use_processes)
         replayed += sum(s.n for s in final)
-        return PlanResult(best=final[0], scores=final, rungs=rung_log,
+        best = final[0]
+        if budget_strategy == "bisect":
+            best, probes = self._refine_budget(
+                best, budget_lo, budget_iters, budget_rel_tol, parallel,
+                use_processes)
+            replayed += sum(s.n for s in probes)
+            for i, s in enumerate(probes):
+                rung_log.append({
+                    "budget_probe": i, "c_max": s.candidate.policy.c_max,
+                    "total_cost": s.total_cost, "attainment": s.attainment,
+                    "meets_slo": s.meets_slo})
+        return PlanResult(best=best, scores=final, rungs=rung_log,
                           strategy=strategy, mode=self.last_mode,
                           replayed_tasks=replayed)
 
@@ -283,9 +362,13 @@ def plan(trace: Trace, candidates, slo: SLO, strategy: str = "grid",
 
     Planner construction kwargs (``fit_seed``, ``n_inputs``, ``twin_seed``,
     ``max_workers``, ``fit_configs``) and plan kwargs (``rungs``,
-    ``parallel``, ``use_processes``, ``min_rung_n``) are split automatically.
+    ``parallel``, ``use_processes``, ``min_rung_n``, ``budget_strategy``,
+    ``budget_lo``, ``budget_iters``, ``budget_rel_tol``) are split
+    automatically.
     """
-    plan_keys = {"rungs", "min_rung_n", "parallel", "use_processes"}
+    plan_keys = {"rungs", "min_rung_n", "parallel", "use_processes",
+                 "budget_strategy", "budget_lo", "budget_iters",
+                 "budget_rel_tol"}
     plan_kw = {k: v for k, v in kwargs.items() if k in plan_keys}
     ctor_kw = {k: v for k, v in kwargs.items() if k not in plan_keys}
     return Planner(trace, slo, **ctor_kw).plan(candidates, strategy=strategy,

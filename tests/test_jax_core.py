@@ -1,0 +1,296 @@
+"""Device-resident placement core (ISSUE 7): jax serve ≡ numpy serve.
+
+Covers:
+- the parity contract: ``serve_stream(array_backend="jax_interpret")`` is
+  BIT-IDENTICAL per record to the numpy oracle — every float column, every
+  target — across MinCost/MinLatency × 1-/3-device fleets × chunk sizes
+  {1, 53, 4096}, with decision-chunk boundaries forced inside repair
+  segments (small ``COLUMNAR_CHUNK``, bursty edge/cloud oscillation);
+- compiled mode (``array_backend="jax"``): decision-identical targets and
+  float columns within tolerance (XLA contracts mul+add chains into FMAs,
+  so compiled floats may differ in the last ulp);
+- load balancers (RoundRobin/Random) consume their nomination state exactly
+  once per chunk — parity holds and the balancer cursor matches numpy's;
+- fallbacks: hedged policies, out-of-arrival-order streams and
+  ``record_decisions`` take the numpy path with identical results
+  (``engine.jax_stats`` stays unset);
+- ``array_backend`` validation on both ``DecisionEngine`` and
+  ``serve_stream``, and ``serve_stream`` restoring the engine's backend;
+- the per-engine core cache (``core_for``) and the jit compile caches: a
+  second same-shape chunk must NOT retrace (``compile_stats`` stable);
+- ``GBRT.predict_jax`` operand hosting: cached per model identity,
+  invalidated by swapping in a fresh model;
+- a hypothesis property (skipped when hypothesis is missing): random
+  Poisson-ish streams keep interpret parity record-for-record.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+import pytest
+
+pytest.importorskip("jax")
+
+import repro.core.decision as decision_mod
+from repro.core import gbrt as gbrt_mod
+from repro.core import jax_core
+from repro.core.decision import (
+    DecisionEngine,
+    HedgedPolicy,
+    MinCostPolicy,
+    MinLatencyPolicy,
+    RandomBalancer,
+    RoundRobinBalancer,
+)
+from repro.core.fit import build_fleet_predictor, fit_app
+from repro.core.gbrt import GBRT, GBRTConfig
+from repro.core.records import RecordBatch
+from repro.core.runtime import PlacementRuntime, TwinBackend
+from repro.core.workload import BurstyWorkload, TaskInput
+
+CONFIGS = (1280, 1536, 1792)
+FLEET3 = {"edge0": 1.0, "edge1": 1.0, "edge2": 0.6}
+FLEET1 = {"edge0": 1.0}
+
+RECORD_COLS = ("predicted_latency_ms", "predicted_cost", "actual_latency_ms",
+               "actual_cost", "allowed_cost", "completion_ms", "queue_wait_ms",
+               "exec_ms", "hedge_exec_ms", "predicted_cold", "actual_cold",
+               "feasible", "hedged")
+
+FLOAT_COLS = ("predicted_latency_ms", "predicted_cost", "actual_latency_ms",
+              "actual_cost", "allowed_cost", "completion_ms", "queue_wait_ms",
+              "exec_ms")
+
+
+@pytest.fixture(scope="module")
+def ir_setup():
+    return fit_app("IR", seed=0, n_inputs=120, configs=CONFIGS)
+
+
+def _runtime(twin, models, fleet=FLEET3, policy=None, balancer=None, seed=11):
+    pred = build_fleet_predictor(models, dict(fleet), configs=CONFIGS)
+    eng = DecisionEngine(
+        predictor=pred,
+        policy=policy if policy is not None
+        else MinLatencyPolicy(c_max=6e-6, alpha=0.05),
+        balancer=balancer)
+    backend = TwinBackend(twin, seed=seed, edge_names=tuple(fleet),
+                          edge_speed=fleet)
+    return PlacementRuntime(eng, backend)
+
+
+def _bursty(twin, n, seed=31):
+    return BurstyWorkload(rate_per_s=4.0, size_sampler=twin.sample_input,
+                          burst_multiplier=8.0, mean_quiet_s=10.0,
+                          mean_burst_s=6.0, seed=seed).generate(n)
+
+
+def assert_records_equal(a: RecordBatch, b: RecordBatch):
+    assert len(a) == len(b)
+    assert list(a.targets) == list(b.targets)
+    for col in RECORD_COLS:
+        assert np.array_equal(getattr(a, col), getattr(b, col)), col
+    assert np.array_equal(a.arrival_ms, b.arrival_ms)
+
+
+def _policies():
+    return [("min_latency", lambda: MinLatencyPolicy(c_max=6e-6, alpha=0.05)),
+            ("min_cost", lambda: MinCostPolicy(deadline_ms=250.0))]
+
+
+# ------------------------------------------------- interpret-mode bit parity
+@pytest.mark.parametrize("policy_name,policy_fn", _policies())
+@pytest.mark.parametrize("fleet", [FLEET1, FLEET3],
+                         ids=["1dev", "3dev"])
+@pytest.mark.parametrize("chunk_size,n", [(1, 60), (53, 300), (4096, 300)],
+                         ids=["chunk1", "chunk53", "chunk4096"])
+def test_interpret_bit_parity(ir_setup, monkeypatch, policy_name, policy_fn,
+                              fleet, chunk_size, n):
+    """The headline guarantee: the device core replays the EXACT sequential
+    semantics — per-record float equality against the numpy oracle, with the
+    oracle's own speculation windows forced small so repairs happen."""
+    monkeypatch.setattr(decision_mod, "COLUMNAR_CHUNK", 64)
+    twin, models = ir_setup
+    tasks = _bursty(twin, n)
+    ref = _runtime(twin, models, fleet, policy_fn()).serve_stream(
+        tasks, chunk_size=chunk_size)
+    rt = _runtime(twin, models, fleet, policy_fn())
+    res = rt.serve_stream(tasks, chunk_size=chunk_size,
+                          array_backend="jax_interpret")
+    assert_records_equal(res.records, ref.records)
+    stats = rt.engine.jax_stats
+    assert stats is not None and stats["interpret"] and stats["n"] >= 1
+
+
+@pytest.mark.parametrize("balancer_fn", [
+    lambda: RoundRobinBalancer(), lambda: RandomBalancer(seed=5)],
+    ids=["roundrobin", "random"])
+def test_interpret_parity_with_balancers(ir_setup, balancer_fn):
+    """Balancer nomination state is consumed exactly once per chunk, in
+    arrival order — parity per record AND the cursor/rng advance matches."""
+    twin, models = ir_setup
+    tasks = _bursty(twin, 240)
+    ref_rt = _runtime(twin, models, balancer=balancer_fn())
+    ref = ref_rt.serve_stream(tasks, chunk_size=96)
+    rt = _runtime(twin, models, balancer=balancer_fn())
+    res = rt.serve_stream(tasks, chunk_size=96, array_backend="jax_interpret")
+    assert_records_equal(res.records, ref.records)
+    a, b = ref_rt.engine.balancer, rt.engine.balancer
+    if isinstance(a, RoundRobinBalancer):
+        assert a._i == b._i
+    else:
+        assert a.rng.integers(1 << 30) == b.rng.integers(1 << 30)
+
+
+# --------------------------------------------- compiled decision equality
+@pytest.mark.parametrize("policy_name,policy_fn", _policies())
+def test_compiled_decision_equality(ir_setup, policy_fn, policy_name):
+    """Compiled XLA fuses mul+add into FMAs, so floats may move in the last
+    ulp — but every decision (target, cold, feasible) must be identical and
+    every float within tolerance."""
+    twin, models = ir_setup
+    tasks = _bursty(twin, 400)
+    ref = _runtime(twin, models, policy=policy_fn()).serve_stream(
+        tasks, chunk_size=128)
+    rt = _runtime(twin, models, policy=policy_fn())
+    res = rt.serve_stream(tasks, chunk_size=128, array_backend="jax")
+    ra, rb = ref.records, res.records
+    assert list(ra.targets) == list(rb.targets)
+    for col in ("predicted_cold", "actual_cold", "feasible", "hedged"):
+        assert np.array_equal(getattr(ra, col), getattr(rb, col)), col
+    for col in FLOAT_COLS:
+        np.testing.assert_allclose(
+            getattr(ra, col).astype(float), getattr(rb, col).astype(float),
+            rtol=1e-9, atol=1e-12, err_msg=col)
+    assert rt.engine.jax_stats is not None
+    assert not rt.engine.jax_stats["interpret"]
+
+
+# ------------------------------------------------------- fallback regression
+def test_hedged_policy_falls_back_to_numpy(ir_setup):
+    twin, models = ir_setup
+    tasks = _bursty(twin, 200)
+    mk = lambda: HedgedPolicy(MinLatencyPolicy(c_max=6e-6, alpha=0.05),
+                              hedge_threshold_ms=50.0)
+    ref = _runtime(twin, models, policy=mk()).serve_stream(tasks,
+                                                           chunk_size=64)
+    rt = _runtime(twin, models, policy=mk())
+    res = rt.serve_stream(tasks, chunk_size=64, array_backend="jax")
+    assert_records_equal(res.records, ref.records)
+    assert getattr(rt.engine, "jax_stats", None) is None  # numpy path ran
+
+
+def test_out_of_order_stream_falls_back(ir_setup):
+    twin, models = ir_setup
+    tasks = _bursty(twin, 120)
+    tasks[10], tasks[50] = tasks[50], tasks[10]
+    ref = _runtime(twin, models).serve_stream(tasks, chunk_size=1000)
+    rt = _runtime(twin, models)
+    res = rt.serve_stream(tasks, chunk_size=1000, array_backend="jax")
+    assert_records_equal(res.records, ref.records)
+    assert getattr(rt.engine, "jax_stats", None) is None
+
+
+def test_record_decisions_falls_back(ir_setup):
+    twin, models = ir_setup
+    pred = build_fleet_predictor(models, dict(FLEET3), configs=CONFIGS)
+    eng = DecisionEngine(predictor=pred,
+                         policy=MinLatencyPolicy(c_max=6e-6, alpha=0.05),
+                         record_decisions=True, array_backend="jax")
+    backend = TwinBackend(twin, seed=11, edge_names=tuple(FLEET3),
+                          edge_speed=FLEET3)
+    rt = PlacementRuntime(eng, backend)
+    tasks = _bursty(twin, 80)
+    res = rt.serve_stream(tasks, chunk_size=80)
+    assert len(eng.decisions) == 80
+    assert getattr(eng, "jax_stats", None) is None
+    ref = _runtime(twin, models).serve_stream(tasks, chunk_size=80)
+    assert_records_equal(res.records, ref.records)
+
+
+# ----------------------------------------------------- backend plumbing
+def test_array_backend_validation(ir_setup):
+    twin, models = ir_setup
+    pred = build_fleet_predictor(models, dict(FLEET3), configs=CONFIGS)
+    with pytest.raises(ValueError, match="array_backend"):
+        DecisionEngine(predictor=pred,
+                       policy=MinLatencyPolicy(c_max=6e-6, alpha=0.05),
+                       array_backend="cupy")
+    rt = _runtime(twin, models)
+    with pytest.raises(ValueError, match="array_backend"):
+        rt.serve_stream(_bursty(twin, 4), array_backend="cupy")
+
+
+def test_serve_stream_restores_engine_backend(ir_setup):
+    twin, models = ir_setup
+    rt = _runtime(twin, models)
+    assert rt.engine.array_backend == "numpy"
+    rt.serve_stream(_bursty(twin, 40), chunk_size=40,
+                    array_backend="jax_interpret")
+    assert rt.engine.array_backend == "numpy"
+
+
+def test_core_cache_and_no_retrace(ir_setup):
+    """One core per engine config, and the second same-shape chunk reuses
+    every jit cache entry — the no-retrace guarantee the bench smoke checks."""
+    twin, models = ir_setup
+    rt = _runtime(twin, models)
+    tasks = _bursty(twin, 384)
+    # two warmup chunks: the first grows the container-pool cap (a real shape
+    # change), the second compiles at the steady-state shapes
+    rt.serve_stream(tasks[:256], chunk_size=128, array_backend="jax")
+    core = jax_core.core_for(rt.engine)
+    assert core is not None and core.valid_for(rt.engine)
+    assert jax_core.core_for(rt.engine) is core  # cached, not rebuilt
+    before = core.compile_stats()
+    rt.serve_stream(tasks[256:], chunk_size=128, array_backend="jax")
+    assert jax_core.core_for(rt.engine) is core
+    assert core.compile_stats() == before  # steady shapes ⇒ no retrace
+
+
+# ------------------------------------------------- GBRT jax operand cache
+def test_predict_jax_operand_cache(rng):
+    x = rng.uniform(0.0, 100.0, size=(200, 2))
+    y = (x[:, 0] * 1.5 + np.sin(x[:, 1])) * 10.0
+    m = GBRT.fit(x, y, GBRTConfig(n_trees=12, max_depth=3))
+    np.testing.assert_allclose(np.asarray(m.predict_jax(x)), m.predict(x),
+                               rtol=1e-6)
+    ops1 = gbrt_mod._jax_operands(m)
+    assert gbrt_mod._jax_operands(m) is ops1  # hosted once per identity
+    # refit-by-swap: a fresh model must get fresh operands
+    m2 = GBRT.fit(x, y * 2.0, GBRTConfig(n_trees=12, max_depth=3))
+    ops2 = gbrt_mod._jax_operands(m2)
+    assert ops2 is not ops1
+    np.testing.assert_allclose(np.asarray(m2.predict_jax(x)), m2.predict(x),
+                               rtol=1e-6)
+
+
+# --------------------------------------------------- hypothesis property
+def test_random_streams_keep_interpret_parity(ir_setup):
+    pytest.importorskip("hypothesis")
+    from hypothesis import given, settings, strategies as st
+
+    twin, models = ir_setup
+
+    @given(
+        gaps=st.lists(st.floats(min_value=0.0, max_value=2000.0,
+                                allow_nan=False), min_size=3, max_size=24),
+        size_seed=st.integers(min_value=0, max_value=2**31 - 1),
+        chunk=st.sampled_from([1, 5, 64]),
+    )
+    @settings(max_examples=15, deadline=None)
+    def prop(gaps, size_seed, chunk):
+        r = np.random.default_rng(size_seed)
+        t = 0.0
+        tasks = []
+        for i, g in enumerate(gaps):
+            t += g
+            size, nbytes = twin.sample_input(r)
+            tasks.append(TaskInput(idx=i, arrival_ms=t, size=size,
+                                   bytes=nbytes))
+        ref = _runtime(twin, models).serve_stream(tasks, chunk_size=chunk)
+        res = _runtime(twin, models).serve_stream(
+            tasks, chunk_size=chunk, array_backend="jax_interpret")
+        assert_records_equal(res.records, ref.records)
+
+    prop()

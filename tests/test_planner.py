@@ -10,6 +10,9 @@ Covers:
   full trace, agreeing with grid search on the fixture;
 - scoring arithmetic (fleet capacity cost, attainment, ranking order) on
   hand-built records;
+- budget bisect (``budget_strategy="bisect"``): the winner's ``c_max`` is
+  refined to the cheapest full-trace-verified SLO-meeting budget;
+  min-cost winners are left untouched;
 - candidate/policy/SLO validation errors.
 """
 
@@ -124,6 +127,57 @@ def test_no_candidate_meets_slo_returns_best_attainment(stt_trace):
     res = planner.plan(_fixture_candidates()[:2], strategy="grid")
     assert not res.best.meets_slo
     assert res.best.attainment == max(s.attainment for s in res.scores)
+
+
+# ------------------------------------------------------------ budget bisect
+@pytest.fixture(scope="module")
+def ir_trace():
+    """300 IR arrivals at 3/s on one edge device: busy enough that the
+    per-task budget c_max decides how much work offloads to the cloud."""
+    twin, _ = fitted("IR", seed=0, n_inputs=120, configs=CONFIGS)
+    tasks = PoissonWorkload(rate_per_s=3.0, size_sampler=twin.sample_input,
+                            seed=5).generate(300)
+    return Trace.from_tasks(tasks, app="IR")
+
+
+def _budget_planner(trace):
+    return Planner(trace, SLO(latency_ms=2_000.0, target=0.9),
+                   fit_seed=0, n_inputs=120, fit_configs=CONFIGS)
+
+
+def test_budget_bisect_refines_winner_cheaper_still_meeting(ir_trace):
+    """The winner's generous c_max leaves money on the table; bisect walks
+    it down to the cheapest full-trace-verified budget that still meets."""
+    pol = PolicySpec(kind="min_latency", c_max=2e-4)
+    cands = [Candidate.make("one-edge", 1, policy=pol, cloud_configs=CONFIGS,
+                            device_rate_per_hour=0.05)]
+    planner = _budget_planner(ir_trace)
+    base = planner.plan(cands)
+    assert base.best.meets_slo
+    ref = planner.plan(cands, budget_strategy="bisect", budget_iters=6)
+    assert ref.best.meets_slo
+    assert ref.best.total_cost <= base.best.total_cost
+    assert ref.best.candidate.policy.c_max < pol.c_max
+    assert ref.best.candidate.name == "one-edge"  # refined, same config
+    probes = [r for r in ref.rungs if "budget_probe" in r]
+    assert probes and all(p["c_max"] < pol.c_max for p in probes)
+    # every probe replayed the FULL trace — never extrapolated
+    assert ref.replayed_tasks == base.replayed_tasks * (1 + len(probes))
+
+
+def test_budget_bisect_leaves_min_cost_winner_alone(ir_trace):
+    pol = PolicySpec(kind="min_cost", deadline_ms=2_000.0)
+    cands = [Candidate.make("mc", 1, policy=pol, cloud_configs=CONFIGS)]
+    res = _budget_planner(ir_trace).plan(cands, budget_strategy="bisect")
+    assert not any("budget_probe" in r for r in res.rungs)
+    assert res.best.candidate.policy.c_max == pol.c_max
+
+
+def test_budget_strategy_validation(ir_trace):
+    with pytest.raises(ValueError, match="budget_strategy"):
+        _budget_planner(ir_trace).plan(
+            [Candidate.make("a", 1, cloud_configs=CONFIGS)],
+            budget_strategy="newton")
 
 
 # ------------------------------------------------------------------ scoring
