@@ -20,6 +20,10 @@ Components (paper section in parens):
 - ``events``       — the event scheduler behind the async serve path: min-heap of
                      arrival/dispatch/completion events on the virtual clock +
                      the single-slot FIFO worker state machine
+- ``faults``       — deterministic chaos twin: declarative, seeded ``FaultSpec``
+                     (outages, transient errors, cold-start spikes, stragglers,
+                     network blackouts) + the failure policies (retry/failover,
+                     circuit breaker, SLO-tiered admission control)
 - ``runtime``      — the unified serve loop: ``PlacementRuntime`` over pluggable
                      ``ExecutionBackend``s (``TwinBackend`` here,
                      ``repro.serving.placement.LiveBackend`` live), with the
@@ -71,6 +75,20 @@ from repro.core.multiapp import (
     ShardedRuntime,
     serve_sharded,
 )
+from repro.core.faults import (
+    AdmissionPolicy,
+    Blackout,
+    CircuitBreaker,
+    ColdSpike,
+    FaultError,
+    FaultSpec,
+    OutageWindow,
+    RetryPolicy,
+    SLOTier,
+    Straggler,
+    TargetHealth,
+    TransientErrors,
+)
 from repro.core.recurrence import fifo_starts
 from repro.core.events import Event, EventHeap, SingleSlotWorker
 from repro.core.runtime import (
@@ -114,6 +132,18 @@ __all__ = [
     "Policy",
     "PolicyConstraints",
     "PredictedEdgeQueue",
+    "AdmissionPolicy",
+    "Blackout",
+    "CircuitBreaker",
+    "ColdSpike",
+    "FaultError",
+    "FaultSpec",
+    "OutageWindow",
+    "RetryPolicy",
+    "SLOTier",
+    "Straggler",
+    "TargetHealth",
+    "TransientErrors",
     "PoissonWorkload",
     "TaskChunk",
     "TaskInput",

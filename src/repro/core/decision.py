@@ -297,6 +297,39 @@ class RandomBalancer(EdgeBalancer):
         return names[int(self.rng.integers(len(names)))]
 
 
+def failover_choice(policy: Policy, preds: Mapping[str, "Prediction"],
+                    exclude: "set[str] | frozenset[str]",
+                    edge_names: Sequence[str],
+                    waits: Mapping[str, float],
+                    ) -> "tuple[str, Prediction] | None":
+    """Next-best surviving target after a failed dispatch: re-enter the
+    placement path with the failed/tried/tripped targets masked out.
+
+    Mirrors ``DecisionEngine._decide`` exactly — the surviving fleet device
+    with the least predicted wait stands in as "the edge" for the policy,
+    which then chooses over the cloud configs plus that device — but WITHOUT
+    the ``observe``/CIL side effects: the failure-aware runtime applies the
+    failover's state accounting itself (surplus drawdown like a hedge leg,
+    ``update_cil`` for the extra container). Returns ``None`` when no target
+    survives the mask (the task fails permanently).
+    """
+    view = {n: p for n, p in preds.items() if n not in exclude}
+    if not view:
+        return None
+    edges = [n for n in edge_names if n in view]
+    if edges:
+        edge_choice = min(edges, key=lambda n: waits.get(n, 0.0))
+        policy_view = {n: p for n, p in view.items()
+                       if n == edge_choice or n not in edges}
+    else:
+        edge_choice = next(iter(view))  # no surviving edge: cloud-only view
+        policy_view = view
+    name, _feasible, _allowed = policy.choose(policy_view, edge_choice)
+    if name not in view:
+        return None  # the policy's edge fallback is itself masked out
+    return name, view[name]
+
+
 _POLICY_METHODS = ("choose", "observe", "constraints", "hedge")
 # Policies whose choose/observe the columnar kernels replicate exactly.
 # Subclasses are NOT eligible (they may override behavior) — exact type only.

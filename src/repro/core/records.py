@@ -43,6 +43,13 @@ class TaskRecord:
     exec_ms: float = 0.0        # executor busy occupancy (utilization)
     hedge_target: str | None = None  # where the duplicate dispatch ran
     hedge_exec_ms: float = 0.0       # its busy occupancy (for device load)
+    # failure-aware serving (see ``repro.core.faults``): shed tasks never ran
+    # (bill nothing); failed tasks exhausted retry/failover; ``attempts``
+    # counts every dispatch billed to this task; ``tier`` is its SLO class
+    shed: bool = False
+    failed: bool = False
+    attempts: int = 1
+    tier: int = 0
 
     @property
     def warm_cold_mismatch(self) -> bool:
@@ -89,6 +96,26 @@ class RecordBatch(Sequence):
     # still exportable as a replayable trace (``repro.trace.capture``)
     input_size: np.ndarray | None = None
     input_bytes: np.ndarray | None = None
+    # failure-aware serving columns (``None`` at construction materializes
+    # the no-failure defaults, so every existing producer stays valid):
+    # shed = admission control dropped the task (it bills nothing), failed =
+    # retries/failovers exhausted, attempts = dispatches billed, tier = SLO
+    # class (0 = highest). See ``repro.core.faults``.
+    shed: np.ndarray | None = None      # bool
+    failed: np.ndarray | None = None    # bool
+    attempts: np.ndarray | None = None  # int64, >= 1 (0 for shed rows)
+    tier: np.ndarray | None = None      # int64
+
+    def __post_init__(self):
+        n = self.target_codes.shape[0]
+        if self.shed is None:
+            self.shed = np.zeros(n, dtype=bool)
+        if self.failed is None:
+            self.failed = np.zeros(n, dtype=bool)
+        if self.attempts is None:
+            self.attempts = np.ones(n, dtype=np.int64)
+        if self.tier is None:
+            self.tier = np.zeros(n, dtype=np.int64)
 
     # ------------------------------------------------------------ construction
     @classmethod
@@ -137,6 +164,10 @@ class RecordBatch(Sequence):
                 [code[r.hedge_target] if r.hedge_target is not None else -1
                  for r in records], np.int64),
             hedge_exec_ms=np.array([r.hedge_exec_ms for r in records]),
+            shed=np.array([r.shed for r in records], bool),
+            failed=np.array([r.failed for r in records], bool),
+            attempts=np.array([r.attempts for r in records], np.int64),
+            tier=np.array([r.tier for r in records], np.int64),
         )
 
     # ------------------------------------------------------------- sequence API
@@ -182,6 +213,10 @@ class RecordBatch(Sequence):
             exec_ms=float(self.exec_ms[i]),
             hedge_target=self.target_names[hc] if hc >= 0 else None,
             hedge_exec_ms=float(self.hedge_exec_ms[i]),
+            shed=bool(self.shed[i]),
+            failed=bool(self.failed[i]),
+            attempts=int(self.attempts[i]),
+            tier=int(self.tier[i]),
         )
 
     def __iter__(self) -> Iterator[TaskRecord]:
@@ -287,6 +322,10 @@ class RecordBatch(Sequence):
             exec_ms=self.exec_ms[order],
             hedge_codes=self.hedge_codes[order],
             hedge_exec_ms=self.hedge_exec_ms[order],
+            shed=self.shed[order],
+            failed=self.failed[order],
+            attempts=self.attempts[order],
+            tier=self.tier[order],
             arrivals=opt(self.arrivals),
             task_idx=opt(self.task_idx),
             input_size=opt(self.input_size),
@@ -297,8 +336,9 @@ class RecordBatch(Sequence):
 _ARENA_F64 = ("predicted_latency_ms", "predicted_cost", "actual_latency_ms",
               "actual_cost", "allowed_cost", "completion_ms", "queue_wait_ms",
               "exec_ms", "hedge_exec_ms")
-_ARENA_BOOL = ("predicted_cold", "actual_cold", "feasible", "hedged")
-_ARENA_I64 = ("target_codes", "hedge_codes")
+_ARENA_BOOL = ("predicted_cold", "actual_cold", "feasible", "hedged",
+               "shed", "failed")
+_ARENA_I64 = ("target_codes", "hedge_codes", "attempts", "tier")
 
 
 class RecordArena:
@@ -385,6 +425,8 @@ class RecordArena:
         cols = self._cols
         cols["target_codes"][sl] = table[rb.target_codes]
         cols["hedge_codes"][sl] = table[rb.hedge_codes]
+        cols["attempts"][sl] = rb.attempts
+        cols["tier"][sl] = rb.tier
         for name in _ARENA_F64 + _ARENA_BOOL:
             cols[name][sl] = getattr(rb, name)
         cols["arrivals"][sl] = rb.arrival_ms
@@ -519,6 +561,38 @@ class SimulationResult:
         if self.c_max is None:
             return 0.0
         return self.total_actual_cost / max(self.c_max * self.n, 1e-12) * 100.0
+
+    # ------------------------------------------- failure-aware serving view
+    @property
+    def n_shed(self) -> int:
+        return int(np.count_nonzero(self.records.shed))
+
+    @property
+    def n_failed(self) -> int:
+        return int(np.count_nonzero(self.records.failed))
+
+    @property
+    def pct_shed(self) -> float:
+        return self.n_shed / max(self.n, 1) * 100.0
+
+    @property
+    def n_retried(self) -> int:
+        """Tasks that needed more than one dispatch (retry or failover)."""
+        return int(np.count_nonzero(self.records.attempts > 1))
+
+    def slo_attainment(self, deadline_ms: float,
+                       tier: int | None = None) -> float:
+        """Fraction of tasks (optionally of one SLO tier) that completed
+        within ``deadline_ms`` of arrival. Shed and permanently-failed tasks
+        count as misses — degrading by dropping work is visible here, not
+        hidden by it."""
+        r = self.records
+        sel = np.ones(len(r), dtype=bool) if tier is None else r.tier == tier
+        n_sel = int(np.count_nonzero(sel))
+        if n_sel == 0:
+            return 1.0
+        ok = sel & ~r.shed & ~r.failed & (r.actual_latency_ms <= deadline_ms)
+        return int(np.count_nonzero(ok)) / n_sel
 
     @property
     def n_warm_cold_mismatches(self) -> int:

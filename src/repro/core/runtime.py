@@ -77,12 +77,23 @@ from repro.core.decision import (
     DecisionEngine,
     PlacementDecision,
     PredictedEdgeQueue,
+    failover_choice,
+)
+from repro.core.faults import (
+    BLACKOUT,
+    OUTAGE,
+    TRANSIENT,
+    AdmissionPolicy,
+    CircuitBreaker,
+    FaultSpec,
+    RetryPolicy,
+    TargetHealth,
 )
 from repro.core.predictor import Prediction
 from repro.core.pricing import LambdaPricing
 from repro.core.records import RecordArena, RecordBatch, SimulationResult, TaskRecord
 from repro.core.recurrence import fifo_starts
-from repro.core.workload import TaskChunk, TaskInput, task_arrays
+from repro.core.workload import TaskChunk, TaskInput, task_arrays, task_tiers
 
 
 @dataclass(frozen=True)
@@ -95,6 +106,11 @@ class ExecutionOutcome:
     completion_ms: float  # absolute completion time on the arrival clock
     queue_wait_ms: float = 0.0  # actual FIFO wait (edge executors)
     exec_ms: float = 0.0        # executor busy occupancy (utilization metric)
+    # fault injection (see ``repro.core.faults``): a failed dispatch bills
+    # every leg that actually ran (``cost``/``exec_ms`` reflect them) but
+    # produced no result; ``completion_ms`` is when the failure was detected
+    failed: bool = False
+    fail_kind: int = 0   # faults.OK / TRANSIENT / OUTAGE / BLACKOUT / BREAKER
 
 
 @dataclass
@@ -112,6 +128,10 @@ class ExecutionBatch:
     # set by concurrent drivers only: a hedge race leg that was cancelled
     # before it started (it ran nowhere, bills nothing). None = no races.
     cancelled: np.ndarray | None = None
+    # set by fault-injecting backends only (None = nothing failed): which
+    # dispatches failed and how (``repro.core.faults`` kind codes)
+    failed: np.ndarray | None = None
+    fail_kind: np.ndarray | None = None
 
     def __len__(self) -> int:
         return self.latency_ms.shape[0]
@@ -121,7 +141,9 @@ class ExecutionBatch:
             latency_ms=float(self.latency_ms[i]), cost=float(self.cost[i]),
             cold=bool(self.cold[i]), completion_ms=float(self.completion_ms[i]),
             queue_wait_ms=float(self.queue_wait_ms[i]),
-            exec_ms=float(self.exec_ms[i]))
+            exec_ms=float(self.exec_ms[i]),
+            failed=bool(self.failed[i]) if self.failed is not None else False,
+            fail_kind=int(self.fail_kind[i]) if self.fail_kind is not None else 0)
 
     def outcomes(self) -> list[ExecutionOutcome]:
         return [ExecutionOutcome(lat, c, k, m, q, e)
@@ -253,9 +275,13 @@ class TwinBackend:
     def __init__(self, twin: AWSTwin, seed: int = 0,
                  pricing: LambdaPricing | None = None, edge_name: str = "edge",
                  edge_names: Sequence[str] | None = None,
-                 edge_speed: dict[str, float] | None = None):
+                 edge_speed: dict[str, float] | None = None,
+                 faults: FaultSpec | None = None):
         self.twin = twin
         self.pricing = pricing or LambdaPricing()
+        # an empty spec is indistinguishable from no spec: both take exactly
+        # the pre-fault code path (zero extra draws, bit-identical output)
+        self.faults = faults if faults else None
         self.gt_cloud = GroundTruthCloud(twin, seed=seed)
         self.cloud_rngs = {leg: np.random.default_rng([seed, 7, i])
                            for i, leg in enumerate(CLOUD_LEGS)}
@@ -287,15 +313,41 @@ class TwinBackend:
             return self._execute_edge(task, now, target)
         return self._execute_cloud(task, target, now)
 
+    def _fault_fast(self, now: float, kind: int) -> ExecutionOutcome:
+        """Fail-fast outcome: nothing ran, no draws consumed, no occupancy —
+        only the spec's failure-detection latency elapses."""
+        d = self.faults.detect_ms
+        return ExecutionOutcome(
+            latency_ms=d, cost=0.0, cold=False, completion_ms=now + d,
+            failed=True, fail_kind=kind)
+
     def _execute_cloud(self, task: TaskInput, config: str, now: float) -> ExecutionOutcome:
+        f = self.faults
+        if f is not None:
+            # fail-fast faults consume NO draws — mirrored by execute_many
+            if bool(f.outage_mask(config, now)):
+                return self._fault_fast(now, OUTAGE)
+            if bool(f.blackout_mask("upld", config, now)):
+                return self._fault_fast(now, BLACKOUT)
         twin, rngs = self.twin, self.cloud_rngs
         upld = twin.upld_ms(task.bytes, rngs["upld"])
         trigger = now + upld
         cold = self.gt_cloud.probe(config, trigger)
         start = twin.start_ms(cold, rngs["start"])
+        if f is not None and cold:
+            start *= float(f.cold_factor(config, trigger))
         comp = twin.comp_cloud_ms(task.size, float(config), rngs["comp"])
         self.gt_cloud.commit(config, trigger, start + comp)
         store = twin.store_cloud_ms(rngs["store"])
+        if f is not None and bool(
+                f.transient_mask(config, getattr(task, "idx", -1), now)):
+            # the attempt ran its upload/start/compute legs (and bills them);
+            # the result was lost — no store leg, failure detected at crash
+            latency = upld + start + comp
+            return ExecutionOutcome(
+                latency_ms=latency, cost=self.pricing.cost(comp, float(config)),
+                cold=cold, completion_ms=now + latency, exec_ms=start + comp,
+                failed=True, fail_kind=TRANSIENT)
         latency = upld + start + comp + store
         return ExecutionOutcome(
             latency_ms=latency,
@@ -308,16 +360,38 @@ class TwinBackend:
     def _execute_edge(self, task: TaskInput, now: float,
                       device: str | None = None) -> ExecutionOutcome:
         device = device if device is not None else self.edge_name
+        f = self.faults
+        if f is not None and bool(f.outage_mask(device, now)):
+            return self._fault_fast(now, OUTAGE)  # device down: nothing ran
         twin, rngs = self.twin, self.edge_rngs[device]
         comp = twin.comp_edge_ms(task.size, rngs["comp"]) / self.edge_speed[device]
+        if f is not None:
+            comp *= float(f.straggler_factor(device, now))
         start_exec = max(self.edge_free_at[device], now)
         self.edge_free_at[device] = start_exec + comp
         iot = twin.iotup_ms(rngs["iot"])
         store = twin.store_edge_ms(rngs["store"])
-        latency = (start_exec - now) + comp + iot + store
+        wait = start_exec - now
+        if f is not None:
+            # the compute ran (the executor WAS occupied, draws consumed) but
+            # the result never made it back: iot-leg blackout or a transient
+            # crash — failure detected ``detect_ms`` after compute finished
+            if bool(f.blackout_mask("iot", device, now)):
+                kind = BLACKOUT
+            elif bool(f.transient_mask(device, getattr(task, "idx", -1), now)):
+                kind = TRANSIENT
+            else:
+                kind = 0
+            if kind:
+                latency = wait + comp + f.detect_ms
+                return ExecutionOutcome(
+                    latency_ms=latency, cost=0.0, cold=False,
+                    completion_ms=now + latency, queue_wait_ms=wait,
+                    exec_ms=comp, failed=True, fail_kind=kind)
+        latency = wait + comp + iot + store
         return ExecutionOutcome(
             latency_ms=latency, cost=0.0, cold=False, completion_ms=now + latency,
-            queue_wait_ms=start_exec - now, exec_ms=comp,
+            queue_wait_ms=wait, exec_ms=comp,
         )
 
     # --------------------------------------------------- batched leg sampling
@@ -429,10 +503,44 @@ class TwinBackend:
             queue_wait_ms=np.zeros(n), exec_ms=np.empty(n))
         placed = 0
 
+        # fault bookkeeping (None = the exact pre-fault path, zero overhead).
+        # Faults never touch the leg streams: fail-fast dispatches are carved
+        # out BEFORE the block draws (they consume nothing, exactly like the
+        # scalar path returning early), and every other fault is a pure
+        # function of dispatch time / the dedicated counter-based stream.
+        faults = self.faults
+        kind_all = np.zeros(n, dtype=np.int8) if faults is not None else None
+        idx_all = task_arrays(tasks, "i")[0] if faults is not None else None
+
+        def _rows_of(cfgs_list, cfg):
+            return np.array([j for j, c in enumerate(cfgs_list) if c == cfg],
+                            dtype=np.int64)
+
         # ---- cloud: batch the 4 normals per dispatch (upld, start, comp, store)
         nc = ci.shape[0]
+        cfgs: list[str] = [name_of(i) for i in ci.tolist()] if nc else []
+        if nc and faults is not None:
+            cnows = nows[ci]
+            skip = np.zeros(nc, dtype=bool)
+            for cfg in set(cfgs):
+                rows = _rows_of(cfgs, cfg)
+                om = faults.outage_mask(cfg, cnows[rows])
+                bm = faults.blackout_mask("upld", cfg, cnows[rows]) & ~om
+                kind_all[ci[rows[om]]] = OUTAGE
+                kind_all[ci[rows[bm]]] = BLACKOUT
+                skip[rows] = om | bm
+            if skip.any():
+                gi = ci[skip]
+                dms = faults.detect_ms
+                out.latency_ms[gi] = dms
+                out.completion_ms[gi] = nows[gi] + dms
+                out.exec_ms[gi] = 0.0
+                placed += int(np.count_nonzero(skip))
+                keep = ~skip
+                ci = ci[keep]
+                cfgs = [cfgs[j] for j in np.nonzero(keep)[0].tolist()]
+                nc = ci.shape[0]
         if nc:
-            cfgs = [name_of(i) for i in ci.tolist()]
             nbytes = nbytes_all[ci] if nbytes_all is not None \
                 else np.array([tasks[i].bytes for i in ci.tolist()])
             draws = self._cloud_leg_draws(cfgs, scaled[ci], nbytes)
@@ -446,6 +554,13 @@ class TwinBackend:
             # across configs, so grouping preserves each pool's dispatch
             # order; the lifetime draws stay in global dispatch order).
             trigger = nows[ci] + upld
+            if faults is not None and faults.cold_spikes:
+                # cold-start storm: spike windows scale the cold candidate
+                # (judged at the trigger time, like the warm/cold probe)
+                cold_start = cold_start.copy()
+                for cfg in set(cfgs):
+                    rows = _rows_of(cfgs, cfg)
+                    cold_start[rows] *= faults.cold_factor(cfg, trigger[rows])
             trig_l = trigger.tolist()
             comp_l = comp.tolist()
             warm_l = warm_start.tolist()
@@ -513,6 +628,20 @@ class TwinBackend:
                               for b, li, e in zip(busy_l, last_l, exp_l)]
             start = np.asarray(start_l)
             latency = upld + start + comp + store
+            if faults is not None:
+                tmask = np.zeros(nc, dtype=bool)
+                cn = nows[ci]
+                for cfg in set(cfgs):
+                    if faults.transient_p(cfg) <= 0.0:
+                        continue
+                    rows = _rows_of(cfgs, cfg)
+                    tmask[rows] = faults.transient_mask(
+                        cfg, idx_all[ci[rows]], cn[rows])
+                if tmask.any():
+                    # crashed attempts ran upload/start/compute (billed, and
+                    # the container WAS occupied) but never stored a result
+                    latency = latency - store * tmask
+                    kind_all[ci[tmask]] = TRANSIENT
             out.latency_ms[ci] = latency
             out.cost[ci] = draws["cost"]
             out.cold[ci] = was_cold
@@ -526,13 +655,41 @@ class TwinBackend:
             nd = di.shape[0]
             if nd == 0:
                 continue
+            if faults is not None:
+                om = faults.outage_mask(dev, nows[di])
+                if om.any():
+                    # device down: fail fast, no draws, no FIFO occupancy
+                    gi = di[om]
+                    dms = faults.detect_ms
+                    out.latency_ms[gi] = dms
+                    out.completion_ms[gi] = nows[gi] + dms
+                    out.exec_ms[gi] = 0.0
+                    kind_all[gi] = OUTAGE
+                    placed += int(np.count_nonzero(om))
+                    di = di[~om]
+                    nd = di.shape[0]
+                    if nd == 0:
+                        continue
             edraws = self._edge_leg_draws(dev, scaled[di])
             comp, iot, store = edraws["comp"], edraws["iot"], edraws["store"]
             dev_nows = nows[di]
+            if faults is not None:
+                comp = comp * faults.straggler_factor(dev, dev_nows)
             start_exec, free = _fifo_starts(self.edge_free_at[dev], dev_nows, comp)
             self.edge_free_at[dev] = free
             wait = start_exec - dev_nows
             latency = wait + comp + iot + store
+            if faults is not None:
+                bm = faults.blackout_mask("iot", dev, dev_nows)
+                tm = faults.transient_mask(dev, idx_all[di], dev_nows) & ~bm
+                lost = bm | tm
+                if lost.any():
+                    # compute ran (FIFO occupied) but the result never made
+                    # it back — detected ``detect_ms`` after compute finished
+                    latency = np.where(lost, wait + comp + faults.detect_ms,
+                                       latency)
+                    kind_all[di[bm]] = BLACKOUT
+                    kind_all[di[tm]] = TRANSIENT
             out.latency_ms[di] = latency
             out.completion_ms[di] = dev_nows + latency
             out.queue_wait_ms[di] = wait
@@ -540,6 +697,9 @@ class TwinBackend:
             placed += nd
 
         assert placed == n  # every dispatch is either a fleet device or cloud
+        if faults is not None:
+            out.fail_kind = kind_all
+            out.failed = kind_all != 0
         return out
 
     # --------------------------------------------- event-driven virtual clock
@@ -568,6 +728,13 @@ class TwinBackend:
         backends may instead cancel a not-yet-started loser.
         """
         del races  # virtual legs are always drained; the runtime merges
+        if self.faults is not None:
+            # Faults are pure functions of dispatch time and the dedicated
+            # counter-based stream, so the event interleaving cannot change
+            # them — route through execute_many, which is bit-identical by
+            # the same contract that covers unsorted arrivals below. This is
+            # what makes the fault schedule provably path-independent.
+            return self.execute_many(tasks, targets)
         n = len(tasks)
         out = ExecutionBatch(
             latency_ms=np.empty(n), cost=np.zeros(n),
@@ -711,7 +878,10 @@ class PlacementRuntime:
     wrappers over this class.
     """
 
-    def __init__(self, engine: DecisionEngine, backend: ExecutionBackend):
+    def __init__(self, engine: DecisionEngine, backend: ExecutionBackend,
+                 retry: RetryPolicy | None = None,
+                 admission: AdmissionPolicy | None = None,
+                 breaker: CircuitBreaker | None = None):
         self.engine = engine
         self.backend = backend
         self.stream_stats: dict | None = None  # last serve_stream aggregate
@@ -719,6 +889,16 @@ class PlacementRuntime:
         # cloud-only runtimes keep a zeroed queue behind the deprecated
         # ``edge_queue`` alias, matching the attribute's pre-fleet existence
         self._no_edge_queue = PredictedEdgeQueue()
+        # failure-aware serving (see ``repro.core.faults``). All three knobs
+        # default to off, which takes EXACTLY the pre-fault serve paths; with
+        # them set but nothing failing/shedding, the round-0 dispatch is the
+        # identical backend call, so an empty FaultSpec stays bit-identical.
+        self.retry = retry
+        self.admission = admission
+        self.health = TargetHealth(breaker) if breaker is not None else None
+        self._failure_aware = (retry is not None or admission is not None
+                               or breaker is not None)
+        self._pre_horizons: dict[str, float] | None = None
 
     @property
     def edge_name(self) -> str:
@@ -750,6 +930,7 @@ class PlacementRuntime:
         twin's batched sampler is bit-identical to its sequential one.
         """
         if batched:
+            self._snapshot_horizons()
             decisions = self.engine.place_many(tasks, edge_queues=self.edge_queues)
             records = self._execute_decisions(tasks, decisions)
         else:
@@ -844,6 +1025,7 @@ class PlacementRuntime:
                 try:
                     if force_walk:
                         eng.columnar = False
+                    self._snapshot_horizons()
                     decisions = eng.place_many(
                         chunk, edge_queues=self.edge_queues)
                 finally:
@@ -881,9 +1063,14 @@ class PlacementRuntime:
         ``serve(batched=True)`` — asserted in tests; backends without an
         ``execute_async`` driver serve the same plan synchronously.
         """
+        self._snapshot_horizons()
         decisions = self.engine.place_many(tasks, edge_queues=self.edge_queues)
         run = getattr(self.backend, "execute_async", None)
-        if run is None:
+        if run is None or (self._failure_aware
+                           and isinstance(decisions, DecisionBatch)):
+            # the failure-aware driver issues the identical dispatch rounds
+            # from every serve path (the twin's async driver routes faulted
+            # runs through execute_many anyway — see ``execute_async``)
             records = self._execute_decisions(tasks, decisions)
         elif isinstance(decisions, DecisionBatch):
             eb = run(tasks, decisions
@@ -993,6 +1180,8 @@ class PlacementRuntime:
         per-record path unchanged.
         """
         if isinstance(decisions, DecisionBatch):
+            if self._failure_aware:
+                return self._execute_failure_aware(tasks, decisions)
             if hasattr(self.backend, "execute_many"):
                 eb = self.backend.execute_many(
                     tasks, decisions
@@ -1009,6 +1198,307 @@ class PlacementRuntime:
         d_tasks, d_targets, _ = self._hedge_plan(tasks, decisions)
         outcomes = self.backend.execute_many(d_tasks, d_targets)
         return self._merge_hedged_outcomes(tasks, decisions, outcomes)
+
+    # ------------------------------------------------- failure-aware serving
+    def _snapshot_horizons(self) -> None:
+        """Snapshot the predicted edge horizons right before ``place_many``
+        so an admission shed can unwind the queue pushes its placements made
+        (``_rollback_shed``). No-op unless admission control is configured."""
+        if self.admission is not None:
+            self._pre_horizons = {
+                n: q.horizon_ms for n, q in self.edge_queues.items()}
+
+    def _rollback_shed(self, tasks, d: DecisionBatch, shed: np.ndarray) -> None:
+        """Unwind the decision-state side effects of shed placements.
+
+        Surplus bank: the policy's ``observe`` banked ``c_max - cost`` for
+        every placement; shed rows never execute, so their contributions are
+        removed. Predicted edge horizons: restored to the pre-placement
+        snapshot, then the SURVIVING edge pushes are replayed in arrival
+        order — exactly the horizons a placement pass over the surviving set
+        would have left. CIL reservations of shed rows are left to expire
+        (conservative: the predictor may see phantom warmth for one idle
+        window; a reservation never makes a later prediction worse than the
+        truth by more than a warm/cold misjudgement).
+        """
+        pol = self.engine.policy
+        if hasattr(pol, "surplus") and hasattr(pol, "c_max"):
+            pol.surplus -= float(np.sum(pol.c_max - d.cost[shed]))
+        if self._pre_horizons is None:
+            return
+        _, nows, _, _ = task_arrays(tasks, "a")
+        for name, q in self.edge_queues.items():
+            if name in self._pre_horizons:
+                q.horizon_ms = self._pre_horizons[name]
+        codes = d.target_codes
+        replay = np.nonzero(~shed & (codes >= d.n_cloud))[0]
+        for i in replay.tolist():
+            q = self.edge_queues.get(d.names[int(codes[i])])
+            if q is not None:
+                q.push(float(nows[i]), float(d.comp_ms[i]))
+
+    def _failover_place(self, task: TaskInput, now: float,
+                        tried: set) -> "tuple[str, Prediction] | None":
+        """Re-place a failed task at failure-detection time ``now``: re-enter
+        the prediction pass against live CIL/queue state, mask the targets
+        already tried plus any open circuits, and let the policy choose among
+        the survivors (``failover_choice``). Applies the same decision-state
+        accounting a placement does — surplus billed for the extra leg (the
+        hedge precedent: an extra execution leg debits the bank), CIL
+        reservation, predicted edge-queue push. Returns ``None`` when no
+        surviving target remains."""
+        eng = self.engine
+        waits = {n: q.wait_ms(now) for n, q in self.edge_queues.items()}
+        preds = eng.predictor.predict(task, now, edge_waits=waits)
+        exclude = set(tried)
+        h = self.health
+        if h is not None:
+            for nm in preds:
+                if nm not in exclude and h.would_fail_fast(nm, now):
+                    exclude.add(nm)
+        choice = failover_choice(eng.policy, preds, exclude,
+                                 self.edge_names, waits)
+        if choice is None:
+            return None
+        name, pred = choice
+        pol = eng.policy
+        if hasattr(pol, "surplus"):
+            pol.surplus -= pred.cost
+        eng.predictor.update_cil(name, now, pred)
+        if name in self.edge_queues:
+            self.edge_queues[name].push(now, pred.comp_ms)
+        return name, pred
+
+    def _dispatch_rows(self, sub_tasks, targets) -> ExecutionBatch:
+        """One dispatch round against the backend, normalized to columns.
+        ``targets`` is whatever the backend's batched driver eats (a target
+        list, or the full ``DecisionBatch`` on the round-0 fast path);
+        per-task backends run the same round as sequential ``execute`` calls
+        — the retry/timeout contract is identical either way."""
+        em = getattr(self.backend, "execute_many", None)
+        if em is not None:
+            eb = em(sub_tasks, targets)
+            if isinstance(eb, ExecutionBatch):
+                return eb
+            outs = list(eb)
+        else:
+            tl = targets if isinstance(targets, list) else targets.target_list()
+            outs = [self.backend.execute(t, tg, t.arrival_ms)
+                    for t, tg in zip(sub_tasks, tl)]
+        return ExecutionBatch(
+            latency_ms=np.array([o.latency_ms for o in outs]),
+            cost=np.array([o.cost for o in outs]),
+            cold=np.array([o.cold for o in outs], dtype=bool),
+            completion_ms=np.array([o.completion_ms for o in outs]),
+            queue_wait_ms=np.array([o.queue_wait_ms for o in outs]),
+            exec_ms=np.array([o.exec_ms for o in outs]),
+            failed=np.array([getattr(o, "failed", False) for o in outs],
+                            dtype=bool),
+            fail_kind=np.array([getattr(o, "fail_kind", 0) for o in outs],
+                               dtype=np.int64))
+
+    @staticmethod
+    def _after_failure(pending: list, i: int, task: TaskInput, nm: str,
+                       tf: float, attempts: int, tried: set, arrival: float,
+                       kind: int, rp: RetryPolicy,
+                       f_fail, f_comp, f_lat) -> None:
+        """Route one failed dispatch: transient failures retry the SAME
+        target after exponential backoff; fail-fast kinds (outage, blackout,
+        breaker) fail over immediately at detection time; attempts exhausted
+        or the failure detected past the timeout → permanent failure (the
+        record keeps every attempted leg's cost, latency = give-up time)."""
+        if attempts < rp.max_attempts and tf - arrival < rp.timeout_ms:
+            if kind == TRANSIENT:
+                pending.append([i, task, nm, tf + rp.backoff_for(attempts),
+                                attempts, tried, arrival])
+                return
+            if rp.failover:
+                pending.append([i, task, None, tf, attempts, tried, arrival])
+                return
+        f_fail[i] = True
+        f_comp[i] = tf
+        f_lat[i] = tf - arrival
+
+    def _execute_failure_aware(self, tasks, d: DecisionBatch) -> RecordBatch:
+        """The failure-aware batched driver: admission shed → round-0
+        dispatch → retry / failover rounds, all on the virtual clock.
+
+        Round 0 with nothing shed and no open circuit is the IDENTICAL
+        backend call the plain batched path makes (the whole task container
+        and ``DecisionBatch`` go straight to ``execute_many``), so an empty
+        ``FaultSpec`` stays bit-identical per record with retry / admission /
+        breaker configured. Every serve path (one-shot, streaming chunks,
+        event-driven) funnels through this one driver, so the fault
+        schedule, retry times, failover placements and shed set are
+        identical across paths at a fixed chunking.
+
+        Breaker health is evaluated against state as of the start of the
+        batch and advanced in dispatch order within it — at round
+        granularity, deterministically. Pending retries sort by (dispatch
+        time, row) each round; failover placements resolve in that order
+        against live CIL / queue state.
+        """
+        n = len(d)
+        rp = self.retry if self.retry is not None else RetryPolicy()
+        tiers = task_tiers(tasks)
+        _, arrivals, _, _ = task_arrays(tasks, "a")
+        names = d.names
+        code_of = {nm: c for c, nm in enumerate(names)}
+        codes = d.target_codes
+
+        # --- SLO-tiered admission: shed sheddable rows whose predicted
+        # latency blows the tier budget, then unwind their placement state
+        shed = np.zeros(n, dtype=bool)
+        if self.admission is not None:
+            shed = self.admission.shed_mask(tiers, d.latency_ms)
+            if shed.any():
+                self._rollback_shed(tasks, d, shed)
+
+        # final per-row outcome columns; shed rows keep the zeroed defaults
+        # (bill nothing, complete at arrival, zero attempts)
+        f_lat = np.zeros(n)
+        f_cost = np.zeros(n)
+        f_cold = np.zeros(n, dtype=bool)
+        f_comp = np.asarray(arrivals, dtype=np.float64).copy()
+        f_qw = np.zeros(n)
+        f_ex = np.zeros(n)
+        f_code = codes.astype(np.int64, copy=True)
+        f_att = np.zeros(n, dtype=np.int64)
+        f_fail = np.zeros(n, dtype=bool)
+
+        # --- circuit breaker: dispatches to open targets fail fast at
+        # arrival (no draws, no occupancy) and go straight to failover
+        health = self.health
+        pending: list[list] = []  # [row, task, target|None, t, attempts, tried, arrival]
+        blocked = np.zeros(n, dtype=bool)
+        if health is not None and health.any_open():
+            for i in range(n):
+                if shed[i]:
+                    continue
+                nm = names[int(codes[i])]
+                if health.is_open(nm, float(arrivals[i])):
+                    blocked[i] = True
+                    t0 = float(arrivals[i])
+                    if rp.failover:
+                        pending.append([i, tasks[i], None, t0, 0, {nm}, t0])
+                    else:
+                        f_fail[i] = True
+
+        # --- round 0: the surviving placements, dispatched exactly like the
+        # plain batched path (full batch = the identical backend call)
+        skip = shed | blocked
+        live = np.nonzero(~skip)[0]
+        eb = None
+        if live.size == n:
+            eb = self._dispatch_rows(
+                tasks, d
+                if getattr(self.backend, "accepts_decision_batch", False)
+                else d.target_list())
+        elif live.size:
+            sub_tasks = [tasks[int(i)] for i in live]
+            sub_targets = [names[int(codes[i])] for i in live]
+            eb = self._dispatch_rows(sub_tasks, sub_targets)
+        if eb is not None:
+            f_lat[live] = eb.latency_ms
+            f_cost[live] = eb.cost
+            f_cold[live] = eb.cold
+            f_comp[live] = eb.completion_ms
+            f_qw[live] = eb.queue_wait_ms
+            f_ex[live] = eb.exec_ms
+            f_att[live] = 1
+
+        fmask = eb.failed if eb is not None else None
+        any_failed = fmask is not None and bool(fmask.any())
+        if eb is not None and (any_failed
+                               or (health is not None and health.dirty())):
+            # walk round-0 outcomes in dispatch order: health bookkeeping +
+            # retry/failover scheduling for the failed rows
+            kinds = eb.fail_kind
+            for j, i in enumerate(live.tolist()):
+                nm = names[int(codes[i])]
+                if fmask is not None and fmask[j]:
+                    tf = float(eb.completion_ms[j])
+                    if health is not None:
+                        health.record_failure(nm, tf)
+                    kind = int(kinds[j]) if kinds is not None else TRANSIENT
+                    self._after_failure(pending, i, tasks[i], nm, tf, 1,
+                                        {nm}, float(arrivals[i]), kind, rp,
+                                        f_fail, f_comp, f_lat)
+                elif health is not None:
+                    health.record_success(nm)
+
+        # --- retry / failover rounds (bounded by rp.max_attempts)
+        while pending:
+            pending.sort(key=lambda p: (p[3], p[0]))
+            ready = []
+            for p in pending:
+                if p[2] is None:
+                    choice = self._failover_place(p[1], p[3], p[5])
+                    if choice is None:
+                        f_fail[p[0]] = True
+                        f_comp[p[0]] = p[3]
+                        f_lat[p[0]] = p[3] - p[6]
+                        continue
+                    p[2] = choice[0]
+                ready.append(p)
+            if not ready:
+                break
+            sub_tasks = [TaskInput(idx=p[1].idx, arrival_ms=p[3],
+                                   size=p[1].size, bytes=p[1].bytes,
+                                   tier=getattr(p[1], "tier", 0))
+                         for p in ready]
+            reb = self._dispatch_rows(sub_tasks, [p[2] for p in ready])
+            pending = []
+            for j, p in enumerate(ready):
+                i, nm = p[0], p[2]
+                p[5].add(nm)
+                p[4] += 1
+                f_att[i] += 1
+                f_cost[i] += float(reb.cost[j])
+                f_ex[i] += float(reb.exec_ms[j])
+                failed = bool(reb.failed[j]) if reb.failed is not None else False
+                if not failed:
+                    if health is not None:
+                        health.record_success(nm)
+                    f_fail[i] = False
+                    f_code[i] = code_of.get(nm, f_code[i])
+                    f_cold[i] = bool(reb.cold[j])
+                    f_comp[i] = float(reb.completion_ms[j])
+                    f_lat[i] = f_comp[i] - p[6]
+                    f_qw[i] = float(reb.queue_wait_ms[j])
+                    continue
+                tf = float(reb.completion_ms[j])
+                if health is not None:
+                    health.record_failure(nm, tf)
+                kind = int(reb.fail_kind[j]) if reb.fail_kind is not None \
+                    else TRANSIENT
+                self._after_failure(pending, i, p[1], nm, tf, p[4], p[5],
+                                    p[6], kind, rp, f_fail, f_comp, f_lat)
+
+        return RecordBatch(
+            tasks=tasks,
+            target_codes=f_code,
+            target_names=names,
+            predicted_latency_ms=d.latency_ms,
+            predicted_cost=d.cost,
+            actual_latency_ms=f_lat,
+            actual_cost=f_cost,
+            predicted_cold=d.cold,
+            actual_cold=f_cold,
+            allowed_cost=d.allowed_cost,
+            feasible=d.feasible,
+            completion_ms=f_comp,
+            hedged=np.zeros(n, dtype=bool),
+            queue_wait_ms=f_qw,
+            exec_ms=f_ex,
+            hedge_codes=np.full(n, -1, dtype=np.int64),
+            hedge_exec_ms=np.zeros(n),
+            task_idx=d.task_idx,
+            shed=shed,
+            failed=f_fail,
+            attempts=f_att,
+            tier=tiers,
+        )
 
     def _record_batch(self, tasks: list[TaskInput], d: DecisionBatch,
                       eb: ExecutionBatch) -> RecordBatch:
@@ -1033,6 +1523,9 @@ class PlacementRuntime:
             hedge_codes=np.full(n, -1, dtype=np.int64),
             hedge_exec_ms=np.zeros(n),
             task_idx=d.task_idx,
+            failed=eb.failed,
+            tier=tasks.tier if isinstance(tasks, TaskChunk)
+            else task_tiers(tasks),
         )
 
     def _run_decision(self, task: TaskInput, d: PlacementDecision) -> TaskRecord:
@@ -1054,22 +1547,50 @@ class PlacementRuntime:
         it ever started (live only): it ran nowhere and bills nothing, so the
         primary's actuals stand alone — the *predicted* merge still reflects
         the decision-time expectation of racing both legs.
+
+        Failed legs (fault injection) never win the race: a crashed primary
+        falls to a surviving duplicate — the record reports the duplicate's
+        target and actuals with the primary as the hedge leg — and a crashed
+        duplicate leaves the primary standing; either way BOTH legs bill
+        what they actually ran. Both crashed → a failed record on the
+        primary, its failure-detection time as completion.
         """
         backup = d.hedge_prediction
+        p_failed = rec.failed
+        h_failed = (not cancelled) and bool(getattr(dup, "failed", False))
+        p_lat = min(rec.predicted_latency_ms, backup.latency_ms)
+        p_cost = rec.predicted_cost + backup.cost
+        both_cost = rec.actual_cost + (0.0 if cancelled else dup.cost)
+        if p_failed and not h_failed and not cancelled:
+            # race resolved to the surviving duplicate
+            return TaskRecord(
+                task=task, target=d.hedge_target,
+                predicted_latency_ms=p_lat, predicted_cost=p_cost,
+                actual_latency_ms=dup.latency_ms, actual_cost=both_cost,
+                predicted_cold=rec.predicted_cold, actual_cold=dup.cold,
+                allowed_cost=rec.allowed_cost, feasible=rec.feasible,
+                completion_ms=dup.completion_ms, hedged=True,
+                queue_wait_ms=dup.queue_wait_ms, exec_ms=dup.exec_ms,
+                hedge_target=rec.target, hedge_exec_ms=rec.exec_ms,
+                tier=rec.tier,
+            )
+        alive = not p_failed and not h_failed and not cancelled
         return TaskRecord(
             task=task, target=rec.target,
-            predicted_latency_ms=min(rec.predicted_latency_ms, backup.latency_ms),
-            predicted_cost=rec.predicted_cost + backup.cost,
-            actual_latency_ms=rec.actual_latency_ms if cancelled
-            else min(rec.actual_latency_ms, dup.latency_ms),
-            actual_cost=rec.actual_cost + (0.0 if cancelled else dup.cost),
+            predicted_latency_ms=p_lat,
+            predicted_cost=p_cost,
+            actual_latency_ms=min(rec.actual_latency_ms, dup.latency_ms)
+            if alive else rec.actual_latency_ms,
+            actual_cost=both_cost,
             predicted_cold=rec.predicted_cold, actual_cold=rec.actual_cold,
             allowed_cost=rec.allowed_cost, feasible=rec.feasible,
-            completion_ms=rec.completion_ms if cancelled
-            else min(rec.completion_ms, dup.completion_ms), hedged=True,
+            completion_ms=min(rec.completion_ms, dup.completion_ms)
+            if alive else rec.completion_ms, hedged=True,
             queue_wait_ms=rec.queue_wait_ms, exec_ms=rec.exec_ms,
             hedge_target=d.hedge_target,
             hedge_exec_ms=0.0 if cancelled else dup.exec_ms,
+            failed=p_failed and (cancelled or h_failed),
+            tier=rec.tier,
         )
 
     def _record(self, task: TaskInput, d: PlacementDecision, target: str,
@@ -1082,4 +1603,6 @@ class PlacementRuntime:
             allowed_cost=d.allowed_cost, feasible=d.feasible,
             completion_ms=out.completion_ms,
             queue_wait_ms=out.queue_wait_ms, exec_ms=out.exec_ms,
+            failed=bool(getattr(out, "failed", False)),
+            tier=getattr(task, "tier", 0),
         )

@@ -38,6 +38,7 @@ class TaskInput:
     size: float   # model feature: pixels (IR/FD) or bytes (STT) or tokens (LLM)
     bytes: float  # payload size for network transfer
     meta: dict = field(default_factory=dict)
+    tier: int = 0  # SLO class (0 = highest) — admission control, see core.faults
 
 
 @dataclass(eq=False)
@@ -54,15 +55,24 @@ class TaskChunk(Sequence):
     arrival_ms: np.ndarray  # (n,) float64
     size: np.ndarray        # (n,) float64
     bytes: np.ndarray       # (n,) float64
+    tier: np.ndarray | None = None  # (n,) int64 SLO class; None = all tier 0
 
     @classmethod
     def from_tasks(cls, tasks: Sequence[TaskInput]) -> "TaskChunk":
+        tiers = np.array([getattr(t, "tier", 0) for t in tasks], dtype=np.int64)
         return cls(
             idx=np.array([t.idx for t in tasks], dtype=np.int64),
             arrival_ms=np.array([t.arrival_ms for t in tasks], dtype=np.float64),
             size=np.array([t.size for t in tasks], dtype=np.float64),
             bytes=np.array([t.bytes for t in tasks], dtype=np.float64),
+            tier=tiers if tiers.any() else None,
         )
+
+    def tier_codes(self) -> np.ndarray:
+        """The SLO-class column, materialized (zeros when untiered)."""
+        if self.tier is not None:
+            return self.tier
+        return np.zeros(len(self), dtype=np.int64)
 
     def __len__(self) -> int:
         return self.arrival_ms.shape[0]
@@ -73,14 +83,28 @@ class TaskChunk(Sequence):
     def __getitem__(self, i):
         if isinstance(i, slice):
             return TaskChunk(idx=self.idx[i], arrival_ms=self.arrival_ms[i],
-                             size=self.size[i], bytes=self.bytes[i])
+                             size=self.size[i], bytes=self.bytes[i],
+                             tier=None if self.tier is None else self.tier[i])
         i = int(i)
         return TaskInput(idx=int(self.idx[i]), arrival_ms=float(self.arrival_ms[i]),
-                         size=float(self.size[i]), bytes=float(self.bytes[i]))
+                         size=float(self.size[i]), bytes=float(self.bytes[i]),
+                         tier=int(self.tier[i]) if self.tier is not None else 0)
 
     def __iter__(self) -> Iterator[TaskInput]:
         for i in range(len(self)):
             yield self[i]
+
+
+def task_tiers(tasks) -> np.ndarray:
+    """The SLO-class column of any task container (int64, 0 = highest).
+
+    ``TaskChunk`` hands back its (possibly synthesized) tier column; task
+    lists gather the per-object ``tier`` attribute. Used by the runtime's
+    admission-control pass (``repro.core.faults.AdmissionPolicy``).
+    """
+    if isinstance(tasks, TaskChunk):
+        return tasks.tier_codes()
+    return np.array([getattr(t, "tier", 0) for t in tasks], dtype=np.int64)
 
 
 def first_disorder(arrival_ms) -> int:

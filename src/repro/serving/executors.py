@@ -437,18 +437,41 @@ class ExecutorPool:
             for d in rows:
                 run_one(d)
 
-        threads = [threading.Thread(target=worker, args=(rows,), daemon=True)
-                   for rows in by_target.values()]
-        for t in threads:
+        threads = {target: threading.Thread(target=worker, args=(rows,),
+                                            daemon=True)
+                   for target, rows in by_target.items()}
+        for t in threads.values():
             t.start()
+        expected = {target: len(rows) for target, rows in by_target.items()}
+        received = {target: 0 for target in by_target}
+        target_of = {d.idx: d.target for d in plan}
         failure: BaseException | None = None
-        for _ in range(len(plan)):
-            idx, rec = done.get()
+        pending = len(plan)
+        while pending:
+            try:
+                idx, rec = done.get(timeout=1.0)
+            except queue_mod.Empty:
+                # no completion in a full second: if a dispatcher thread died
+                # without reporting all its rows, waiting any longer would
+                # hang forever — name the dead worker instead
+                dead = [target for target, t in threads.items()
+                        if not t.is_alive()
+                        and received[target] < expected[target]]
+                if dead and done.empty():
+                    raise RuntimeError(
+                        f"dispatcher thread for target {dead[0]!r} died after "
+                        f"{received[dead[0]]}/{expected[dead[0]]} completions "
+                        f"({pending} dispatches still outstanding); the "
+                        f"executor worker crashed outside a dispatch — check "
+                        f"stderr for its traceback") from None
+                continue
+            pending -= 1
+            received[target_of[idx]] += 1
             if isinstance(rec, BaseException):
                 failure = failure or rec
             else:
                 results[idx] = rec
-        for t in threads:
+        for t in threads.values():
             t.join()
         if failure is not None:
             raise failure

@@ -49,6 +49,7 @@ from repro.core.records import (  # noqa: F401 — re-export
     SimulationResult,
     TaskRecord,
 )
+from repro.core.faults import TRANSIENT, AdmissionPolicy, CircuitBreaker, RetryPolicy
 from repro.core.runtime import ExecutionBatch, ExecutionOutcome, PlacementRuntime
 from repro.core.workload import PoissonWorkload, TaskInput
 from repro.serving.executors import (
@@ -308,10 +309,18 @@ class LiveBackend:
     """
 
     def __init__(self, pool: ExecutorPool, pricing: SlicePricing,
-                 edge_name: str = EDGE):
+                 edge_name: str = EDGE, map_failures: bool = False,
+                 detect_ms: float = 5.0):
         self.pool = pool
         self.pricing = pricing
         self.edge_name = edge_name
+        # failure-aware serving contract (see ``repro.core.faults``): with
+        # ``map_failures`` on, a dispatch that raises comes back as a FAILED
+        # ``ExecutionOutcome`` (transient, retryable) instead of propagating,
+        # so ``PlacementRuntime``'s retry / failover / breaker loop drives
+        # real executor errors exactly like the twin's injected ones.
+        self.map_failures = map_failures
+        self.detect_ms = detect_ms
 
     @property
     def edge_names(self) -> tuple[str, ...]:
@@ -321,6 +330,18 @@ class LiveBackend:
         return self.pool.probe_cold(target, now)
 
     def execute(self, task: TaskInput, target: str, now: float) -> ExecutionOutcome:
+        if not self.map_failures:
+            return self._execute_raw(task, target, now)
+        try:
+            return self._execute_raw(task, target, now)
+        except Exception:
+            return ExecutionOutcome(
+                latency_ms=self.detect_ms, cost=0.0, cold=False,
+                completion_ms=now + self.detect_ms,
+                failed=True, fail_kind=TRANSIENT)
+
+    def _execute_raw(self, task: TaskInput, target: str,
+                     now: float) -> ExecutionOutcome:
         if target in self.pool.edges:
             rec = self.pool.execute_edge(int(task.size), task.bytes, now,
                                          device=target)
@@ -381,7 +402,10 @@ def make_live_runtime(cat: SliceCatalog, policy: Policy,
                       t_idl_ms: float = 120_000.0,
                       quantile: float | None = None,
                       n_edge_devices: int = 1,
-                      network: NetworkProfile | None = None) -> PlacementRuntime:
+                      network: NetworkProfile | None = None,
+                      retry: RetryPolicy | None = None,
+                      admission: AdmissionPolicy | None = None,
+                      breaker: CircuitBreaker | None = None) -> PlacementRuntime:
     """Wire a calibrated catalog into the unified serve loop: catalog →
     Predictor → DecisionEngine → ``PlacementRuntime`` over a ``LiveBackend``.
 
@@ -393,7 +417,14 @@ def make_live_runtime(cat: SliceCatalog, policy: Policy,
     device and per cloud config), overlapping real executions across the
     fleet. ``network`` switches on the emulated WAN legs (upload / IoT
     result-upload as real wall-clock waits) — the latency the async driver
-    overlaps with compute."""
+    overlaps with compute.
+
+    ``retry`` / ``admission`` / ``breaker`` switch on failure-aware serving
+    (``repro.core.faults``): real executor exceptions come back as failed,
+    retryable outcomes and the runtime retries / fails over / sheds with the
+    exact same driver the twin uses. The failure-aware live driver dispatches
+    sequentially (the retry loop needs each outcome before scheduling the
+    next attempt); use the plain runtime for maximum-overlap serving."""
     edge_specs = [SliceSpec(name, chips=EDGE_SPEC.chips,
                             tokens_per_step=EDGE_SPEC.tokens_per_step,
                             is_edge=True)
@@ -403,7 +434,10 @@ def make_live_runtime(cat: SliceCatalog, policy: Policy,
     predictor = build_slice_predictor(cat, t_idl_ms=t_idl_ms, quantile=quantile,
                                       n_edge_devices=n_edge_devices)
     engine = DecisionEngine(predictor=predictor, policy=policy, edge_name=EDGE)
-    return PlacementRuntime(engine=engine, backend=LiveBackend(pool, cat.pricing))
+    backend = LiveBackend(pool, cat.pricing,
+                          map_failures=retry is not None or breaker is not None)
+    return PlacementRuntime(engine=engine, backend=backend, retry=retry,
+                            admission=admission, breaker=breaker)
 
 
 # --------------------------------------------------------------- live server

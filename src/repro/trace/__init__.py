@@ -23,6 +23,7 @@ from repro.trace.replay import (
     TraceWorkload,
     capture,
     capture_sharded,
+    fault_spec_of,
     trace_shards,
 )
 
@@ -35,6 +36,7 @@ __all__ = [
     "TraceWorkload",
     "capture",
     "capture_sharded",
+    "fault_spec_of",
     "load",
     "load_jsonl",
     "load_npz",

@@ -25,6 +25,7 @@ from typing import Callable, Iterator, Mapping
 
 import numpy as np
 
+from repro.core.faults import FaultSpec
 from repro.core.multiapp import AppShard, ShardedResult
 from repro.core.records import RecordBatch, SimulationResult
 from repro.core.runtime import PlacementRuntime
@@ -89,7 +90,8 @@ class TraceWorkload:
 
 
 def capture(result: "SimulationResult | RecordBatch", app: str = "app",
-            observed: bool = True, meta: dict | None = None) -> Trace:
+            observed: bool = True, meta: dict | None = None,
+            faults: "FaultSpec | None" = None) -> Trace:
     """A served run back out as a single-app ``Trace``.
 
     Reads the record batch's arrival and input-feature columns — present when
@@ -99,9 +101,18 @@ def capture(result: "SimulationResult | RecordBatch", app: str = "app",
     error naming both fixes. ``observed=True`` stores the run's actual
     latencies as ``observed_latency_ms``, so a replay can be compared against
     what the captured run saw.
+
+    ``faults`` embeds the run's ``FaultSpec`` in the trace meta (under
+    ``"fault_spec"``), so a chaos run is replayable with its exact fault
+    schedule: ``fault_spec_of(trace)`` reconstructs the spec on the way back
+    in, and the counter-based fault streams make the schedule a pure function
+    of (spec, dispatch times) — identical on replay.
     """
     rb = result.records if isinstance(result, SimulationResult) else result
     size, nbytes = rb.input_arrays()
+    if faults is not None:
+        meta = dict(meta or {})
+        meta["fault_spec"] = faults.to_json()
     return Trace.from_arrays(
         np.array(rb.arrival_ms, dtype=np.float64, copy=True),
         np.array(size, dtype=np.float64, copy=True),
@@ -111,6 +122,16 @@ def capture(result: "SimulationResult | RecordBatch", app: str = "app",
         if observed else None,
         meta=meta,
     )
+
+
+def fault_spec_of(trace: Trace) -> "FaultSpec | None":
+    """The ``FaultSpec`` a chaos capture embedded in ``trace.meta``, or
+    ``None`` for traces captured without one. The inverse of
+    ``capture(..., faults=spec)`` — survives the JSONL/NPZ round trip."""
+    payload = (trace.meta or {}).get("fault_spec")
+    if payload is None:
+        return None
+    return FaultSpec.from_json(payload)
 
 
 def capture_sharded(sharded: ShardedResult, observed: bool = True) -> Trace:

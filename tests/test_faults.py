@@ -1,0 +1,478 @@
+"""Chaos twin + failure-aware serving (ISSUE 8).
+
+Covers:
+- ``FaultSpec`` construction validation: overlapping windows rejected with
+  the offending entry indexed, bad probabilities / factors / legs named;
+- the counter-based fault stream: deterministic, vectorization-invariant,
+  per-target independent;
+- the EMPTY-SPEC PARITY guarantee: with retry / breaker / admission
+  configured but an empty ``FaultSpec``, every serve path is bit-identical
+  per record to the plain pre-fault runtime (MinCost and MinLatency, one- and
+  three-device fleets, multiple chunk sizes) — plus the hypothesis property;
+- failure-path accounting on ``RecordBatch`` columns: retried / failed-over
+  tasks bill every attempted leg, shed tasks bill nothing, permanent
+  failures carry their attempts and give-up time;
+- hedged races with a crashed winner fall to the surviving loser;
+- circuit breaker open/half-open behavior through the serve loop;
+- cross-run and cross-path determinism of the whole failure schedule;
+- fault-schedule capture into a trace and back (``fault_spec_of``);
+- ``serve_concurrent`` raising an actionable error naming a dead dispatcher
+  instead of hanging forever.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:  # gated, not required: the container may not ship it
+    HAVE_HYPOTHESIS = False
+
+from repro.core.decision import (
+    DecisionEngine,
+    HedgedPolicy,
+    MinCostPolicy,
+    MinLatencyPolicy,
+    PlacementDecision,
+)
+from repro.core.faults import (
+    TRANSIENT,
+    AdmissionPolicy,
+    Blackout,
+    CircuitBreaker,
+    ColdSpike,
+    FaultError,
+    FaultSpec,
+    OutageWindow,
+    RetryPolicy,
+    SLOTier,
+    Straggler,
+    TargetHealth,
+    TransientErrors,
+    fault_uniform,
+)
+from repro.core.fit import build_fleet_predictor, fit_app
+from repro.core.predictor import Prediction
+from repro.core.runtime import ExecutionOutcome, PlacementRuntime, TwinBackend
+from repro.core.workload import TaskInput
+from repro.trace.replay import capture, fault_spec_of
+
+CONFIGS = (1280, 1536, 1792)
+FLEET3 = {"edge0": 1.0, "edge1": 1.0, "edge2": 0.6}
+FLEET1 = {"edge0": 1.0}
+
+RECORD_COLS = ("actual_latency_ms", "actual_cost", "completion_ms",
+               "target_codes", "queue_wait_ms", "exec_ms", "predicted_cost",
+               "predicted_latency_ms", "attempts", "failed", "shed")
+
+
+@pytest.fixture(scope="module")
+def fd_setup():
+    return fit_app("FD", seed=0, n_inputs=120, configs=CONFIGS)
+
+
+def _runtime(twin, models, fleet, policy=None, faults=None, retry=None,
+             admission=None, breaker=None, seed=11):
+    pred = build_fleet_predictor(models, dict(fleet), configs=CONFIGS)
+    policy = policy or MinLatencyPolicy(c_max=2.97e-5, alpha=0.02)
+    eng = DecisionEngine(predictor=pred, policy=policy)
+    backend = TwinBackend(twin, seed=seed, edge_names=tuple(fleet),
+                          edge_speed=dict(fleet), faults=faults)
+    return PlacementRuntime(eng, backend, retry=retry, admission=admission,
+                            breaker=breaker)
+
+
+def _assert_records_equal(a, b, cols=RECORD_COLS):
+    for col in cols:
+        assert np.array_equal(getattr(a.records, col),
+                              getattr(b.records, col)), col
+
+
+# ------------------------------------------------------------ spec validation
+def test_overlapping_outage_windows_rejected():
+    with pytest.raises(FaultError, match=r"outages\[1\].*overlaps.*outages\[0\]"):
+        FaultSpec(outages=[OutageWindow("edge0", 0.0, 100.0),
+                           OutageWindow("edge0", 50.0, 200.0)])
+
+
+def test_disjoint_windows_and_other_targets_ok():
+    spec = FaultSpec(outages=[OutageWindow("edge0", 0.0, 100.0),
+                              OutageWindow("edge0", 100.0, 200.0),
+                              OutageWindow("edge1", 50.0, 150.0)])
+    assert spec.outage_mask("edge0", [50.0, 150.0, 250.0]).tolist() == \
+        [True, True, False]
+    assert spec.outage_mask("edge1", [50.0]).tolist() == [True]
+    assert spec.outage_mask("missing", [50.0]).tolist() == [False]
+
+
+def test_empty_window_rejected_with_index():
+    with pytest.raises(FaultError, match=r"outages\[0\].*empty window"):
+        FaultSpec(outages=[OutageWindow("edge0", 100.0, 100.0)])
+    with pytest.raises(FaultError, match=r"stragglers\[1\].*start_ms"):
+        FaultSpec(stragglers=[Straggler("edge0", 0.0, 1.0, 2.0),
+                              Straggler("edge0", -5.0, 1.0, 2.0)])
+
+
+def test_bad_probability_and_factor_rejected():
+    with pytest.raises(FaultError, match=r"transient\[0\].*\[0, 1\]"):
+        FaultSpec(transient=[TransientErrors("1792", 1.5)])
+    with pytest.raises(FaultError, match=r"cold_spikes\[0\].*positive"):
+        FaultSpec(cold_spikes=[ColdSpike("1792", 0.0, 1.0, -2.0)])
+    with pytest.raises(FaultError, match=r"blackouts\[0\].*unknown network leg"):
+        FaultSpec(blackouts=[Blackout("warp", 0.0, 1.0)])
+    with pytest.raises(FaultError, match="detect_ms"):
+        FaultSpec(detect_ms=-1.0)
+
+
+def test_retry_and_breaker_validation():
+    with pytest.raises(FaultError, match="max_attempts"):
+        RetryPolicy(max_attempts=0)
+    with pytest.raises(FaultError, match="backoff_mult"):
+        RetryPolicy(backoff_mult=0.5)
+    with pytest.raises(FaultError, match="threshold"):
+        CircuitBreaker(threshold=0)
+    with pytest.raises(FaultError, match="deadline_ms"):
+        SLOTier(deadline_ms=0.0)
+    assert RetryPolicy(backoff_ms=10.0, backoff_mult=3.0).backoff_for(3) == 90.0
+
+
+def test_fault_spec_json_round_trip():
+    spec = FaultSpec(seed=9, detect_ms=2.5,
+                     outages=[OutageWindow("edge0", 1.0, 2.0)],
+                     transient=[TransientErrors("1792", 0.25)],
+                     cold_spikes=[ColdSpike("1536", 0.0, 9.0, 4.0)],
+                     stragglers=[Straggler("edge1", 3.0, 7.0, 2.0)],
+                     blackouts=[Blackout("iot", 0.0, 5.0, target="edge0")])
+    assert FaultSpec.from_json(spec.to_json()) == spec
+    assert not FaultSpec()
+    assert spec
+
+
+# ------------------------------------------------------- counter-based stream
+def test_fault_uniform_deterministic_and_vectorized():
+    scalar = [fault_uniform(7, "1792", i, 100.0 * i) for i in range(50)]
+    block = fault_uniform(7, "1792", np.arange(50), 100.0 * np.arange(50))
+    assert np.array_equal(np.array(scalar), block)
+    assert np.all((block >= 0.0) & (block < 1.0))
+    # different targets / seeds / times decorrelate
+    other = fault_uniform(7, "edge0", np.arange(50), 100.0 * np.arange(50))
+    assert not np.array_equal(block, other)
+    assert fault_uniform(7, "1792", 3, 10.0) != fault_uniform(8, "1792", 3, 10.0)
+    assert fault_uniform(7, "1792", 3, 10.0) != fault_uniform(7, "1792", 3, 10.5)
+
+
+def test_transient_mask_rate_roughly_p():
+    spec = FaultSpec(seed=1, transient=[TransientErrors("1792", 0.3)])
+    m = spec.transient_mask("1792", np.arange(4000), np.linspace(0, 1e6, 4000))
+    assert 0.25 < m.mean() < 0.35
+    assert not spec.transient_mask("other", np.arange(10), np.zeros(10)).any()
+
+
+# --------------------------------------------------------- empty-spec parity
+@pytest.mark.parametrize("fleet", [FLEET1, FLEET3])
+@pytest.mark.parametrize("policy_cls", ["minlat", "mincost"])
+def test_empty_spec_bit_parity_all_paths(fd_setup, fleet, policy_cls):
+    """Retry+breaker+admission configured over an EMPTY spec must be
+    bit-identical per record to the plain runtime, on every serve path."""
+    twin, models = fd_setup
+    tasks = twin.workload(150, seed=2)
+
+    def pol():
+        if policy_cls == "minlat":
+            return MinLatencyPolicy(c_max=2.97e-5, alpha=0.02)
+        return MinCostPolicy(deadline_ms=4000.0)
+
+    knobs = dict(faults=FaultSpec(), retry=RetryPolicy(),
+                 breaker=CircuitBreaker(),
+                 admission=AdmissionPolicy(tiers=(SLOTier(1e12),)))
+    plain = _runtime(twin, models, fleet, policy=pol()).serve(tasks)
+    fa = _runtime(twin, models, fleet, policy=pol(), **knobs).serve(tasks)
+    _assert_records_equal(plain, fa)
+
+    fa_async = _runtime(twin, models, fleet, policy=pol(),
+                        **knobs).serve_async(tasks)
+    _assert_records_equal(plain, fa_async)
+
+    for cs in (1, 37, 150):
+        fa_stream = _runtime(twin, models, fleet, policy=pol(),
+                             **knobs).serve_stream(tasks, chunk_size=cs)
+        _assert_records_equal(plain, fa_stream)
+
+
+if HAVE_HYPOTHESIS:
+    @settings(max_examples=10, deadline=None)
+    @given(seed=st.integers(0, 50), chunk=st.integers(1, 60),
+           c_max=st.floats(1e-6, 1e-4))
+    def test_empty_spec_parity_property(fd_setup, seed, chunk, c_max):
+        twin, models = fd_setup
+        tasks = twin.workload(60, seed=seed)
+        plain = _runtime(twin, models, FLEET3,
+                         policy=MinLatencyPolicy(c_max=c_max, alpha=0.02),
+                         seed=seed).serve(tasks)
+        fa = _runtime(twin, models, FLEET3,
+                      policy=MinLatencyPolicy(c_max=c_max, alpha=0.02),
+                      seed=seed, faults=FaultSpec(), retry=RetryPolicy(),
+                      breaker=CircuitBreaker()).serve_stream(tasks,
+                                                             chunk_size=chunk)
+        _assert_records_equal(plain, fa)
+else:
+    @pytest.mark.skip(reason="hypothesis not installed")
+    def test_empty_spec_parity_property():
+        pass
+
+
+# --------------------------------------------------- failure-path accounting
+def test_transient_retry_bills_every_attempt(fd_setup):
+    """p=1 transient on every cloud config, no failover: attempts exhaust
+    and the task fails, billing every attempted leg."""
+    twin, models = fd_setup
+    spec = FaultSpec(seed=3, transient=[TransientErrors(f"{c}", 1.0)
+                                        for c in CONFIGS])
+    tasks = twin.workload(40, seed=4)
+
+    one = _runtime(twin, models, {}, faults=spec,
+                   retry=RetryPolicy(max_attempts=1, failover=False),
+                   seed=11).serve(tasks)
+    three = _runtime(twin, models, {}, faults=spec,
+                     retry=RetryPolicy(max_attempts=3, failover=False,
+                                       backoff_ms=10.0),
+                     seed=11).serve(tasks)
+    assert one.n_failed == len(tasks) and three.n_failed == len(tasks)
+    assert np.all(one.records.attempts == 1)
+    assert np.all(three.records.attempts == 3)
+    # every attempted leg billed: 3 attempts cost ≈ 3× the 1-attempt bill
+    # (the draws differ per attempt, so compare totals loosely)
+    assert three.total_actual_cost > 2.0 * one.total_actual_cost
+    assert np.all(three.records.actual_cost > one.records.actual_cost)
+    # the give-up time is the last failure detection, after the first
+    assert np.all(three.records.completion_ms > one.records.completion_ms)
+
+
+def test_outage_fails_over_to_surviving_target(fd_setup):
+    twin, models = fd_setup
+    tasks = twin.workload(120, seed=5)
+    horizon = tasks[-1].arrival_ms + 1.0
+    spec = FaultSpec(seed=3, outages=[OutageWindow("1792", 0.0, horizon)])
+    res = _runtime(twin, models, FLEET3, faults=spec,
+                   retry=RetryPolicy(max_attempts=3)).serve(tasks)
+    rb = res.records
+    # nothing may end on the dead config; failed-over rows took 2 dispatches
+    final = {rb.target_names[c] for c in np.unique(rb.target_codes).tolist()}
+    assert "1792" not in final
+    moved = rb.attempts > 1
+    assert moved.any()
+    assert res.n_failed == 0
+    # an outage dispatch bills nothing but costs detection latency, so
+    # failed-over latency strictly exceeds the per-attempt execution time
+    assert np.all(rb.actual_latency_ms[moved] > 0.0)
+
+
+def test_shed_tasks_bill_nothing(fd_setup):
+    twin, models = fd_setup
+    tasks = twin.workload(100, seed=6)
+    for t in tasks:
+        t.tier = t.idx % 2   # half top-tier, half sheddable
+    adm = AdmissionPolicy(tiers=(SLOTier(1e12, sheddable=False),
+                                 SLOTier(1e-9)))  # tier 1: always sheds
+    res = _runtime(twin, models, FLEET3, faults=FaultSpec(),
+                   admission=adm).serve(tasks)
+    rb = res.records
+    assert res.n_shed == 50
+    assert np.array_equal(rb.shed, rb.tier == 1)
+    assert np.all(rb.actual_cost[rb.shed] == 0.0)
+    assert np.all(rb.attempts[rb.shed] == 0)
+    assert np.all(rb.exec_ms[rb.shed] == 0.0)
+    assert np.all(rb.completion_ms[rb.shed] == rb.arrival_ms[rb.shed])
+    # top tier untouched and still served
+    assert not rb.shed[rb.tier == 0].any()
+    assert np.all(rb.attempts[rb.tier == 0] >= 1)
+    # shedding shows up as SLO misses for its tier, not the top tier
+    assert res.slo_attainment(1e12, tier=1) == 0.0
+    assert res.slo_attainment(1e12, tier=0) == 1.0
+
+
+def test_shed_rollback_restores_decision_state(fd_setup):
+    """Serving tier-1 work that all sheds must leave surplus and predicted
+    horizons exactly as if only the surviving tasks had been placed."""
+    twin, models = fd_setup
+    tasks = twin.workload(80, seed=7)
+    for t in tasks:
+        t.tier = t.idx % 2
+    adm = AdmissionPolicy(tiers=(SLOTier(1e12, sheddable=False),
+                                 SLOTier(1e-9)))
+    rt = _runtime(twin, models, FLEET3, faults=FaultSpec(), admission=adm)
+    rt.serve(tasks)
+    survivors = [t for t in tasks if t.tier == 0]
+    # a fresh runtime serving ONLY the survivors: same decision state after
+    rt2 = _runtime(twin, models, FLEET3)
+    rt2.serve(survivors)
+    assert rt.engine.policy.surplus == pytest.approx(
+        rt2.engine.policy.surplus, rel=1e-12)
+    for name in FLEET3:
+        assert rt.edge_queues[name].horizon_ms == pytest.approx(
+            rt2.edge_queues[name].horizon_ms, rel=1e-12)
+
+
+# --------------------------------------------------------------- hedge races
+def _mk_outcome(latency, cost, completion, failed=False, exec_ms=1.0):
+    return ExecutionOutcome(latency_ms=latency, cost=cost, cold=False,
+                            completion_ms=completion, exec_ms=exec_ms,
+                            failed=failed,
+                            fail_kind=TRANSIENT if failed else 0)
+
+
+def _mk_hedge_decision():
+    p = Prediction(target="A", latency_ms=100.0, cost=2e-6, cold=False,
+                   components={})
+    h = Prediction(target="B", latency_ms=120.0, cost=1e-6, cold=False,
+                   components={})
+    return PlacementDecision(task_idx=0, target="A", prediction=p,
+                             feasible=True, allowed_cost=1.0,
+                             hedge_target="B", hedge_prediction=h)
+
+
+def test_hedge_crashed_winner_falls_to_loser(fd_setup):
+    twin, models = fd_setup
+    rt = _runtime(twin, models, FLEET3)
+    task = TaskInput(idx=0, arrival_ms=0.0, size=1e6, bytes=1e5)
+    d = _mk_hedge_decision()
+
+    # primary crashed, duplicate survived: the record reports the duplicate
+    prim = _mk_outcome(5.0, 3e-6, 5.0, failed=True)
+    rec = rt._record(task, d, d.target, d.prediction, prim)
+    dup = _mk_outcome(140.0, 1.5e-6, 140.0)
+    merged = rt._merge_hedge(rec, task, d, dup)
+    assert merged.target == "B" and merged.hedge_target == "A"
+    assert not merged.failed and merged.hedged
+    assert merged.actual_latency_ms == 140.0
+    assert merged.completion_ms == 140.0
+    assert merged.actual_cost == pytest.approx(3e-6 + 1.5e-6)  # both billed
+
+    # duplicate crashed, primary survived: primary stands, crash billed
+    rec_ok = rt._record(task, d, d.target, d.prediction,
+                        _mk_outcome(90.0, 3e-6, 90.0))
+    merged2 = rt._merge_hedge(rec_ok, task, d, _mk_outcome(5.0, 1e-6, 5.0,
+                                                           failed=True))
+    assert merged2.target == "A" and not merged2.failed
+    assert merged2.actual_latency_ms == 90.0      # the crash never "wins"
+    assert merged2.actual_cost == pytest.approx(3e-6 + 1e-6)
+
+    # both crashed: a failed record
+    merged3 = rt._merge_hedge(rec, task, d, _mk_outcome(5.0, 1e-6, 5.0,
+                                                        failed=True))
+    assert merged3.failed and merged3.hedged
+
+
+def test_hedged_serve_with_faults_end_to_end(fd_setup):
+    """A full hedged serve against a dead config: hedged records never end
+    on the dead target, and the run stays deterministic."""
+    twin, models = fd_setup
+    tasks = twin.workload(120, seed=8)
+    horizon = tasks[-1].arrival_ms + 1.0
+    spec = FaultSpec(seed=2, outages=[OutageWindow("1792", 0.0, horizon)])
+
+    def run():
+        pred = build_fleet_predictor(models, dict(FLEET3), configs=CONFIGS)
+        policy = HedgedPolicy(MinLatencyPolicy(c_max=8e-5, alpha=0.0),
+                              hedge_threshold_ms=1500.0)
+        eng = DecisionEngine(predictor=pred, policy=policy)
+        backend = TwinBackend(twin, seed=17, edge_names=tuple(FLEET3),
+                              edge_speed=FLEET3, faults=spec)
+        return PlacementRuntime(eng, backend).serve(tasks)
+
+    a, b = run(), run()
+    hedged = [r for r in a.records if r.hedged]
+    assert hedged
+    assert all(r.target != "1792" for r in a.records if not r.failed)
+    assert [r.target for r in a.records] == [r.target for r in b.records]
+    assert a.total_actual_cost == b.total_actual_cost
+
+
+# ----------------------------------------------------------- circuit breaker
+def test_breaker_opens_and_readmits():
+    h = TargetHealth(CircuitBreaker(threshold=2, probation_ms=100.0))
+    assert not h.is_open("x", 0.0)
+    h.record_failure("x", 1.0)
+    assert not h.is_open("x", 1.0)      # below threshold
+    h.record_failure("x", 2.0)
+    assert h.is_open("x", 50.0)         # open, inside probation
+    assert h.would_fail_fast("x", 50.0)
+    assert not h.is_open("x", 103.0)    # half-open: probe admitted
+    h.record_failure("x", 104.0)        # probe failed -> re-open
+    assert h.is_open("x", 105.0)
+    assert not h.is_open("x", 300.0)    # next probe
+    h.record_success("x")
+    assert not h.is_open("x", 301.0) and not h.dirty()
+    assert h.n_opens == 2
+
+
+def test_breaker_trips_in_serve_loop(fd_setup):
+    twin, models = fd_setup
+    tasks = twin.workload(200, seed=9)
+    horizon = tasks[-1].arrival_ms + 1.0
+    spec = FaultSpec(seed=4, outages=[OutageWindow("1792", 0.0, horizon)])
+    rt = _runtime(twin, models, FLEET3, faults=spec,
+                  retry=RetryPolicy(max_attempts=3),
+                  breaker=CircuitBreaker(threshold=3, probation_ms=1e9))
+    res = rt.serve_stream(tasks, chunk_size=20)
+    assert rt.health.n_opens >= 1
+    assert rt.health.would_fail_fast("1792", tasks[-1].arrival_ms)
+    # after the circuit opened, tasks stop burning an attempt on the dead
+    # config: some rows fail over on their FIRST dispatch (attempts == 1)
+    rb = res.records
+    later = rb.arrival_ms > np.median(rb.arrival_ms)
+    assert res.n_failed == 0
+    assert (rb.attempts[later] == 1).any()
+
+
+# ------------------------------------------------------ cross-path determinism
+def test_faulted_run_identical_across_runs_and_paths(fd_setup):
+    twin, models = fd_setup
+    tasks = twin.workload(150, seed=10)
+    spec = FaultSpec(seed=5,
+                     outages=[OutageWindow("1792", 10_000.0, 40_000.0)],
+                     transient=[TransientErrors("1536", 0.15)],
+                     stragglers=[Straggler("edge2", 0.0, 50_000.0, 3.0)],
+                     blackouts=[Blackout("iot", 20_000.0, 30_000.0)])
+
+    def mk():
+        return _runtime(twin, models, FLEET3, faults=spec,
+                        retry=RetryPolicy(max_attempts=4, backoff_ms=25.0),
+                        breaker=CircuitBreaker(threshold=3))
+
+    base = mk().serve(tasks)
+    assert base.n_retried > 0
+    _assert_records_equal(base, mk().serve(tasks))
+    _assert_records_equal(base, mk().serve_async(tasks))
+    _assert_records_equal(base, mk().serve_stream(tasks,
+                                                  chunk_size=len(tasks)))
+
+
+# ------------------------------------------------------------- trace capture
+def test_fault_schedule_capture_round_trip(fd_setup):
+    twin, models = fd_setup
+    tasks = twin.workload(60, seed=11)
+    spec = FaultSpec(seed=6, transient=[TransientErrors("1536", 0.2)])
+    res = _runtime(twin, models, FLEET3, faults=spec,
+                   retry=RetryPolicy(max_attempts=2)).serve(tasks)
+    trace = capture(res, app="fd", faults=spec)
+    assert fault_spec_of(trace) == spec
+    assert fault_spec_of(capture(res, app="fd")) is None
+
+
+# ----------------------------------------------- dead-dispatcher diagnostics
+def test_serve_concurrent_names_dead_dispatcher(monkeypatch):
+    import threading
+
+    from repro.serving.executors import ExecutorPool, _Dispatch
+
+    pool = object.__new__(ExecutorPool)  # serve_concurrent touches no state
+    monkeypatch.setattr(threading.Thread, "start",
+                        lambda self: None)  # the dispatcher dies instantly
+    plan = [_Dispatch(idx=0, target="cfgA", n_tokens=4, payload_bytes=16.0,
+                      arrival_ms=0.0)]
+    with pytest.raises(RuntimeError, match="cfgA"):
+        ExecutorPool.serve_concurrent(pool, plan)
