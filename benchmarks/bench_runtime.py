@@ -66,7 +66,10 @@ seconds for CI; ``--json`` writes the machine-readable ``BENCH_runtime.json``):
    gate — ``"jax_interpret"`` bit-identical per record to the oracle,
    compiled ``"jax"`` decision-identical — plus the compile-cache check:
    after a warmup serve, a second same-shape stream must NOT retrace
-   (``JaxPlacementCore.compile_stats()`` stable).
+   (``JaxPlacementCore.compile_stats()`` stable). Both variants also time
+   ``SCAN_MODE="seq"`` vs ``"assoc"`` on compiled streams and audit the
+   ``"auto"`` table (``jax_core._AUTO_SCAN``) against the measured winner —
+   asserted at full size on accelerators, report-only row on CPU.
 10. **chaos** (ISSUE 8) — the deterministic fault-injection layer. Faults-off
     overhead: retry + breaker + admission armed over an EMPTY ``FaultSpec``
     must be bit-identical per record to the plain serve AND within 3% of its
@@ -74,6 +77,13 @@ seconds for CI; ``--json`` writes the machine-readable ``BENCH_runtime.json``):
     Degradation: 1 of 3 edge devices down for the middle 30% of the run plus
     a flaky cloud config — retry/failover/breaker/shedding must carry the
     top (non-sheddable) SLO tier to ≥99% attainment.
+11. **residency** (ISSUE 9) — persistent device-resident streaming. A steady
+    compiled stream keeps CIL pools / surplus / horizons device-side across
+    chunks: every chunk must place resident (zero per-chunk host commits,
+    zero fallback syncs, at most the one stream-end materialization), stay
+    decision-identical to the per-chunk ``device_residency=False`` path and,
+    on an accelerator, beat its rate. A hedged chunk mid-stream must cost
+    exactly ONE extra (fallback) sync with residency re-entered afterwards.
 
     PYTHONPATH=src:. python benchmarks/bench_runtime.py [--n 10000]
 """
@@ -803,6 +813,13 @@ def run_jax_core(emit, n: int = 1_000_000, chunk: int = 65_536,
     oracle per record, decision-equality of compiled ``"jax"``, and the
     no-retrace gate — a second same-shape stream must reuse every jit cache
     entry after the warmup serve.
+
+    Both variants finish with the SCAN_MODE audit: "seq" and "assoc" are
+    timed on compiled streams (warmup + compile-free rerun each) and the
+    winner is compared to what ``resolve_scan_mode`` picks for this backend
+    under ``SCAN_MODE="auto"`` — asserted at full size on accelerators,
+    report-only on CPU (timing noise at smoke sizes makes the "winner" a
+    coin flip there; the table itself was derived at full size).
     """
     import jax as jax_mod
 
@@ -873,6 +890,41 @@ def run_jax_core(emit, n: int = 1_000_000, chunk: int = 65_536,
     emit(f"runtime/jax_core[{n}]", jax_s / n * 1e6,
          f"n={n};chunk={chunk};backend={backend_name};"
          f"speedup={speedup:.2f}x;accel={int(on_accel)}")
+
+    # ---- SCAN_MODE audit (ISSUE 9): time the sequential lax.scan folds vs
+    # the reassociated max-plus/cumsum forms and check the "auto" table
+    # against the measurement. SCAN_MODE is part of the engine key, so each
+    # mode gets its own core: warm it up, then time a compile-free rerun on
+    # the SAME runtime (the same jit caches).
+    n_scan = n if smoke else max(chunk, n // 4)
+    mode_s = {}
+    prior = jax_core.SCAN_MODE
+    try:
+        for sm in ("seq", "assoc"):
+            jax_core.SCAN_MODE = sm
+            rt_m = _stream_runtime(twin, models, c_max=FLEET_C_MAX)
+            rt_m.serve_stream(twin.poisson(seed=3).chunks(n_scan, chunk),
+                              chunk_size=chunk, array_backend="jax")
+            t0 = time.perf_counter()
+            rt_m.serve_stream(twin.poisson(seed=5).chunks(n_scan, chunk),
+                              chunk_size=chunk, array_backend="jax")
+            mode_s[sm] = time.perf_counter() - t0
+    finally:
+        jax_core.SCAN_MODE = prior
+    winner = min(mode_s, key=mode_s.get)
+    auto = jax_core.resolve_scan_mode(backend_name)
+    gate = "asserted" if on_accel and not smoke else "report-only"
+    print(f"scan-mode audit   seq {n_scan / mode_s['seq']:>9,.0f} t/s   "
+          f"assoc {n_scan / mode_s['assoc']:>9,.0f} t/s   winner={winner}   "
+          f"auto[{backend_name}]={auto} ({gate})")
+    if on_accel and not smoke:
+        assert auto == winner, \
+            f"SCAN_MODE auto table picks {auto!r} on {backend_name} but " \
+            f"the measurement favors {winner!r} — update jax_core._AUTO_SCAN"
+    emit(f"runtime/scan_mode[{n_scan}]", mode_s[auto] / n_scan * 1e6,
+         f"n={n_scan};seq_s={mode_s['seq']:.3f};"
+         f"assoc_s={mode_s['assoc']:.3f};winner={winner};auto={auto};"
+         f"backend={backend_name}")
 
 
 # --------------------------------------------------- 10. chaos (ISSUE 8)
@@ -986,6 +1038,121 @@ def run_chaos(emit, n: int | None = None, max_overhead: float = 0.03,
          f"shed={res.n_shed};opens={rt.health.n_opens}")
 
 
+# ----------------------------------------------- 11. residency (ISSUE 9)
+def run_residency(emit, n: int = 1_000_000, chunk: int = 65_536,
+                  min_rel_rate: float = 1.2, smoke: bool = False):
+    """Persistent device residency (ISSUE 9): sync counts + resident rate.
+
+    Steady stream: a Poisson STT stream served compiled (``"jax"``) with
+    residency on keeps CIL pools / surplus bank / edge horizons device-side
+    across chunks. The stream must place EVERY chunk resident — zero host
+    commits at chunk boundaries, zero fallback syncs, at most the single
+    stream-end materialization — while staying decision-identical to the
+    PR 7 per-chunk path (``device_residency=False`` on an identical engine,
+    which commits host state once per chunk). On an accelerator the resident
+    stream must clear ``min_rel_rate``× the per-chunk rate (report-only on
+    CPU, where the host commit is cheap relative to XLA's scan overhead).
+
+    Fallback exits: a hedged chunk mid-stream is ineligible for the device
+    core, so residency must exit through exactly ONE fallback sync (the host
+    walk sees canonical state) and re-enter afterwards with state intact —
+    the sync budget is per fallback EXIT, never per chunk.
+
+    Smoke: the same counter + parity gates at small n; the rate floor is
+    judged at full size on an accelerator only.
+    """
+    import jax as jax_mod
+
+    from repro.core import jax_core
+    from repro.core.decision import HedgedPolicy
+
+    backend_name = jax_mod.default_backend()
+    on_accel = backend_name != "cpu"
+    if smoke:
+        n = min(n, 3_000)
+    banner(f"bench_runtime/residency — persistent device state at {n:,} "
+           f"tasks (chunk {chunk:,}, backend {backend_name})")
+    twin, models = fit_app("STT", seed=0, n_inputs=120, configs=CONFIGS)
+
+    def _serve(rt, n_tasks, seed, **kw):
+        if rt is None:
+            rt = _stream_runtime(twin, models, c_max=FLEET_C_MAX)
+        t0 = time.perf_counter()
+        res = rt.serve_stream(twin.poisson(seed=seed).chunks(n_tasks, chunk),
+                              chunk_size=chunk, array_backend="jax", **kw)
+        return res, time.perf_counter() - t0, rt
+
+    # ---- steady resident stream: the warmup serve compiles and grows the
+    # container-pool cap to steady state; the rerun on the SAME engine is
+    # compile-free and is what gets timed and counter-audited
+    _, _, rt_res = _serve(None, n, 3)
+    res_r, res_s, _ = _serve(rt_res, n, 5)
+    chunks = rt_res.stream_stats["chunks"]
+    r = rt_res.stream_stats["residency"]
+    assert r["enabled"] and r["resident_chunks"] == chunks
+    assert r["chunk_commits"] == 0, \
+        "resident stream committed host state at a chunk boundary"
+    assert r["fallback_syncs"] == 0, "steady stream took a fallback exit"
+    assert r["state_syncs"] <= 1, \
+        f"steady resident stream materialized {r['state_syncs']}x " \
+        f"(budget: 1, the stream-end sync)"
+
+    # ---- PR 7 per-chunk baseline: identical engine shape with residency
+    # off — one host commit per chunk, decisions must not change
+    _, _, rt_pc = _serve(None, n, 3, device_residency=False)
+    res_p, pc_s, _ = _serve(rt_pc, n, 5, device_residency=False)
+    rp = rt_pc.stream_stats["residency"]
+    assert not rp["enabled"] and rp["chunk_commits"] == chunks
+    assert (res_r.records.target_codes.tolist()
+            == res_p.records.target_codes.tolist()), \
+        "resident decisions diverged from the per-chunk path"
+    rel = pc_s / max(res_s, 1e-12)
+    bar = (f"(floor {min_rel_rate:.1f}x)" if on_accel and not smoke
+           else "(report-only)")
+    print(f"per-chunk {n / pc_s:>9,.0f} t/s   resident {n / res_s:>9,.0f} "
+          f"t/s   rel {rel:4.2f}x {bar}   syncs/stream {r['state_syncs']}   "
+          f"prefetched {r['prefetched']}")
+    if on_accel and not smoke:
+        assert rel >= min_rel_rate, \
+            f"resident stream {rel:.2f}x below the {min_rel_rate}x floor " \
+            f"on {backend_name}"
+
+    # ---- fallback exits cost ONE sync each: chunk 2 of 4 runs under a
+    # hedged policy (core-ineligible → host walk), chunks 0-1 and 3 stay
+    # resident. Prefetch off: the transfer thread would fire the generator's
+    # policy-swap side effect a chunk early.
+    tasks = _bursty(twin, 2_000, rate_per_s=4.0, seed=7)
+
+    def hedged_chunks(rt):
+        orig = rt.engine.policy
+        hedged = HedgedPolicy(MinLatencyPolicy(c_max=FLEET_C_MAX, alpha=0.0),
+                              hedge_threshold_ms=50.0)
+        for i in range(4):
+            rt.engine.policy = hedged if i == 2 else orig
+            yield tasks[i * 500:(i + 1) * 500]
+
+    ref_rt = _stream_runtime(twin, models, c_max=FLEET_C_MAX)
+    ref = ref_rt.serve_stream(hedged_chunks(ref_rt), chunk_size=500)
+    rt_fb = _stream_runtime(twin, models, c_max=FLEET_C_MAX)
+    res_fb = rt_fb.serve_stream(hedged_chunks(rt_fb), chunk_size=500,
+                                array_backend="jax", prefetch=False)
+    rf = rt_fb.stream_stats["residency"]
+    assert (res_fb.records.target_codes.tolist()
+            == ref.records.target_codes.tolist()), \
+        "fallback/re-entry stream diverged from the numpy oracle"
+    assert rf["fallback_syncs"] == 1, \
+        f"one hedged chunk cost {rf['fallback_syncs']} fallback syncs"
+    assert rf["state_syncs"] == 2     # the fallback exit + the stream end
+    assert rf["resident_chunks"] == 3 and rf["chunk_commits"] == 0
+    print(f"fallback exit     1 hedged chunk of 4 -> "
+          f"{rf['fallback_syncs']} fallback sync / {rf['state_syncs']} total"
+          f"   residency re-entered ({rf['resident_chunks']}/4 resident)")
+    emit(f"runtime/residency[{n}]", res_s / n * 1e6,
+         f"n={n};chunk={chunk};backend={backend_name};rel_rate={rel:.2f}x;"
+         f"state_syncs={r['state_syncs']};prefetched={r['prefetched']};"
+         f"accel={int(on_accel)}")
+
+
 # ------------------------------------------------------------------- driver
 def run(emit, n: int | None = None):
     run_decision(emit, n=n)
@@ -999,6 +1166,7 @@ def run(emit, n: int | None = None):
         run_sharded(emit)
         run_trace_planner(emit)
         run_jax_core(emit)
+        run_residency(emit)
         run_chaos(emit)
 
 
@@ -1031,6 +1199,11 @@ def run_smoke(emit):
     # (compiled) + the no-retrace compile-cache gate; the >=2x speedup floor
     # is judged at full size on an accelerator only
     run_jax_core(emit, n=3_000, chunk=1_024, smoke=True)
+    # residency smoke: the sync-count + decision-parity gates (resident vs
+    # per-chunk, plus the 1-sync-per-fallback-exit budget) hold at full
+    # strength; only the resident-vs-per-chunk rate floor is deferred to
+    # full size on an accelerator
+    run_residency(emit, n=3_000, chunk=1_024, smoke=True)
     # chaos smoke: the empty-FaultSpec bit-parity gate holds at full
     # strength; only the 3% overhead bar is relaxed (throttled runners —
     # the floor is judged at full size), plus the 1-of-3-devices-down

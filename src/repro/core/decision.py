@@ -547,8 +547,16 @@ class DecisionEngine:
         """Fleet device names (empty when the Predictor has no edge)."""
         return self.predictor.edge_names
 
+    def _sync_device_state(self) -> None:
+        """Materialize any device-resident stream state before a host-side
+        read/mutation of CIL / surplus / horizons (no-op when none held)."""
+        _jc = self.__dict__.get("_jax_core_cache")
+        if _jc is not None and _jc[1] is not None:
+            _jc[1].sync_host("fallback")
+
     def place(self, task, now: float, edge_queue_wait_ms: float = 0.0,
               edge_waits: Mapping[str, float] | None = None) -> PlacementDecision:
+        self._sync_device_state()
         waits = (dict(edge_waits) if edge_waits is not None
                  else {n: edge_queue_wait_ms for n in self.edge_names})
         preds = self.predictor.predict(task, now, edge_waits=waits)
@@ -595,6 +603,11 @@ class DecisionEngine:
                     interpret=self.array_backend == "jax_interpret")
                 if out is not None:
                     return out
+        # fallback (hedged/custom policy, record_decisions, force-walk, core
+        # refusal): the host paths below read CIL/surplus/horizons, so any
+        # device-resident stream state must land first — place_chunk syncs
+        # on its own refusals; this covers routes that never reached it
+        self._sync_device_state()
         batch = self.predictor.predict_batch(tasks)
         if tasks and self.columnar and self._columnar_eligible():
             out = self._place_columnar(tasks, batch, edge_queues)

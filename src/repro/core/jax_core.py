@@ -8,7 +8,8 @@ chunk runs device-resident under ``jax.jit`` — selected per engine with
 ``serve_stream(..., array_backend="jax")``. The numpy path stays the
 correctness oracle.
 
-Structure of one chunk (chunk boundaries are the only host↔device syncs):
+Structure of one chunk (with stream residency — see below — even chunk
+boundaries stop being host↔device sync points):
 
 1. **Predict** — ridge upload / edge-compute models, normal-model scalars and
    Lambda pricing as jnp expressions; the GBRT compute model as a device-side
@@ -28,9 +29,28 @@ Structure of one chunk (chunk boundaries are the only host↔device syncs):
    same induction the numpy repair loop relies on, the exact prefix grows by
    ≥ 1 row per iteration, so the fixed point (``pass(g) == g``) IS the true
    sequential trajectory and is reached in ≤ R+1 passes (2–3 in practice).
-3. **Commit** — outputs are sliced to the chunk on host; CIL pools, edge
-   horizons and the surplus bank are written back exactly like the numpy
-   accept step (including the final ``reap`` at the last arrival).
+3. **Commit or stay resident** — decision outputs are sliced to the chunk on
+   host either way. Without stream residency (standalone ``place_many``),
+   CIL pools, edge horizons and the surplus bank are written back exactly
+   like the numpy accept step (including the final ``reap`` at the last
+   arrival). Under ``serve_stream`` the engine carries a
+   ``_device_residency`` flag and the committed state instead STAYS ON
+   DEVICE as a ``DeviceStreamState``: consecutive in-order chunks seed the
+   next fixed point straight from the previous chunk's final state arrays
+   (buffer-donated into the jitted step, so steady chunks reuse the same
+   device buffers), and the host CIL/queues/policy are materialized only on
+   demand — at stream end, on any fallback exit (hedged/custom policy swap,
+   out-of-order arrivals, ``record_decisions``, a ``columnar=False`` chunk),
+   or when an external consumer calls ``sync_engine``. Deferring the reap to
+   materialization time is exact: the keep predicate is monotone in the reap
+   time and dead containers are never warm-reusable, so the one deferred
+   reap drops exactly the records the per-chunk reaps would have (order
+   preserved — slot order is list order in both). ``stage_chunk`` +
+   ``runtime._prefetched_chunks`` double-buffer the NEXT chunk's task arrays
+   onto the device (``jax.device_put`` on a transfer thread) while the
+   current fixed point runs, and the GBRT compute column launches ONE
+   blocked multi-config Pallas kernel (``gbrt_predict_multi``) instead of a
+   launch per cloud config.
 
 Parity contract (mirrors the Pallas kernel tests):
 
@@ -53,8 +73,9 @@ numpy path. Chunks are padded to power-of-two rows (pad rows carry code
 from __future__ import annotations
 
 import contextlib
+import threading
 import weakref
-from dataclasses import dataclass
+from dataclasses import dataclass, field
 
 import numpy as np
 
@@ -65,6 +86,7 @@ from repro.core.predictor import (
     LambdaTarget,
     Predictor,
     const1_serving_table,
+    model_keyed_cache,
 )
 from repro.core.pricing import EdgePricing, LambdaPricing
 from repro.core.workload import task_arrays
@@ -72,8 +94,15 @@ from repro.core.workload import task_arrays
 # "seq"   — sequential lax.scan left folds (bit-exact association vs numpy);
 # "assoc" — max-plus associative_scan / cumsum forms (reassociated float sums:
 #           decision-equality contract only);
-# "auto"  — seq on CPU (where bit-parity matters), assoc elsewhere.
+# "auto"  — per-backend pick from the bench section 9 measurement (see
+#           ``resolve_scan_mode``).
 SCAN_MODE = "auto"
+# Measured winners for SCAN_MODE="auto" (bench_runtime section 9's
+# assoc-vs-seq timing; backends not listed default to "assoc"). XLA:CPU
+# executes the short sequential scan faster than the log-depth max-plus
+# associative form at serving chunk sizes — and seq is also the bit-exact
+# association, so CPU keeps it. Accelerator backends win with assoc.
+_AUTO_SCAN = {"cpu": "seq"}
 # Route the assoc-mode surplus prefix through the repro.kernels.linear_scan
 # Pallas kernel (f32 — decision-equality contract; exercised by tests/bench).
 SURPLUS_LINEAR_SCAN = False
@@ -81,6 +110,16 @@ SURPLUS_LINEAR_SCAN = False
 POOL_MIN_CAP = 8        # starting CIL container-pool capacity (doubles on demand)
 PAD_MIN = 8             # minimum padded chunk rows
 MAX_BACKENDS = ("numpy", "jax", "jax_interpret")
+
+
+def resolve_scan_mode(backend: str) -> str:
+    """Effective scan mode for a jax backend under the current ``SCAN_MODE``.
+
+    ``"auto"`` resolves through the measured ``_AUTO_SCAN`` table (bench
+    section 9 re-derives it and asserts agreement on accelerators)."""
+    if SCAN_MODE != "auto":
+        return SCAN_MODE
+    return _AUTO_SCAN.get(backend, "assoc")
 
 
 class CoreIneligible(Exception):
@@ -113,6 +152,46 @@ def _next_pow2(n: int) -> int:
     while p < n:
         p <<= 1
     return p
+
+
+# Device-resident table/operand hosting, keyed on model identity + scope
+# (x64 flag) with the _CONST1_TABLES weakref idiom — rebuilding a core (e.g.
+# a hedged-policy swap and back) re-hosts NOTHING, and the per-chunk path
+# does zero host-side operand prep (see ``model_keyed_cache``).
+_DEVICE_TABLES: dict[tuple, dict] = {}
+_DEVICE_TABLES_LOCK = threading.Lock()
+
+
+@dataclass
+class DeviceStreamState:
+    """Cross-chunk device residency for one ``serve_stream`` run.
+
+    Holds the sequential placement state ON DEVICE between consecutive
+    in-order chunks: fixed-capacity CIL container pools (``busy``/``last``
+    at ``cap`` slots per cloud config plus per-config ``cnt``), per-device
+    edge FIFO horizons ``h``, and the Alg. 1 surplus bank ``s``. Host-side
+    bookkeeping rides along: ``t_last`` (last committed arrival — validates
+    in-order re-entry), ``cnt_max`` (pool-growth bound without materializing
+    pools), ``chunks`` (resident chunks absorbed), and ``rng_draws`` (RNG
+    stream offset — balancer draws consumed while resident; the host
+    Generators advance identically, this records the offset). Strong refs
+    to the CIL / policy / queues objects pin the state to the exact host
+    structures it shadows — any object swap invalidates residency.
+    """
+
+    busy: object = None          # (n_cloud, cap) device array
+    last: object = None          # (n_cloud, cap) device array
+    cnt: object = None           # (n_cloud,) device array
+    h: object = None             # (n_dev,) device array (edge fleets only)
+    s: object = None             # scalar device array (MinLatency only)
+    cap: int = 0
+    t_last: float = -np.inf
+    cnt_max: int = 0
+    chunks: int = 0
+    rng_draws: int = 0
+    cil: object = None
+    policy: object = None
+    queues: object = field(default=None)
 
 
 # --------------------------------------------------------------------- spec
@@ -253,9 +332,9 @@ class JaxPlacementCore:
         self.use_gbrt_kernel = mode == "force" or (tpu and mode == "auto")
         self.dtype = self.jnp.float32 if tpu else self.jnp.float64
         self._x64 = not tpu
-        self.seq = SCAN_MODE == "seq" or (SCAN_MODE == "auto"
-                                          and self.jax.default_backend() == "cpu")
+        self.seq = resolve_scan_mode(self.jax.default_backend()) == "seq"
         self.key = _engine_key(engine)
+        self._targets = list(pred.cloud_targets) + list(pred.edge_fleet or ())
         self._refs = [weakref.ref(o) for o in (
             [pred, engine.policy]
             + [t for t in pred.cloud_targets]
@@ -268,12 +347,26 @@ class JaxPlacementCore:
             self._choose_fn = self._build_choose()
             self._finalize_fn = self._build_finalize()
             self._predict = self.jax.jit(self._build_predict())
-            self._place = self.jax.jit(self._build_place())
+            # S (the sequential-state seed) is donated: resident streams
+            # feed chunk k's final state arrays straight back in as chunk
+            # k+1's seed, reusing the same device buffers — steady chunks
+            # allocate nothing for state.
+            self._place = self.jax.jit(self._build_place(),
+                                       donate_argnums=(1,))
             # interpret-mode hosts the fixed point itself on these pieces
             self._state = self.jax.jit(self._state_fn)
             self._choose = self.jax.jit(self._choose_fn)
             self._finalize = self.jax.jit(self._finalize_fn)
+            self._compact = (self.jax.jit(self._build_compact())
+                             if self.n_cloud else None)
         self.last_stats: dict | None = None
+        # ---- stream residency (serve_stream only; see module docstring) ----
+        self._resident: DeviceStreamState | None = None
+        self.state_syncs = 0      # host materializations of resident state
+        self.fallback_syncs = 0   # ... of which were forced by a fallback
+        self.resident_chunks = 0  # chunks absorbed without a host sync
+        self.chunk_commits = 0    # legacy per-chunk host commits
+        self.resident_regrows = 0  # donated-seed restore+retry events
 
     # ------------------------------------------------------------ lifecycle
     def _scope(self):
@@ -296,6 +389,12 @@ class JaxPlacementCore:
 
     # ------------------------------------------------------- device operands
     def _device_tables(self) -> dict:
+        key = (tuple(id(t) for t in self._targets), self._x64)
+        return model_keyed_cache(
+            _DEVICE_TABLES, _DEVICE_TABLES_LOCK, key, self._targets,
+            self._build_device_tables)
+
+    def _build_device_tables(self) -> dict:
         jnp = self.jnp
         t: dict = {}
         if self.n_cloud:
@@ -326,17 +425,17 @@ class JaxPlacementCore:
         return t
 
     def _gbrt_kernel_operands(self):
-        """Per-config Pallas-kernel operands (host-prepared, f32 like the
-        ``gbrt_predict`` wrapper)."""
-        from repro.kernels.gbrt_predict.ops import kernel_operands
+        """Stacked multi-config Pallas operands for the ONE blocked
+        ``gbrt_predict_multi`` launch (cached per model-identity tuple in
+        ``ops.multi_kernel_operands`` — zero per-chunk / per-core-build host
+        prep)."""
+        from repro.kernels.gbrt_predict.ops import multi_kernel_operands
 
-        ops = []
-        for c, tgt in zip(self.cloud, self._kernel_models):
-            feats, thr, lvs = kernel_operands(tgt)
-            ops.append((feats, thr, lvs, int(tgt.config.max_depth),
-                        float(tgt.config.learning_rate), float(tgt.base),
-                        c.memory_mb))
-        return ops
+        F, TH, LV, LR, BASE, depth = multi_kernel_operands(
+            self._kernel_models)
+        MEM = self.jnp.asarray(np.array(
+            [[c.memory_mb] for c in self.cloud], np.float32))
+        return F, TH, LV, LR, BASE, MEM, depth
 
     # ----------------------------------------------------------- predict jit
     def _build_predict(self):
@@ -346,7 +445,7 @@ class JaxPlacementCore:
         use_kernel = self.use_gbrt_kernel
         kernel_ops = None
         if use_kernel and nc:
-            from repro.kernels.gbrt_predict.kernel import gbrt_predict_blocked
+            from repro.kernels.gbrt_predict.kernel import gbrt_predict_multi
 
             interpret = jax.default_backend() != "tpu"
             kernel_ops = self._gbrt_kernel_operands()
@@ -355,17 +454,16 @@ class JaxPlacementCore:
             out = {}
             if nc:
                 if use_kernel:
-                    cols = []
-                    for feats, thr, lvs, depth, lr, base, mem in kernel_ops:
-                        x32 = jnp.stack(
-                            [sizes, jnp.full(sizes.shape[0], mem)],
-                            axis=1).astype(jnp.float32)
-                        bn = min(256, x32.shape[0])
-                        cols.append(gbrt_predict_blocked(
-                            x32, feats, thr, lvs, depth=depth, lr=lr,
-                            base=base, block_n=bn,
-                            interpret=interpret).astype(sizes.dtype))
-                    comp = jnp.stack(cols, axis=1)
+                    # ONE blocked launch over the padded (n_configs, trees,
+                    # …) operand stack — grid (C, row-blocks) — instead of a
+                    # pallas_call per cloud config. Bit-identical per column
+                    # to the per-config launches (see multi_kernel_operands).
+                    F, TH, LV, LR, BASE, MEM, depth = kernel_ops
+                    x32 = sizes[:, None].astype(jnp.float32)
+                    bn = min(256, x32.shape[0])
+                    comp = gbrt_predict_multi(
+                        x32, MEM, LR, BASE, F, TH, LV, depth=depth,
+                        block_n=bn, interpret=interpret).astype(sizes.dtype)
                 else:
                     comp = jax.vmap(
                         lambda b, v: v[jnp.searchsorted(b, sizes, side="left")]
@@ -631,9 +729,43 @@ class JaxPlacementCore:
             if nc:
                 res["busyF"], res["lastF"], res["cntF"] = \
                     st["busyF"], st["lastF"], st["cntF"]
+                # scalar pool-growth bound for the NEXT resident chunk —
+                # fetched with the decision outputs, so residency never
+                # materializes the pools just to size them
+                res["cnt_max"] = st["cntF"].max()
             return res
 
         return finalize
+
+    def _build_compact(self):
+        """Device-side stable pool compaction == the deferred reap, run ON
+        DEVICE so long resident streams never sync to host just to shrink
+        pools. Exact by the same two properties the deferred host reap rests
+        on: the keep predicate is monotone in the reap time (a record the
+        per-arrival walk dropped earlier is still dropped at ``t_last``) and
+        dead records are never warm-reusable (the idle check can never pass
+        again), so compaction keeps exactly the records the host list would
+        hold — in the same relative (list) order, preserving MRU first-max
+        tie-breaks."""
+        jnp = self.jnp
+        nc, t_idl = self.n_cloud, self.t_idl
+
+        def compact(busy, last, cnt, t_last):
+            cap = busy.shape[1]
+            slots = jnp.arange(cap)
+            in_use = slots[None, :] < cnt[:, None]
+            keep = in_use & ((t_last < busy) | (t_last <= last + t_idl))
+            # stable scatter: kept slot -> its rank; dropped -> the spill
+            # column (sliced off below)
+            d = jnp.where(keep, jnp.cumsum(keep, axis=1) - 1, cap)
+            rows = jnp.arange(nc)[:, None]
+            nb = jnp.full((nc, cap + 1), jnp.inf,
+                          busy.dtype).at[rows, d].set(busy)[:, :cap]
+            nl = jnp.full((nc, cap + 1), -jnp.inf,
+                          last.dtype).at[rows, d].set(last)[:, :cap]
+            return nb, nl, keep.sum(axis=1).astype(cnt.dtype)
+
+        return compact
 
     def _build_place(self):
         jnp, lax = self.jnp, self.lax
@@ -652,7 +784,14 @@ class JaxPlacementCore:
                                    P["deadline"], P["valid"])
             return st, code, feas, allowed
 
-        def place(P):
+        def place(P, S):
+            # S carries the sequential-state seed (CIL pools, edge horizons,
+            # surplus) split out so the jit can DONATE its buffers — resident
+            # streams thread chunk k's final arrays in as chunk k+1's seed
+            # with zero steady-state allocation. Callers must treat S as
+            # consumed (place_chunk keeps a tiny device-side backup for the
+            # overflow retry).
+            P = {**P, **S}
             R = P["nows"].shape[0]
             g0 = jnp.full(R, -1, dtype=jnp.int32)
             g1 = step(g0, P)[1]
@@ -705,10 +844,112 @@ class JaxPlacementCore:
         res["converged"] = converged
         return res
 
+    # ------------------------------------------------------------ residency
+    def stage_chunk(self, tasks) -> dict:
+        """Host prep + device upload for one chunk — engine-state-free, so
+        ``runtime._prefetched_chunks`` can run it on the transfer thread
+        while the previous chunk's fixed point occupies the device (the x64
+        scope is thread-local and re-entered here). The bundle reaches
+        ``place_chunk`` via ``engine._jax_staged``."""
+        jax = self.jax
+        n = len(tasks)
+        host = task_arrays(tasks)
+        _, nows_np, sizes_np, nbytes_np = host
+        R = max(PAD_MIN, _next_pow2(n))
+        pad = R - n
+        with self._scope():
+            dev = (jax.device_put(np.pad(sizes_np, (0, pad), mode="edge")),
+                   jax.device_put(np.pad(nbytes_np, (0, pad), mode="edge")),
+                   jax.device_put(np.pad(nows_np, (0, pad), mode="edge")),
+                   jax.device_put(np.arange(R) < n))
+        return {"host": host, "dev": dev, "n": n}
+
+    def sync_host(self, reason: str = "external") -> bool:
+        """Materialize resident device state into the host CIL / queues /
+        policy and drop residency. Idempotent — ``False`` when nothing is
+        resident. These calls (stream end, fallback exits, ``sync_engine``)
+        are the ONLY host↔device state sync points of a resident stream."""
+        rs = self._resident
+        if rs is None:
+            return False
+        self._resident = None
+        if self.is_minlat and rs.s is not None:
+            rs.policy.surplus = float(rs.s)
+        if self.has_edge and rs.h is not None:
+            h = np.asarray(rs.h)
+            for d, e in enumerate(self.edges):
+                rs.queues[e.name].horizon_ms = float(h[d])
+        if self.n_cloud and rs.busy is not None:
+            self._commit_pools(rs.cil, np.asarray(rs.busy),
+                               np.asarray(rs.last), np.asarray(rs.cnt),
+                               rs.t_last)
+        self.state_syncs += 1
+        if reason == "fallback":
+            self.fallback_syncs += 1
+        return True
+
+    def _commit_pools(self, cil, busyF, lastF, cntF, t_last):
+        """The numpy accept step's pool writeback, with the reap at
+        ``t_last`` == the per-arrival walk's end state (monotone keep
+        predicate + dead records never warm-reused, see module docstring)."""
+        for ci, c in enumerate(self.cloud):
+            k = int(cntF[ci])
+            b, l = busyF[ci, :k], lastF[ci, :k]
+            keep = (t_last < b) | (t_last <= l + self.t_idl)
+            recs = [ContainerRecord(c.name, float(bb), float(ll))
+                    for bb, ll, kp in zip(b, l, keep) if kp]
+            if recs:
+                cil.containers[c.name] = recs
+            else:
+                cil.containers.pop(c.name, None)
+
+    def _seed_state(self, rs, pools, cap, edge_queues, dev_names, policy):
+        """The (donated) sequential-state seed ``S`` — from resident device
+        arrays when a valid ``DeviceStreamState`` is held (growing pool
+        width device-side when ``cap`` outgrew it), else from host state."""
+        jnp = self.jnp
+        S: dict = {}
+        if rs is not None and self.n_cloud:
+            busy, last = rs.busy, rs.last
+            have = int(busy.shape[1])
+            if cap > have:
+                grow = ((0, 0), (0, cap - have))
+                busy = jnp.pad(busy, grow, constant_values=np.inf)
+                last = jnp.pad(last, grow, constant_values=-np.inf)
+            S["busy0"], S["last0"], S["cnt0"] = busy, last, rs.cnt
+        elif self.n_cloud:
+            busy0 = np.full((self.n_cloud, cap), np.inf)
+            last0 = np.full((self.n_cloud, cap), -np.inf)
+            cnt0 = np.zeros(self.n_cloud, dtype=np.int32)
+            for ci, recs in enumerate(pools):
+                for j, rec in enumerate(recs):
+                    busy0[ci, j] = rec.busy_until
+                    last0[ci, j] = rec.last_completion
+                cnt0[ci] = len(recs)
+            S["busy0"] = jnp.asarray(busy0)
+            S["last0"] = jnp.asarray(last0)
+            S["cnt0"] = jnp.asarray(cnt0)
+        else:
+            S["busy0"] = jnp.zeros((0, cap))
+            S["last0"] = jnp.zeros((0, cap))
+            S["cnt0"] = jnp.zeros(0, dtype=jnp.int32)
+        if self.has_edge:
+            S["h0"] = rs.h if rs is not None else jnp.asarray(np.array(
+                [edge_queues[nm].horizon_ms for nm in dev_names]))
+        if self.is_minlat:
+            # np scalar, not python float: a strongly-typed aval, so host-
+            # and resident-seeded calls share one jit trace per pool shape
+            S["s0"] = rs.s if rs is not None \
+                else jnp.asarray(np.float64(policy.surplus))
+        return S
+
     # ----------------------------------------------------------- chunk entry
     def place_chunk(self, engine, tasks, edge_queues, interpret: bool):
         """Run one chunk device-resident; returns a ``DecisionBatch`` with
-        committed host state, or ``None`` to fall back (no state consumed)."""
+        committed host state (or, under ``serve_stream`` residency, state
+        left ON DEVICE), or ``None`` to fall back — in which case any
+        resident state is synced first so the host walk sees canonical
+        state and no balancer/RNG state is consumed."""
         from repro.core.decision import (
             DecisionBatch,
             RandomBalancer,
@@ -717,14 +958,41 @@ class JaxPlacementCore:
 
         jnp = self.jnp
         n = len(tasks)
-        task_idx, nows_np, sizes_np, nbytes_np = task_arrays(tasks)
+        staged = engine.__dict__.pop("_jax_staged", None)
+        if staged is not None and staged[0] is not tasks:
+            staged = None       # stale prefetch for some other chunk
+        if staged is not None:
+            task_idx, nows_np, sizes_np, nbytes_np = staged[1]["host"]
+        else:
+            task_idx, nows_np, sizes_np, nbytes_np = task_arrays(tasks)
         if not self.has_edge and self.is_minlat and not self.cloud:
+            self.sync_host("fallback")
             return None  # nothing to choose from — let the walk raise
         if n > 1 and not bool(np.all(np.diff(nows_np) >= 0.0)):
+            self.sync_host("fallback")
             return None  # out-of-order arrivals: host walk replays reaps
+
+        residency = bool(engine.__dict__.get("_device_residency", False))
+        if not residency:
+            # an out-of-stream place_many while state is resident: the
+            # legacy per-chunk path needs canonical host state first
+            self.sync_host("external")
+        cil: ContainerInfoList = engine.predictor.cil
+        policy = engine.policy
+        rs = self._resident
+        if rs is not None and (
+                rs.cil is not cil or rs.policy is not policy
+                or rs.queues is not edge_queues
+                or (n and float(nows_np[0]) < rs.t_last)):
+            # host-structure swap or a cross-chunk out-of-order arrival:
+            # the resident state no longer shadows this stream — sync, then
+            # re-enter residency from host state below
+            self.sync_host("fallback")
+            rs = None
 
         # Everything below may consume balancer state — no fallback past here.
         nom_fixed = None
+        draws = 0
         if self.has_edge and not self.lpw:
             if self.n_dev == 1:
                 nom_fixed = np.zeros(n, dtype=np.int64)
@@ -737,19 +1005,28 @@ class JaxPlacementCore:
                 elif type(bal) is RandomBalancer:
                     nom_fixed = bal.rng.integers(
                         self.n_dev, size=n).astype(np.int64)
+                    draws = n
 
         R = max(PAD_MIN, _next_pow2(n))
         pad = R - n
-        cil: ContainerInfoList = engine.predictor.cil
         cloud_names = [c.name for c in self.cloud]
         dev_names = [e.name for e in self.edges]
         pools = [cil.containers.get(nm, []) for nm in cloud_names]
-        max_existing = max((len(p) for p in pools), default=0)
-        cap = _next_pow2(max(self._cap_hint, POOL_MIN_CAP))
+        if rs is not None:
+            max_existing = int(rs.cnt_max)
+            cap = rs.cap
+        else:
+            max_existing = max((len(p) for p in pools), default=0)
+            cap = _next_pow2(max(self._cap_hint, POOL_MIN_CAP))
 
         with self._scope():
-            sizes = jnp.asarray(np.pad(sizes_np, (0, pad), mode="edge"))
-            nbytes = jnp.asarray(np.pad(nbytes_np, (0, pad), mode="edge"))
+            if staged is not None:
+                sizes, nbytes, nows_d, valid_d = staged[1]["dev"]
+            else:
+                sizes = jnp.asarray(np.pad(sizes_np, (0, pad), mode="edge"))
+                nbytes = jnp.asarray(np.pad(nbytes_np, (0, pad), mode="edge"))
+                nows_d = jnp.asarray(np.pad(nows_np, (0, pad), mode="edge"))
+                valid_d = jnp.asarray(np.arange(R) < n)
             if interpret:
                 # op-by-op: the predict pass is where the FMA-prone
                 # multiplies live (ridge, pricing); eager execution keeps
@@ -758,57 +1035,69 @@ class JaxPlacementCore:
                     P = dict(self._predict(sizes, nbytes))
             else:
                 P = dict(self._predict(sizes, nbytes))
-            P["nows"] = jnp.asarray(np.pad(nows_np, (0, pad), mode="edge"))
-            P["valid"] = jnp.asarray(np.arange(R) < n)
+            P["nows"] = nows_d
+            P["valid"] = valid_d
             if self.has_edge:
-                P["h0"] = jnp.asarray(np.array(
-                    [edge_queues[nm].horizon_ms for nm in dev_names]))
                 P["ECOST"] = jnp.zeros((R, self.n_dev))
                 if nom_fixed is not None:
                     P["nom_fixed"] = jnp.asarray(np.pad(
                         nom_fixed, (0, pad)).astype(np.int32))
                 else:
                     P["nom_fixed"] = jnp.zeros(R, dtype=jnp.int32)
-            policy = engine.policy
             if self.is_minlat:
-                P["s0"] = float(policy.surplus)
                 P["c_max"] = float(policy.c_max)
                 P["alpha"] = float(policy.alpha)
                 P["deadline"] = 0.0
             else:
-                P["s0"] = 0.0
                 P["c_max"] = 0.0
                 P["alpha"] = 0.0
                 P["deadline"] = float(policy.deadline_ms)
             res = None
+            compacted = rs is None   # host seeds arrive freshly reaped
             while True:
                 if cap < max_existing + 1:
                     cap = _next_pow2(max_existing + 1)
-                if self.n_cloud:
-                    busy0 = np.full((self.n_cloud, cap), np.inf)
-                    last0 = np.full((self.n_cloud, cap), -np.inf)
-                    cnt0 = np.zeros(self.n_cloud, dtype=np.int32)
-                    for ci, recs in enumerate(pools):
-                        for j, rec in enumerate(recs):
-                            busy0[ci, j] = rec.busy_until
-                            last0[ci, j] = rec.last_completion
-                        cnt0[ci] = len(recs)
-                    P["busy0"] = jnp.asarray(busy0)
-                    P["last0"] = jnp.asarray(last0)
-                    P["cnt0"] = jnp.asarray(cnt0)
+                S = self._seed_state(rs, pools, cap, edge_queues, dev_names,
+                                     policy)
+                if interpret:
+                    res = self._run_interpret({**P, **S}, R)
                 else:
-                    P["busy0"] = jnp.zeros((0, cap))
-                    P["last0"] = jnp.zeros((0, cap))
-                    P["cnt0"] = jnp.zeros(0, dtype=jnp.int32)
-                res = self._run_interpret(P, R) if interpret \
-                    else self._place(P)
+                    # the jit DONATES S; a resident seed must survive an
+                    # overflow retry, so keep a (tiny) device-side copy
+                    backup = ({k: jnp.copy(v) for k, v in S.items()}
+                              if rs is not None else None)
+                    res = self._place(P, S)
                 if not bool(res["overflow"]) and bool(res["converged"]):
                     break
                 # pool too small for this chunk's cold starts (clamped
                 # writes may also stall convergence): results are discarded
-                # (no state was committed) and the chunk re-runs against a
-                # doubled pool, capped at existing+R where overflow is
-                # impossible and convergence is guaranteed
+                # (no state was committed) and the chunk re-runs
+                if rs is not None:
+                    self.resident_regrows += 1
+                    if not interpret:
+                        # donated seed was consumed — restore from backup
+                        rs.busy, rs.last, rs.cnt = (
+                            backup["busy0"], backup["last0"], backup["cnt0"])
+                        rs.cap = int(backup["busy0"].shape[1])
+                        cap = rs.cap
+                        if "h0" in backup:
+                            rs.h = backup["h0"]
+                        if "s0" in backup:
+                            rs.s = backup["s0"]
+                    if not compacted and self.n_cloud:
+                        # reap ON DEVICE first — a long resident stream
+                        # accumulates dead records (the deferred reap), so
+                        # compaction usually beats growing the pool and
+                        # keeps steady-state pool width bounded by the LIVE
+                        # container count, all without a host sync
+                        rs.busy, rs.last, rs.cnt = self._compact(
+                            rs.busy, rs.last, rs.cnt, rs.t_last)
+                        rs.cnt_max = int(np.asarray(rs.cnt).max())
+                        max_existing = rs.cnt_max
+                        compacted = True
+                        continue
+                # ... against a doubled pool, capped at existing+R where
+                # overflow is impossible and convergence is guaranteed
                 new_cap = min(cap * 2, _next_pow2(max_existing + R))
                 if new_cap <= cap:
                     raise RuntimeError(
@@ -821,29 +1110,39 @@ class JaxPlacementCore:
                    ("gcode", "lat", "cost", "cold", "comp", "wait",
                     "feas", "allowed")}
             iters = int(res["iters"])
-            # ---- commit host state (the numpy accept step, once) ----------
-            if self.is_minlat:
-                policy.surplus = float(res["s_fin"])
-            if self.has_edge:
-                h_fin = np.asarray(res["h_fin"])
-                for d, nm in enumerate(dev_names):
-                    edge_queues[nm].horizon_ms = float(h_fin[d])
-            if self.n_cloud:
-                t_last = float(nows_np[-1])
-                busyF = np.asarray(res["busyF"])
-                lastF = np.asarray(res["lastF"])
-                cntF = np.asarray(res["cntF"])
-                for ci, nm in enumerate(cloud_names):
-                    k = int(cntF[ci])
-                    b, l = busyF[ci, :k], lastF[ci, :k]
-                    # reap at the last arrival == the walk's end state
-                    keep = (t_last < b) | (t_last <= l + self.t_idl)
-                    recs = [ContainerRecord(nm, float(bb), float(ll))
-                            for bb, ll, kp in zip(b, l, keep) if kp]
-                    if recs:
-                        cil.containers[nm] = recs
-                    else:
-                        cil.containers.pop(nm, None)
+            t_last = float(nows_np[-1])
+            if residency:
+                # ---- stay resident: committed state LIVES on device -------
+                if rs is None:
+                    rs = DeviceStreamState()
+                if self.n_cloud:
+                    rs.busy, rs.last, rs.cnt = \
+                        res["busyF"], res["lastF"], res["cntF"]
+                    rs.cnt_max = int(res["cnt_max"])
+                if self.has_edge:
+                    rs.h = res["h_fin"]
+                if self.is_minlat:
+                    rs.s = res["s_fin"]
+                rs.cap = cap
+                rs.t_last = t_last
+                rs.chunks += 1
+                rs.rng_draws += draws
+                rs.cil, rs.policy, rs.queues = cil, policy, edge_queues
+                self._resident = rs
+                self.resident_chunks += 1
+            else:
+                # ---- commit host state (the numpy accept step, once) ------
+                if self.is_minlat:
+                    policy.surplus = float(res["s_fin"])
+                if self.has_edge:
+                    h_fin = np.asarray(res["h_fin"])
+                    for d, nm in enumerate(dev_names):
+                        edge_queues[nm].horizon_ms = float(h_fin[d])
+                if self.n_cloud:
+                    self._commit_pools(cil, np.asarray(res["busyF"]),
+                                       np.asarray(res["lastF"]),
+                                       np.asarray(res["cntF"]), t_last)
+                self.chunk_commits += 1
 
         nom_out = None
         if self.has_edge:
@@ -851,7 +1150,9 @@ class JaxPlacementCore:
         engine.columnar_stats = {"chunks": 1, "repairs": max(iters - 1, 0),
                                  "walked": 0, "n": n}
         self.last_stats = {"n": n, "passes": iters + 1, "rows": R,
-                           "pool_cap": cap, "interpret": interpret}
+                           "pool_cap": cap, "interpret": interpret,
+                           "resident": residency,
+                           "staged": staged is not None}
         engine.jax_stats = dict(self.last_stats)
         return DecisionBatch(
             batch=None,
@@ -884,9 +1185,25 @@ def core_for(engine) -> JaxPlacementCore | None:
         core = hit[1]
         if core is None or core.valid_for(engine):
             return core
+    if hit is not None and hit[1] is not None:
+        # the outgoing core may hold resident stream state (a hedged-policy
+        # swap mid-stream changes the key): materialize before replacing,
+        # or the unsynced device state would be orphaned
+        hit[1].sync_host("fallback")
     try:
         core = JaxPlacementCore(engine)
     except CoreIneligible:
         core = None
     engine.__dict__["_jax_core_cache"] = (key, core)
     return core
+
+
+def sync_engine(engine, reason: str = "external") -> bool:
+    """Materialize any device-resident stream state this engine's core
+    holds back into the host CIL / queues / policy — the hook for external
+    consumers (twin executors, admission snapshots, direct state reads).
+    Safe no-op (``False``) when nothing is resident."""
+    hit = engine.__dict__.get("_jax_core_cache")
+    if hit is not None and hit[1] is not None:
+        return hit[1].sync_host(reason)
+    return False

@@ -97,27 +97,43 @@ _CONST1_TABLES: dict[tuple[int, float], tuple] = {}
 _CONST1_LOCK = threading.Lock()
 
 
-def _const1_table(model, c: float) -> tuple[np.ndarray, np.ndarray]:
-    key = (id(model), float(c))
-    with _CONST1_LOCK:
-        hit = _CONST1_TABLES.get(key)
+def model_keyed_cache(cache: dict, lock: threading.Lock, key, models, build):
+    """The ``_CONST1_TABLES`` idiom as a reusable helper: a module-level cache
+    keyed on model *identities* (with weakref guards against id recycling),
+    so refit-by-swap invalidation is automatic — a refit swaps in fresh model
+    objects (never mutates fitted ones, see ROADMAP), the fresh ids miss the
+    cache, and stale entries are evicted on id recycle or the size-capped
+    dead-ref sweep. ``models`` are the guarded objects (kept alive by the
+    caller for the entry to stay valid); ``build`` is the zero-arg derivation.
+    Shared by the serving step tables below and the device-resident core's
+    operand/table hosting (``repro.core.jax_core``) — per-chunk paths must
+    never re-derive per-model artifacts.
+    """
+    with lock:
+        hit = cache.get(key)
         if hit is not None:
-            ref, breaks, vals = hit
-            if ref() is model:
-                return breaks, vals
-            _CONST1_TABLES.pop(key, None)  # id recycled by a swap: stale
-    breaks, vals = model.const1_table(float(c))
+            refs, val = hit
+            if all(r() is m for r, m in zip(refs, models)):
+                return val
+            cache.pop(key, None)  # id recycled by a swap: stale
+    val = build()
     try:
-        ref = weakref.ref(model)
+        refs = tuple(weakref.ref(m) for m in models)
     except TypeError:
-        return breaks, vals  # non-weakrefable model: serve uncached
-    with _CONST1_LOCK:
-        if len(_CONST1_TABLES) > 256:  # drop entries whose model is gone
-            for k in [k for k, (r, *_) in _CONST1_TABLES.items()
-                      if r() is None]:
-                _CONST1_TABLES.pop(k, None)
-        _CONST1_TABLES[key] = (ref, breaks, vals)
-    return breaks, vals
+        return val  # non-weakrefable model: serve uncached
+    with lock:
+        if len(cache) > 256:  # drop entries whose model is gone
+            for k in [k for k, (rs, _) in cache.items()
+                      if any(r() is None for r in rs)]:
+                cache.pop(k, None)
+        cache[key] = (refs, val)
+    return val
+
+
+def _const1_table(model, c: float) -> tuple[np.ndarray, np.ndarray]:
+    return model_keyed_cache(
+        _CONST1_TABLES, _CONST1_LOCK, (id(model), float(c)), (model,),
+        lambda: model.const1_table(float(c)))
 
 
 def const1_serving_table(model, c: float) -> tuple[np.ndarray, np.ndarray]:

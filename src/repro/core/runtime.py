@@ -869,6 +869,56 @@ def _iter_chunks(workload, chunk_size: int):
     yield from it
 
 
+def _engine_core(eng):
+    """The engine's cached jax placement core, or None (never builds one)."""
+    hit = eng.__dict__.get("_jax_core_cache")
+    return hit[1] if hit is not None else None
+
+
+def _prefetched_chunks(it, eng, counters: dict):
+    """Double-buffered chunk staging for a device-backed ``serve_stream``.
+
+    A single transfer thread pulls chunk k+1 from the workload iterator AND
+    uploads its padded task arrays (``jax_core.stage_chunk`` →
+    ``jax.device_put``) while the consumer runs chunk k's fixed point on
+    device — overlapping workload generation and the H2D transfer with
+    compute. The staged bundle is handed to ``place_chunk`` through
+    ``eng._jax_staged`` (set here on the CONSUMER thread at yield time, so
+    the dict is never raced) and validated by chunk identity; a chunk that
+    ends up on a fallback path simply leaves its bundle to be discarded.
+    ``stage_chunk`` is engine-state-free, so staging never observes a
+    half-updated stream.
+    """
+    from concurrent.futures import ThreadPoolExecutor
+
+    def pull():
+        chunk = next(it, None)
+        if chunk is None:
+            return None
+        staged = None
+        if len(chunk):
+            core = _engine_core(eng)  # appears once the first chunk compiled
+            if core is not None:
+                try:
+                    staged = core.stage_chunk(chunk)
+                except Exception:  # staging is an optimization, never fatal
+                    staged = None
+        return chunk, staged
+
+    with ThreadPoolExecutor(max_workers=1) as ex:
+        fut = ex.submit(pull)
+        while True:
+            item = fut.result()
+            if item is None:
+                return
+            fut = ex.submit(pull)
+            chunk, staged = item
+            if staged is not None:
+                eng.__dict__["_jax_staged"] = (chunk, staged)
+                counters["prefetched"] += 1
+            yield chunk
+
+
 # -------------------------------------------------------------- the runtime
 class PlacementRuntime:
     """ONE serve loop over any (DecisionEngine, ExecutionBackend) pair.
@@ -941,7 +991,9 @@ class PlacementRuntime:
                      keep_tasks: bool | None = None,
                      expected_tasks: int | None = None,
                      keep_inputs: bool = False,
-                     array_backend: str | None = None) -> SimulationResult:
+                     array_backend: str | None = None,
+                     device_residency: bool | None = None,
+                     prefetch: bool | None = None) -> SimulationResult:
         """Streaming chunked serve: the columnar pipeline over arrival chunks,
         carrying every piece of sequential state across chunk boundaries.
 
@@ -985,6 +1037,26 @@ class PlacementRuntime:
         ``DecisionEngine``): ``serve_stream(..., array_backend="jax")`` runs
         every eligible chunk device-resident through ``repro.core.jax_core``
         and falls back per chunk exactly like the engine-level setting.
+
+        On a jax backend two stream-level optimizations engage (see the
+        ``jax_core`` module docstring for the full residency model):
+
+        - ``device_residency`` (default on when eligible) keeps the
+          sequential placement state (CIL pools, surplus bank, edge
+          horizons) ON DEVICE across consecutive in-order chunks — chunk
+          boundaries stop being host↔device sync points; the host
+          structures are materialized only at stream end, on fallback exits
+          and for external readers (``jax_core.sync_engine``). Disabled
+          automatically when admission control or failure-aware serving is
+          configured (those read/mutate host placement state mid-stream).
+        - ``prefetch`` (default on) double-buffers chunk staging: a
+          transfer thread pulls chunk k+1 from the workload iterator and
+          uploads its task arrays (``jax.device_put``) while chunk k's
+          fixed point runs, overlapping workload generation and H2D
+          transfer with device compute.
+
+        ``stream_stats["residency"]`` afterwards reports the resident-chunk
+        / sync / prefetch counters for this stream.
         """
         if chunk_size < 1:
             raise ValueError(f"chunk_size must be >= 1, got {chunk_size}")
@@ -1003,10 +1075,31 @@ class PlacementRuntime:
                             keep_inputs=keep_inputs)
         stats = {"chunks": 0, "n": 0, "spec_segments": 0, "repairs": 0,
                  "walked": 0}
+        use_device = eng.array_backend in ("jax", "jax_interpret")
+        residency = (use_device
+                     and (device_residency is None or device_residency)
+                     and self.admission is None and not self._failure_aware)
+        do_prefetch = (use_device
+                       and (prefetch is None or prefetch)
+                       and not eng.record_decisions)
+        pf = {"prefetched": 0}
+        base: dict = {}
+        if use_device:
+            c0 = _engine_core(eng)
+            if c0 is not None:
+                base = {"state_syncs": c0.state_syncs,
+                        "fallback_syncs": c0.fallback_syncs,
+                        "resident_chunks": c0.resident_chunks,
+                        "chunk_commits": c0.chunk_commits}
+            if residency:
+                eng.__dict__["_device_residency"] = True
+        chunk_iter = _iter_chunks(workload, chunk_size)
+        if do_prefetch:
+            chunk_iter = _prefetched_chunks(chunk_iter, eng, pf)
         prev_last = -np.inf
         force_walk = False
         try:
-            for chunk in _iter_chunks(workload, chunk_size):
+            for chunk in chunk_iter:
                 m = len(chunk)
                 if m == 0:
                     continue
@@ -1042,6 +1135,26 @@ class PlacementRuntime:
                     stats["walked"] += m
         finally:
             eng.array_backend = was_backend
+            if use_device:
+                eng.__dict__.pop("_device_residency", None)
+                eng.__dict__.pop("_jax_staged", None)
+                core = _engine_core(eng)
+                if core is not None:
+                    core.sync_host("stream_end")
+        if use_device:
+            core = _engine_core(eng)
+            if core is not None:
+                stats["residency"] = {
+                    "enabled": residency,
+                    "resident_chunks": core.resident_chunks
+                    - base.get("resident_chunks", 0),
+                    "state_syncs": core.state_syncs
+                    - base.get("state_syncs", 0),
+                    "fallback_syncs": core.fallback_syncs
+                    - base.get("fallback_syncs", 0),
+                    "chunk_commits": core.chunk_commits
+                    - base.get("chunk_commits", 0),
+                    "prefetched": pf["prefetched"]}
         self.stream_stats = stats
         return self.result(arena.finish())
 

@@ -71,6 +71,96 @@ def _gbrt_kernel(x_ref, f_ref, th_ref, lv_ref, o_ref, *, depth: int,
     o_ref[...] = acc[:, None]
 
 
+def _gbrt_multi_kernel(x_ref, mem_ref, lr_ref, base_ref, f_ref, th_ref,
+                       lv_ref, o_ref, *, depth: int, n_trees: int):
+    """One (config, row-block) grid cell of the blocked multi-config launch.
+
+    ``x_ref`` carries the shared size column; the config's constant memory
+    feature is broadcast in-kernel (so the host never materializes the
+    per-config ``(N, 2)`` stacks). The learning-rate multiply stays INSIDE
+    the accumulation (``acc + lr * contrib``) exactly like the per-config
+    kernel — XLA contracts that pattern into an FMA, so hoisting the multiply
+    host-side would break bit-identity with the per-config launches.
+    """
+    sizes = x_ref[...].astype(jnp.float32)        # (bn, 1)
+    bn = sizes.shape[0]
+    mem = jnp.full((bn, 1), mem_ref[0, 0], jnp.float32)
+    x = jnp.concatenate([sizes, mem], axis=1)      # (bn, F=2)
+    F = x.shape[1]
+    I = f_ref.shape[2]
+    L = lv_ref.shape[2]
+
+    lr = lr_ref[0, 0]
+
+    def tree_step(t, acc):
+        feat = f_ref[0, pl.dslice(t, 1), :][0]     # (I,) int32
+        thr = th_ref[0, pl.dslice(t, 1), :][0]     # (I,) f32
+        leaves = lv_ref[0, pl.dslice(t, 1), :][0]  # (L,) f32
+        node = jnp.zeros((bn,), jnp.int32)
+        for _ in range(depth):                     # static unroll
+            sel = _one_hot(node, I)
+            f_id = jax.lax.dot_general(
+                sel, feat.astype(jnp.float32)[:, None],
+                (((1,), (0,)), ((), ())),
+                preferred_element_type=jnp.float32)[:, 0]
+            t_val = jax.lax.dot_general(
+                sel, thr[:, None], (((1,), (0,)), ((), ())),
+                preferred_element_type=jnp.float32)[:, 0]
+            fsel = _one_hot(f_id.astype(jnp.int32), F)
+            x_val = jnp.sum(x * fsel, axis=1)
+            go_right = (x_val > t_val).astype(jnp.int32)
+            node = 2 * node + 1 + go_right
+        leaf = node - (2 ** depth - 1)
+        lsel = _one_hot(leaf, L)
+        contrib = jax.lax.dot_general(
+            lsel, leaves[:, None], (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)[:, 0]
+        return acc + lr * contrib
+
+    acc = jnp.full((bn,), base_ref[0, 0], jnp.float32)
+    acc = jax.lax.fori_loop(0, n_trees, tree_step, acc)
+    o_ref[...] = acc[:, None]
+
+
+@functools.partial(jax.jit, static_argnames=("depth", "block_n", "interpret"))
+def gbrt_predict_multi(x, mem, lr, base, features, thresholds, leaves, *,
+                       depth: int, block_n: int = 256,
+                       interpret: bool = True):
+    """ALL cloud configs in one blocked launch — grid (n_configs, row blocks).
+
+    ``x``: (N, 1) f32 shared size column; ``mem``/``lr``/``base``: (C, 1) f32
+    per-config memory feature, learning rate and ensemble base;
+    ``features``/``thresholds``: (C, T, I) padded operand stacks (+big
+    thresholds mark pass-through nodes/trees); ``leaves``: (C, T, L) f32 (see
+    ``ops.multi_kernel_operands`` for the exact-equivalence padding scheme).
+    Returns (N, C) f32 — column ``c`` matches a per-config
+    ``gbrt_predict_blocked`` launch bit-for-bit. ``N % block_n == 0``.
+    """
+    N = x.shape[0]
+    C, T, I = features.shape
+    L = leaves.shape[2]
+    bn = min(block_n, N)
+    assert N % bn == 0, (N, bn)
+
+    kernel = functools.partial(_gbrt_multi_kernel, depth=depth, n_trees=T)
+    return pl.pallas_call(
+        kernel,
+        grid=(C, N // bn),
+        in_specs=[
+            pl.BlockSpec((bn, 1), lambda c, i: (i, 0)),
+            pl.BlockSpec((1, 1), lambda c, i: (c, 0)),
+            pl.BlockSpec((1, 1), lambda c, i: (c, 0)),
+            pl.BlockSpec((1, 1), lambda c, i: (c, 0)),
+            pl.BlockSpec((1, T, I), lambda c, i: (c, 0, 0)),
+            pl.BlockSpec((1, T, I), lambda c, i: (c, 0, 0)),
+            pl.BlockSpec((1, T, L), lambda c, i: (c, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((bn, 1), lambda c, i: (i, c)),
+        out_shape=jax.ShapeDtypeStruct((N, C), jnp.float32),
+        interpret=interpret,
+    )(x, mem, lr, base, features, thresholds, leaves)
+
+
 @functools.partial(jax.jit, static_argnames=("depth", "lr", "base", "block_n",
                                              "interpret"))
 def gbrt_predict_blocked(x, features, thresholds, leaves, *, depth: int,

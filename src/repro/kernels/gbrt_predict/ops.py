@@ -2,11 +2,49 @@
 
 from __future__ import annotations
 
+import threading
+import weakref
+
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.kernels.gbrt_predict.kernel import gbrt_predict_blocked
+from repro.kernels.gbrt_predict.kernel import (
+    gbrt_predict_blocked,
+    gbrt_predict_multi,
+)
+
+# Device-operand caches, keyed on model identity with a weakref guard — the
+# ``_CONST1_TABLES`` idiom (see ``repro.core.predictor``): an online refit
+# swaps in a fresh model object, so the fresh id misses the cache and the
+# stale entry is evicted on id recycle or the size-capped dead-ref sweep.
+# Hosting the ensemble arrays once per model (not once per call/chunk) is
+# what keeps the streaming serve path free of per-chunk host→device prep.
+_OPERANDS: dict[int, tuple] = {}
+_MULTI_OPERANDS: dict[tuple, tuple] = {}
+_OPERAND_LOCK = threading.Lock()
+
+
+def _cached(cache: dict, key, models, build):
+    with _OPERAND_LOCK:
+        hit = cache.get(key)
+        if hit is not None:
+            refs, val = hit
+            if all(r() is m for r, m in zip(refs, models)):
+                return val
+            cache.pop(key, None)  # id recycled by a swap: stale
+    val = build()
+    try:
+        refs = tuple(weakref.ref(m) for m in models)
+    except TypeError:
+        return val  # non-weakrefable model: serve uncached
+    with _OPERAND_LOCK:
+        if len(cache) > 128:  # drop entries whose model is gone
+            for k in [k for k, (rs, _) in cache.items()
+                      if any(r() is None for r in rs)]:
+                cache.pop(k, None)
+        cache[key] = (refs, val)
+    return val
 
 
 def kernel_operands(model) -> tuple:
@@ -16,13 +54,70 @@ def kernel_operands(model) -> tuple:
     +inf thresholds mark pass-through nodes; the kernel compares in f32, so
     thresholds are clipped to the finite f32 range host-side. Shared by the
     wrapper below and the device-resident placement core
-    (``repro.core.jax_core``), which hosts one tuple per cloud config.
+    (``repro.core.jax_core``); hosted once per model identity (weakref-guarded
+    — refit-by-swap invalidates automatically).
     """
-    big = np.float32(3.0e38)
-    thr = np.clip(model.thresholds, -big, big).astype(np.float32)
-    return (jnp.asarray(np.asarray(model.features, np.int32)),
-            jnp.asarray(thr),
-            jnp.asarray(np.asarray(model.leaves, np.float32)))
+    def build():
+        big = np.float32(3.0e38)
+        thr = np.clip(model.thresholds, -big, big).astype(np.float32)
+        return (jnp.asarray(np.asarray(model.features, np.int32)),
+                jnp.asarray(thr),
+                jnp.asarray(np.asarray(model.leaves, np.float32)))
+
+    return _cached(_OPERANDS, id(model), (model,), build)
+
+
+def multi_kernel_operands(models) -> tuple:
+    """Stacked, padded operands for the blocked ``gbrt_predict_multi`` launch.
+
+    Pads every config's ensemble to the common ``(T, I, L)`` of the deepest /
+    widest one so a single (n_configs, row-blocks) grid covers them all, while
+    staying BIT-IDENTICAL per config to the per-config launches:
+
+    - extra trees are all-pass-through (+big thresholds) with zero leaves —
+      each contributes exactly ``+0.0f``;
+    - a depth-``d`` tree padded to depth ``dmax`` extends every walk through
+      pass-through levels (``x > +big`` is always false), landing on the
+      leftmost descendant — leaf ``j`` maps to ``j << (dmax - d)``, so leaf
+      values are scattered to those slots and the lookup is exact;
+    - the learning-rate multiply stays in-kernel (per-config ``lr`` operand),
+      preserving the FMA-contracted ``acc + lr * contrib`` accumulation of
+      the per-config kernel bit-for-bit.
+
+    Returns ``(features (C,T,I) i32, thresholds (C,T,I) f32, leaves (C,T,L)
+    f32, lr (C,1) f32, base (C,1) f32, depth)`` with all but ``depth`` as jnp
+    arrays. Cached per model-identity tuple (weakref-guarded, refit-by-swap
+    safe).
+    """
+    models = tuple(models)
+
+    def build():
+        big = np.float32(3.0e38)
+        depths = [int(m.config.max_depth) for m in models]
+        dmax = max(depths)
+        tmax = max(int(np.asarray(m.features).shape[0]) for m in models)
+        n_int, n_leaf = 2 ** dmax - 1, 2 ** dmax
+        C = len(models)
+        F = np.zeros((C, tmax, n_int), np.int32)
+        TH = np.full((C, tmax, n_int), big, np.float32)
+        LV = np.zeros((C, tmax, n_leaf), np.float32)
+        LR = np.zeros((C, 1), np.float32)
+        BASE = np.zeros((C, 1), np.float32)
+        for c, m in enumerate(models):
+            f = np.asarray(m.features, np.int32)
+            th = np.clip(m.thresholds, -big, big).astype(np.float32)
+            lv = np.asarray(m.leaves, np.float32)
+            t, i = f.shape
+            F[c, :t, :i] = f
+            TH[c, :t, :i] = th
+            LV[c, :t, ::1 << (dmax - depths[c])] = lv
+            LR[c, 0] = np.float32(m.config.learning_rate)
+            BASE[c, 0] = np.float32(m.base)
+        return (jnp.asarray(F), jnp.asarray(TH), jnp.asarray(LV),
+                jnp.asarray(LR), jnp.asarray(BASE), dmax)
+
+    key = tuple(id(m) for m in models)
+    return _cached(_MULTI_OPERANDS, key, models, build)
 
 
 def gbrt_predict(model, x, *, block_n: int = 256,

@@ -294,3 +294,111 @@ def test_random_streams_keep_interpret_parity(ir_setup):
         assert_records_equal(res.records, ref.records)
 
     prop()
+
+
+# ------------------------------------------------- stream residency (ISSUE 9)
+@pytest.mark.parametrize("chunk_size,n", [(1, 60), (53, 300), (4096, 300)],
+                         ids=["chunk1", "chunk53", "chunk4096"])
+def test_resident_stream_parity_and_sync_counts(ir_setup, monkeypatch,
+                                                chunk_size, n):
+    """Cross-chunk device residency: per-record bit parity with the one-shot
+    numpy oracle AND exactly ONE host materialization for the whole clean
+    stream (the stream-end sync) — chunk boundaries stop being sync points."""
+    monkeypatch.setattr(decision_mod, "COLUMNAR_CHUNK", 64)
+    twin, models = ir_setup
+    tasks = _bursty(twin, n)
+    ref = _runtime(twin, models).serve_stream(tasks, chunk_size=chunk_size)
+    rt = _runtime(twin, models)
+    res = rt.serve_stream(tasks, chunk_size=chunk_size,
+                          array_backend="jax_interpret")
+    assert_records_equal(res.records, ref.records)
+    r = rt.stream_stats["residency"]
+    assert r["enabled"]
+    assert r["resident_chunks"] == rt.stream_stats["chunks"]
+    assert r["chunk_commits"] == 0
+    assert r["state_syncs"] == 1 and r["fallback_syncs"] == 0
+    if rt.stream_stats["chunks"] > 1:
+        assert r["prefetched"] >= 1  # the transfer thread staged chunks
+
+
+def test_resident_midstream_fallback_and_reentry(ir_setup):
+    """A hedged chunk mid-stream exits residency through ONE fallback sync
+    (host walk sees canonical state), and the following chunks re-enter
+    residency with state intact — parity vs the numpy oracle under the same
+    policy-swap schedule."""
+    twin, models = ir_setup
+    tasks = _bursty(twin, 300)
+
+    def swapping_chunks(rt):
+        # chunks 0-1 resident, chunk 2 hedged (host walk), chunks 3-4 resident
+        orig = rt.engine.policy
+        hedged = HedgedPolicy(MinLatencyPolicy(c_max=6e-6, alpha=0.05),
+                              hedge_threshold_ms=50.0)
+        for i in range(5):
+            if i == 2:
+                rt.engine.policy = hedged
+            elif i == 3:
+                rt.engine.policy = orig
+            yield tasks[i * 60:(i + 1) * 60]
+
+    ref_rt = _runtime(twin, models)
+    ref = ref_rt.serve_stream(swapping_chunks(ref_rt), chunk_size=60)
+    rt = _runtime(twin, models)
+    # prefetch off: the transfer thread pulls chunk k+1 (firing the swap
+    # side effect) while chunk k is still placing, which would reorder the
+    # schedule this test pins down
+    res = rt.serve_stream(swapping_chunks(rt), chunk_size=60,
+                          array_backend="jax_interpret", prefetch=False)
+    assert_records_equal(res.records, ref.records)
+    core = jax_core.core_for(rt.engine)
+    assert core is not None
+    assert core.resident_chunks == 4
+    assert core.fallback_syncs == 1    # the hedged chunk's exit
+    assert core.state_syncs == 2       # fallback exit + stream end
+    assert core.chunk_commits == 0
+
+
+def test_resident_pool_growth_donation_safety(ir_setup):
+    """Compiled mode donates the state seed into the jitted step; a resident
+    chunk whose cold starts overflow the pool must restore the seed from the
+    device-side backup, compact/grow, and re-run — no use-after-donate, and
+    decisions stay identical to numpy."""
+    twin, models = ir_setup
+    tasks = _bursty(twin, 400)
+    ref = _runtime(twin, models).serve_stream(tasks, chunk_size=64)
+    rt = _runtime(twin, models)
+    res = rt.serve_stream(tasks, chunk_size=64, array_backend="jax")
+    ra, rb = ref.records, res.records
+    assert list(ra.targets) == list(rb.targets)
+    for col in ("predicted_cold", "actual_cold", "feasible"):
+        assert np.array_equal(getattr(ra, col), getattr(rb, col)), col
+    core = jax_core.core_for(rt.engine)
+    assert core is not None
+    assert core.resident_regrows >= 1  # the donated-seed retry path ran
+    r = rt.stream_stats["residency"]
+    assert r["chunk_commits"] == 0 and r["state_syncs"] == 1
+
+
+def test_resident_state_syncs_for_external_place_many(ir_setup):
+    """An out-of-stream ``place_many`` between two resident streams sees the
+    canonical host state: stream 1's end sync landed it, and the standalone
+    call commits per chunk like before residency existed."""
+    twin, models = ir_setup
+    tasks = _bursty(twin, 200)
+    ref_rt = _runtime(twin, models)
+    ref1 = ref_rt.serve_stream(tasks[:80], chunk_size=40)
+    ref_mid = ref_rt.serve(tasks[80:120])
+    ref2 = ref_rt.serve_stream(tasks[120:], chunk_size=40)
+    rt = _runtime(twin, models)
+    res1 = rt.serve_stream(tasks[:80], chunk_size=40,
+                           array_backend="jax_interpret")
+    rt.engine.array_backend = "jax_interpret"
+    res_mid = rt.serve(tasks[80:120])
+    rt.engine.array_backend = "numpy"
+    res2 = rt.serve_stream(tasks[120:], chunk_size=40,
+                           array_backend="jax_interpret")
+    assert_records_equal(res1.records, ref1.records)
+    assert_records_equal(res_mid.records, ref_mid.records)
+    assert_records_equal(res2.records, ref2.records)
+    core = jax_core.core_for(rt.engine)
+    assert core.chunk_commits >= 1  # the standalone call committed host-side

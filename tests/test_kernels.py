@@ -158,3 +158,63 @@ def test_gbrt_predict_sweep(n_features, depth, n_trees, rng):
     np.testing.assert_allclose(pk, pr, rtol=1e-4, atol=1e-4)
     # and against the numpy production path
     np.testing.assert_allclose(pk, m.predict(xq), rtol=1e-4, atol=1e-4)
+
+
+def test_gbrt_predict_multi_matches_per_config(rng):
+    """The blocked multi-config launch (one grid over the padded operand
+    stack) is BIT-identical per column to a per-config launch — including
+    heterogeneous depths/tree counts and a repeated model (shared id)."""
+    from repro.kernels.gbrt_predict.kernel import (
+        gbrt_predict_blocked,
+        gbrt_predict_multi,
+    )
+    from repro.kernels.gbrt_predict.ops import (
+        kernel_operands,
+        multi_kernel_operands,
+    )
+
+    models = []
+    for depth, trees in [(2, 20), (3, 50), (4, 10)]:
+        x = rng.normal(size=(300, 2)) * 100.0
+        y = x[:, 0] * 2.0 + np.sin(x[:, 1] / 30.0) * 10.0
+        models.append(GBRT.fit(x, y, GBRTConfig(n_trees=trees,
+                                                max_depth=depth)))
+    models.append(models[0])  # same model under two configs
+    mems = [1280.0, 1536.0, 1792.0, 2048.0]
+    sizes = (rng.normal(size=(256,)) * 100.0).astype(np.float32)
+
+    F, TH, LV, LR, BASE, dmax = multi_kernel_operands(models)
+    MEM = jnp.asarray(np.array([[m] for m in mems], np.float32))
+    multi = np.asarray(gbrt_predict_multi(
+        jnp.asarray(sizes[:, None]), MEM, LR, BASE, F, TH, LV,
+        depth=dmax, block_n=64, interpret=True))
+    assert multi.shape == (256, len(models))
+    for c, (m, mem) in enumerate(zip(models, mems)):
+        feats, thr, lvs = kernel_operands(m)
+        x2 = np.stack([sizes, np.full(256, mem, np.float32)], axis=1)
+        single = np.asarray(gbrt_predict_blocked(
+            jnp.asarray(x2), feats, thr, lvs, depth=m.config.max_depth,
+            lr=float(m.config.learning_rate), base=float(m.base),
+            block_n=64, interpret=True))
+        assert np.array_equal(multi[:, c], single), f"config {c}"
+
+
+def test_gbrt_operand_caches(rng):
+    """Kernel operands are hosted once per model identity (weakref-guarded —
+    a refit-by-swap misses and re-hosts), for both the per-config and the
+    stacked multi-config form."""
+    from repro.kernels.gbrt_predict.ops import (
+        kernel_operands,
+        multi_kernel_operands,
+    )
+
+    x = rng.normal(size=(200, 1)) * 100.0
+    y = x[:, 0] * 1.5
+    m1 = GBRT.fit(x, y, GBRTConfig(n_trees=8, max_depth=2))
+    ops1 = kernel_operands(m1)
+    assert kernel_operands(m1) is ops1
+    multi1 = multi_kernel_operands((m1, m1))
+    assert multi_kernel_operands((m1, m1)) is multi1
+    m2 = GBRT.fit(x, y, GBRTConfig(n_trees=8, max_depth=2))  # "refit"
+    assert kernel_operands(m2) is not ops1
+    assert multi_kernel_operands((m1, m2)) is not multi1
