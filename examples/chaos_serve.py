@@ -17,6 +17,14 @@ The scenario an operator plans for:
    (spec, dispatch times): the same seed reproduces the identical
    retry/failover/shed set, and the spec rides inside a captured trace
    (``fault_spec_of``) so any chaos run is replayable.
+4. **Overload survival** — a 20x MMPP arrival burst. Reactively, the burst
+   front eats a cold-start storm (the warm pool matches the quiet-phase
+   rate). With ``PrewarmPolicy`` the streaming burst forecaster spots the
+   regime switch a few arrivals in and spawns keep-alive containers ahead
+   of the front, visibly cutting cold starts; with ``ReclamationPolicy``
+   the same burst pressuring the top tier preempts placed lower-tier work
+   off the hot device (demoting it one SLO class) instead of only shedding
+   new arrivals at the admission door.
 
     PYTHONPATH=src python examples/chaos_serve.py
 """
@@ -35,8 +43,11 @@ from repro.core.faults import (
     SLOTier,
     TransientErrors,
 )
+from repro.core.decision import MinCostPolicy
 from repro.core.fit import build_fleet_predictor, fit_app
+from repro.core.overload import PrewarmPolicy, ReclamationPolicy
 from repro.core.runtime import PlacementRuntime, TwinBackend
+from repro.core.workload import BurstyWorkload
 from repro.trace import capture, fault_spec_of
 
 CONFIGS = (1280, 1536, 1792)
@@ -55,14 +66,14 @@ tiers = (SLOTier(INTERACTIVE_SLO_MS, sheddable=False),   # never shed
          SLOTier(BATCH_SLO_MS))                          # sheddable
 
 
-def make_runtime(faults=None, failure_aware=False):
+def make_runtime(faults=None, failure_aware=False, policy=None, **overload):
     pred = build_fleet_predictor(models, dict(FLEET), configs=CONFIGS)
-    eng = DecisionEngine(predictor=pred,
-                         policy=MinLatencyPolicy(c_max=2.97e-5, alpha=0.02))
+    eng = DecisionEngine(predictor=pred, policy=policy or MinLatencyPolicy(
+        c_max=2.97e-5, alpha=0.02))
     backend = TwinBackend(twin, seed=11, edge_names=tuple(FLEET),
                           edge_speed=FLEET, faults=faults)
     if not failure_aware:
-        return PlacementRuntime(eng, backend)
+        return PlacementRuntime(eng, backend, **overload)
     return PlacementRuntime(
         eng, backend,
         retry=RetryPolicy(max_attempts=4, backoff_ms=50.0, backoff_mult=2.0),
@@ -109,3 +120,34 @@ print("rerun with the same spec: identical fault schedule, retries, and "
 trace = capture(chaos, app="FD", faults=spec)
 assert fault_spec_of(trace) == spec
 print("fault spec rides inside the captured trace — chaos runs replay")
+
+# ------------------------------------------------ 4a. burst: predictive prewarm
+burst_wl = BurstyWorkload(rate_per_s=2.0, size_sampler=twin.sample_input,
+                          burst_multiplier=20.0, mean_quiet_s=20.0,
+                          mean_burst_s=5.0, seed=3)
+burst_tasks = burst_wl.generate(400)
+reactive = make_runtime().serve(burst_tasks)
+rt_pw = make_runtime(prewarm=PrewarmPolicy(count=4))
+warmed = rt_pw.serve(burst_tasks)
+cold_re = int(reactive.records.actual_cold.sum())
+cold_pw = int(warmed.records.actual_cold.sum())
+print(f"\n20x burst, reactive: {cold_re} cold starts; predictive prewarm: "
+      f"{cold_pw} ({rt_pw.overload.forecaster.n_triggers} burst(s) "
+      f"forecast, {len(rt_pw.overload.prewarm_log)} containers spawned, "
+      f"{rt_pw.overload.n_extensions} keep-alive extensions)")
+assert cold_pw < cold_re, "pre-warming must beat reacting to the burst"
+
+# --------------------------------------------- 4b. burst: fair-share reclaim
+for i, t in enumerate(burst_tasks):
+    t.tier = i % 3              # interactive / standard / batch
+recl = ReclamationPolicy(tiers=(SLOTier(3_000.0, sheddable=False),
+                                SLOTier(2_500.0), SLOTier(2_000.0)),
+                         shares=(2.0, 1.0, 1.0))
+rt_rc = make_runtime(policy=MinCostPolicy(deadline_ms=3_000.0),
+                     reclamation=recl)
+reclaimed = rt_rc.serve(burst_tasks)
+n_moved = sum(1 for e in rt_rc.overload.reclaim_log if e[6])
+print(f"under tier-0 pressure: {len(rt_rc.overload.reclaim_log)} lower-tier "
+      f"tasks preempted ({n_moved} moved off the hot device, "
+      f"{reclaimed.n_downgraded} demoted one SLO class, 0 shed)")
+assert len(rt_rc.overload.reclaim_log) > 0

@@ -24,6 +24,11 @@ Components (paper section in parens):
                      (outages, transient errors, cold-start spikes, stragglers,
                      network blackouts) + the failure policies (retry/failover,
                      circuit breaker, SLO-tiered admission control)
+- ``overload``     — overload survival: predictive container pre-warming
+                     (streaming burst forecaster + keep-alive spawns ahead of
+                     predicted bursts) and fair-share tier reclamation
+                     (preempt/downgrade placed lower-tier work under top-tier
+                     pressure)
 - ``runtime``      — the unified serve loop: ``PlacementRuntime`` over pluggable
                      ``ExecutionBackend``s (``TwinBackend`` here,
                      ``repro.serving.placement.LiveBackend`` live), with the
@@ -89,6 +94,13 @@ from repro.core.faults import (
     TargetHealth,
     TransientErrors,
 )
+from repro.core.overload import (
+    BurstForecaster,
+    OverloadManager,
+    PrewarmPolicy,
+    ReclamationPolicy,
+    select_victims,
+)
 from repro.core.recurrence import fifo_starts
 from repro.core.events import Event, EventHeap, SingleSlotWorker
 from repro.core.runtime import (
@@ -144,6 +156,11 @@ __all__ = [
     "Straggler",
     "TargetHealth",
     "TransientErrors",
+    "BurstForecaster",
+    "OverloadManager",
+    "PrewarmPolicy",
+    "ReclamationPolicy",
+    "select_victims",
     "PoissonWorkload",
     "TaskChunk",
     "TaskInput",

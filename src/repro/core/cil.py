@@ -89,3 +89,31 @@ class ContainerInfoList:
                               last_completion=completion_time)
         self.containers.setdefault(config, []).append(rec)
         return True
+
+    def prewarm(self, config: str, ready_ms: float,
+                keepalive_until_ms: float) -> ContainerRecord:
+        """Add a speculatively spawned container, warm for exactly
+        ``[ready_ms, keepalive_until_ms]``.
+
+        Both the walk path (``idle_containers`` → ``expires_at``) and the
+        columnar decision core hardcode the warm window as
+        ``busy_until <= now <= last_completion + t_idl``, so the record
+        encodes the keep-alive horizon through ``last_completion =
+        keepalive_until_ms - t_idl_ms`` rather than a new field — a
+        prewarmed container needs zero changes in either consumer. The
+        shifted ``last_completion`` also makes prewarmed records the
+        *least*-recently-completed idle containers, so genuinely warm
+        containers win the MRU reuse race and the prewarmed pool absorbs
+        overflow only. Reuse via ``record_dispatch`` converts the record to
+        the normal completion-driven lifecycle.
+        """
+        if not keepalive_until_ms > ready_ms:
+            raise ValueError(
+                f"prewarm keep-alive window must end after it starts: "
+                f"keepalive_until_ms={keepalive_until_ms!r} <= "
+                f"ready_ms={ready_ms!r}")
+        rec = ContainerRecord(
+            config=config, busy_until=float(ready_ms),
+            last_completion=float(keepalive_until_ms) - self.t_idl_ms)
+        self.containers.setdefault(config, []).append(rec)
+        return rec

@@ -35,11 +35,17 @@ from typing import Any, Iterator
 
 # Tie priority at equal virtual times: a completion frees capacity that a
 # simultaneous dispatch/arrival is allowed to use (never the reverse).
+# Preemptions (fair-share reclamation revising placements) order after
+# arrivals: a victim is only re-placed once everything arriving at the same
+# instant has been seen, so the reclaim schedule is a pure function of the
+# arrival prefix.
 COMPLETION = 0
 DISPATCH = 1
 ARRIVAL = 2
+PREEMPT = 3
 
-KIND_NAMES = {COMPLETION: "completion", DISPATCH: "dispatch", ARRIVAL: "arrival"}
+KIND_NAMES = {COMPLETION: "completion", DISPATCH: "dispatch",
+              ARRIVAL: "arrival", PREEMPT: "preempt"}
 
 
 @dataclass(frozen=True)

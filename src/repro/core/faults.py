@@ -348,15 +348,15 @@ class RetryPolicy:
             raise FaultError(
                 f"max_attempts must be >= 1 (the first dispatch counts), "
                 f"got {self.max_attempts!r}")
-        if self.backoff_ms < 0.0:
+        if not self.backoff_ms >= 0.0 or not np.isfinite(self.backoff_ms):
             raise FaultError(
-                f"backoff_ms must be a non-negative duration, got "
+                f"backoff_ms must be a finite non-negative duration, got "
                 f"{self.backoff_ms!r}")
-        if self.backoff_mult < 1.0:
+        if not self.backoff_mult >= 1.0 or not np.isfinite(self.backoff_mult):
             raise FaultError(
-                f"backoff_mult must be >= 1 (non-shrinking backoff), got "
-                f"{self.backoff_mult!r}")
-        if self.timeout_ms <= 0.0:
+                f"backoff_mult must be finite and >= 1 (non-shrinking "
+                f"backoff), got {self.backoff_mult!r}")
+        if not self.timeout_ms > 0.0:
             raise FaultError(
                 f"timeout_ms must be a positive duration (inf = no "
                 f"timeout), got {self.timeout_ms!r}")
@@ -499,6 +499,14 @@ class AdmissionPolicy:
             raise FaultError(
                 f"headroom must be a positive scale factor, got "
                 f"{self.headroom!r}")
+        for i in range(1, len(self.tiers)):
+            if self.tiers[i].deadline_ms >= self.tiers[i - 1].deadline_ms:
+                raise FaultError(
+                    f"tier deadlines must be strictly decreasing down the "
+                    f"table (lower SLO classes carry tighter shed thresholds "
+                    f"so they degrade first): tiers[{i}].deadline_ms="
+                    f"{self.tiers[i].deadline_ms!r} >= tiers[{i - 1}]."
+                    f"deadline_ms={self.tiers[i - 1].deadline_ms!r}")
 
     def shed_mask(self, tier: np.ndarray,
                   predicted_latency_ms: np.ndarray) -> np.ndarray:

@@ -579,6 +579,19 @@ class Predictor:
             )
         return out
 
+    def prewarm(self, target: str, ready_ms: float,
+                keepalive_until_ms: float):
+        """Register a speculatively spawned container for a cloud target.
+
+        The returned ``ContainerRecord`` is warm over exactly
+        ``[ready_ms, keepalive_until_ms]`` (see ``ContainerInfoList.prewarm``
+        for the encoding), so every warm/cold consult — ``predict``,
+        ``predict_at``, and the columnar decision core — sees the prewarmed
+        pool with no further plumbing. Edge devices have no containers.
+        """
+        self._target(target)  # raises KeyError for unknown/edge names
+        return self.cil.prewarm(target, ready_ms, keepalive_until_ms)
+
     # ------------------------------------------------------------ CIL update
     def update_cil(self, chosen: str, now: float, prediction: Prediction) -> None:
         """Record the chosen placement (paper: Predictor.updateCIL)."""

@@ -50,6 +50,9 @@ class TaskRecord:
     failed: bool = False
     attempts: int = 1
     tier: int = 0
+    # fair-share reclamation demoted this task to a lower SLO class
+    # (``tier`` holds the FINAL, post-demotion class)
+    downgraded: bool = False
 
     @property
     def warm_cold_mismatch(self) -> bool:
@@ -105,6 +108,8 @@ class RecordBatch(Sequence):
     failed: np.ndarray | None = None    # bool
     attempts: np.ndarray | None = None  # int64, >= 1 (0 for shed rows)
     tier: np.ndarray | None = None      # int64
+    # reclamation demoted the task's SLO class (``tier`` is the final class)
+    downgraded: np.ndarray | None = None  # bool
 
     def __post_init__(self):
         n = self.target_codes.shape[0]
@@ -116,6 +121,8 @@ class RecordBatch(Sequence):
             self.attempts = np.ones(n, dtype=np.int64)
         if self.tier is None:
             self.tier = np.zeros(n, dtype=np.int64)
+        if self.downgraded is None:
+            self.downgraded = np.zeros(n, dtype=bool)
 
     # ------------------------------------------------------------ construction
     @classmethod
@@ -168,6 +175,7 @@ class RecordBatch(Sequence):
             failed=np.array([r.failed for r in records], bool),
             attempts=np.array([r.attempts for r in records], np.int64),
             tier=np.array([r.tier for r in records], np.int64),
+            downgraded=np.array([r.downgraded for r in records], bool),
         )
 
     # ------------------------------------------------------------- sequence API
@@ -217,6 +225,7 @@ class RecordBatch(Sequence):
             failed=bool(self.failed[i]),
             attempts=int(self.attempts[i]),
             tier=int(self.tier[i]),
+            downgraded=bool(self.downgraded[i]),
         )
 
     def __iter__(self) -> Iterator[TaskRecord]:
@@ -326,6 +335,7 @@ class RecordBatch(Sequence):
             failed=self.failed[order],
             attempts=self.attempts[order],
             tier=self.tier[order],
+            downgraded=self.downgraded[order],
             arrivals=opt(self.arrivals),
             task_idx=opt(self.task_idx),
             input_size=opt(self.input_size),
@@ -337,7 +347,7 @@ _ARENA_F64 = ("predicted_latency_ms", "predicted_cost", "actual_latency_ms",
               "actual_cost", "allowed_cost", "completion_ms", "queue_wait_ms",
               "exec_ms", "hedge_exec_ms")
 _ARENA_BOOL = ("predicted_cold", "actual_cold", "feasible", "hedged",
-               "shed", "failed")
+               "shed", "failed", "downgraded")
 _ARENA_I64 = ("target_codes", "hedge_codes", "attempts", "tier")
 
 
@@ -579,6 +589,15 @@ class SimulationResult:
     def n_retried(self) -> int:
         """Tasks that needed more than one dispatch (retry or failover)."""
         return int(np.count_nonzero(self.records.attempts > 1))
+
+    @property
+    def n_downgraded(self) -> int:
+        """Tasks demoted to a lower SLO class by fair-share reclamation."""
+        return int(np.count_nonzero(self.records.downgraded))
+
+    @property
+    def pct_downgraded(self) -> float:
+        return self.n_downgraded / max(self.n, 1) * 100.0
 
     def slo_attainment(self, deadline_ms: float,
                        tier: int | None = None) -> float:

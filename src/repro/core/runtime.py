@@ -64,7 +64,14 @@ from typing import Protocol, Sequence, runtime_checkable
 
 import numpy as np
 
-from repro.core.events import ARRIVAL, COMPLETION, DISPATCH, EventHeap, SingleSlotWorker
+from repro.core.events import (
+    ARRIVAL,
+    COMPLETION,
+    DISPATCH,
+    PREEMPT,
+    EventHeap,
+    SingleSlotWorker,
+)
 
 from repro.core.apps import (
     AWSTwin,
@@ -88,6 +95,12 @@ from repro.core.faults import (
     FaultSpec,
     RetryPolicy,
     TargetHealth,
+)
+from repro.core.overload import (
+    OverloadManager,
+    PrewarmPolicy,
+    ReclamationPolicy,
+    select_victims,
 )
 from repro.core.predictor import Prediction
 from repro.core.pricing import LambdaPricing
@@ -249,6 +262,31 @@ class GroundTruthCloud:
                                     last_completion=completion,
                                     expires_at=expiry))
         return cold, completion
+
+    def spinup(self, config: str, ready_ms: float, expires_ms: float) -> None:
+        """Speculatively spawn a container (predictive pre-warming): spinning
+        up until ``ready_ms``, then idle-warm until its DETERMINISTIC
+        keep-alive expiry ``expires_ms``. Never draws from ``self.rng`` — the
+        container-lifetime draw block in the batched samplers must see the
+        exact same stream with or without pre-warming (bit-parity). A reuse
+        converts the container to the normal sampled-lifetime lifecycle."""
+        self.pools.setdefault(config, []).append(GTContainer(
+            busy_until=float(ready_ms), last_completion=float(ready_ms),
+            expires_at=float(expires_ms)))
+
+    def extend_keepalive(self, config: str, ready_ms: float,
+                         old_expires_ms: float, new_expires_ms: float) -> bool:
+        """Push out the keep-alive expiry of a STILL-UNUSED prewarmed
+        container, matched by value — ``execute_many`` rebuilds its pool
+        lists as fresh ``GTContainer`` objects, so object identity does not
+        survive a dispatch round. A container that was reused no longer
+        matches (its ``busy_until`` moved), which is exactly the
+        "only extend idle retainers" rule. Returns True when extended."""
+        for c in self.pools.get(config, []):
+            if c.busy_until == ready_ms and c.expires_at == old_expires_ms:
+                c.expires_at = float(new_expires_ms)
+                return True
+        return False
 
 
 class TwinBackend:
@@ -931,7 +969,9 @@ class PlacementRuntime:
     def __init__(self, engine: DecisionEngine, backend: ExecutionBackend,
                  retry: RetryPolicy | None = None,
                  admission: AdmissionPolicy | None = None,
-                 breaker: CircuitBreaker | None = None):
+                 breaker: CircuitBreaker | None = None,
+                 prewarm: PrewarmPolicy | None = None,
+                 reclamation: ReclamationPolicy | None = None):
         self.engine = engine
         self.backend = backend
         self.stream_stats: dict | None = None  # last serve_stream aggregate
@@ -949,6 +989,13 @@ class PlacementRuntime:
         self._failure_aware = (retry is not None or admission is not None
                                or breaker is not None)
         self._pre_horizons: dict[str, float] | None = None
+        # overload survival (see ``repro.core.overload``): predictive
+        # container pre-warming and/or fair-share tier reclamation. Both off
+        # (the default) takes EXACTLY the pre-overload serve paths —
+        # ``self.overload is None`` gates every hook.
+        self.overload = (OverloadManager(prewarm, reclamation)
+                         if prewarm is not None or reclamation is not None
+                         else None)
 
     @property
     def edge_name(self) -> str:
@@ -980,10 +1027,14 @@ class PlacementRuntime:
         twin's batched sampler is bit-identical to its sequential one.
         """
         if batched:
+            self._pre_place(tasks)
             self._snapshot_horizons()
             decisions = self.engine.place_many(tasks, edge_queues=self.edge_queues)
             records = self._execute_decisions(tasks, decisions)
+            self._post_execute(records)
         else:
+            # the per-task step path skips the overload hooks, exactly like
+            # the failure machinery (both are columnar-batch features)
             records = [self.step(t) for t in tasks]
         return self.result(records)
 
@@ -1078,7 +1129,8 @@ class PlacementRuntime:
         use_device = eng.array_backend in ("jax", "jax_interpret")
         residency = (use_device
                      and (device_residency is None or device_residency)
-                     and self.admission is None and not self._failure_aware)
+                     and self.admission is None and not self._failure_aware
+                     and self.overload is None)
         do_prefetch = (use_device
                        and (prefetch is None or prefetch)
                        and not eng.record_decisions)
@@ -1118,12 +1170,15 @@ class PlacementRuntime:
                 try:
                     if force_walk:
                         eng.columnar = False
+                    self._pre_place(chunk)
                     self._snapshot_horizons()
                     decisions = eng.place_many(
                         chunk, edge_queues=self.edge_queues)
                 finally:
                     eng.columnar = was_columnar
-                arena.append(self._execute_decisions(chunk, decisions))
+                recs = self._execute_decisions(chunk, decisions)
+                arena.append(recs)
+                self._post_execute(recs)
                 stats["chunks"] += 1
                 stats["n"] += m
                 cs = eng.columnar_stats
@@ -1176,10 +1231,13 @@ class PlacementRuntime:
         ``serve(batched=True)`` — asserted in tests; backends without an
         ``execute_async`` driver serve the same plan synchronously.
         """
+        self._pre_place(tasks)
         self._snapshot_horizons()
         decisions = self.engine.place_many(tasks, edge_queues=self.edge_queues)
         run = getattr(self.backend, "execute_async", None)
-        if run is None or (self._failure_aware
+        reclaiming = (self.overload is not None
+                      and self.overload.reclamation is not None)
+        if run is None or ((self._failure_aware or reclaiming)
                            and isinstance(decisions, DecisionBatch)):
             # the failure-aware driver issues the identical dispatch rounds
             # from every serve path (the twin's async driver routes faulted
@@ -1195,6 +1253,7 @@ class PlacementRuntime:
                       for t, d, o in zip(tasks, decisions, eb)]
         else:
             records = self._race_decisions(tasks, decisions, run)
+        self._post_execute(records)
         return self.result(records)
 
     def _race_decisions(self, tasks: list[TaskInput], decisions,
@@ -1293,7 +1352,8 @@ class PlacementRuntime:
         per-record path unchanged.
         """
         if isinstance(decisions, DecisionBatch):
-            if self._failure_aware:
+            if self._failure_aware or (self.overload is not None and
+                                       self.overload.reclamation is not None):
                 return self._execute_failure_aware(tasks, decisions)
             if hasattr(self.backend, "execute_many"):
                 eb = self.backend.execute_many(
@@ -1312,12 +1372,103 @@ class PlacementRuntime:
         outcomes = self.backend.execute_many(d_tasks, d_targets)
         return self._merge_hedged_outcomes(tasks, decisions, outcomes)
 
+    # ------------------------------------------------- overload survival
+    def _pre_place(self, tasks) -> None:
+        """Predictive pre-warming hook, called right before each placement
+        pass (per chunk on the streaming path): feed the chunk's arrival
+        gaps to the burst forecaster and spawn warm containers for every
+        trigger it fires. Runs BEFORE ``place_many`` so the prewarmed pool
+        is visible to the Predictor's warm/cold split for every row whose
+        arrival falls inside a keep-alive window (earlier rows see the
+        container as still spinning up — ``busy_until`` in the future — and
+        are unaffected, so spawn position inside the batch doesn't matter).
+        No-op unless pre-warming is armed."""
+        ov = self.overload
+        if ov is None or ov.prewarm is None or len(tasks) == 0:
+            return
+        _, arrivals, _, _ = task_arrays(tasks, "a")
+        ov.reap_prewarms(float(arrivals[0]))
+        for t in ov.feed_arrivals(arrivals):
+            self._spawn_prewarm(t)
+
+    def _spawn_prewarm(self, trigger_ms: float) -> None:
+        """Spawn ``count`` keep-alive containers per target for one burst
+        trigger: CIL record (client-side shadow), ground-truth spinup (twin
+        backends), and the idle-retainer debit from the Alg. 1 surplus bank
+        — billed exactly once per container, at spawn. Keep-alive extensions
+        (``_post_execute``) ride the same retainer and are not re-billed."""
+        ov = self.overload
+        pw = ov.prewarm
+        eng = self.engine
+        predictor = eng.predictor
+        targets = pw.targets if pw.targets is not None \
+            else tuple(t.name for t in predictor.cloud_targets)
+        spin = pw.spinup_ms
+        if spin is None:
+            spec = getattr(getattr(self.backend, "twin", None), "spec", None)
+            spin = float(spec.cold_mean) if spec is not None else 250.0
+        ready = trigger_ms + spin
+        expires = ready + pw.keepalive_ms
+        pol = eng.policy
+        gt = getattr(self.backend, "gt_cloud", None)
+        pricing = getattr(self.backend, "pricing", None)
+        for nm in targets:
+            cost = 0.0
+            if pricing is not None:
+                try:
+                    # the retainer: billed occupancy over spinup + keep-alive
+                    cost = float(pricing.cost(spin + pw.keepalive_ms,
+                                              float(nm)))
+                except (TypeError, ValueError):
+                    cost = 0.0  # non-numeric config names price as free
+            for _ in range(pw.count):
+                rec = predictor.prewarm(nm, ready, expires)
+                if gt is not None:
+                    gt.spinup(nm, ready, expires)
+                if hasattr(pol, "surplus"):
+                    pol.surplus -= cost
+                ov.record_spawn(trigger_ms, nm, ready, expires, cost, rec)
+
+    def _post_execute(self, records) -> None:
+        """Completion-stream keep-alive hook, called after each execution
+        round: while the forecaster still sees the burst regime, push the
+        keep-alive expiry of every still-unused prewarmed container out to
+        (latest completion + keepalive_ms). Unbilled — the spawn-time
+        retainer covers extensions (documented pricing simplification)."""
+        ov = self.overload
+        if ov is None or ov.prewarm is None or not ov.active_prewarms:
+            return
+        fc = ov.forecaster
+        if fc is None or not fc.in_burst:
+            return
+        comp = records.completion_ms if isinstance(records, RecordBatch) \
+            else np.array([r.completion_ms for r in records])
+        if comp.size == 0:
+            return
+        new_exp = float(np.max(comp)) + ov.prewarm.keepalive_ms
+        gt = getattr(self.backend, "gt_cloud", None)
+        t_idl = self.engine.predictor.cil.t_idl_ms
+        for e in ov.active_prewarms:
+            if new_exp <= e.expires_ms:
+                continue
+            if e.cil_rec.busy_until != e.ready_ms:
+                continue  # reused: the normal lifecycle owns it now
+            e.cil_rec.last_completion = new_exp - t_idl
+            if gt is not None:
+                gt.extend_keepalive(e.target, e.ready_ms, e.expires_ms,
+                                    new_exp)
+            e.expires_ms = new_exp
+            ov.n_extensions += 1
+
     # ------------------------------------------------- failure-aware serving
     def _snapshot_horizons(self) -> None:
         """Snapshot the predicted edge horizons right before ``place_many``
-        so an admission shed can unwind the queue pushes its placements made
-        (``_rollback_shed``). No-op unless admission control is configured."""
-        if self.admission is not None:
+        so an admission shed (or a reclamation preemption) can unwind the
+        queue pushes its placements made (``_rollback_shed``). No-op unless
+        admission control or reclamation is configured."""
+        if self.admission is not None or (
+                self.overload is not None
+                and self.overload.reclamation is not None):
             self._pre_horizons = {
                 n: q.horizon_ms for n, q in self.edge_queues.items()}
 
@@ -1464,8 +1615,44 @@ class PlacementRuntime:
         shed = np.zeros(n, dtype=bool)
         if self.admission is not None:
             shed = self.admission.shed_mask(tiers, d.latency_ms)
-            if shed.any():
-                self._rollback_shed(tasks, d, shed)
+
+        # --- fair-share reclamation (see ``repro.core.overload``): when a
+        # device's tier-0 predictions blow their deadline headroom, preempt
+        # lower-tier rows already placed on it. Shed and victim placements
+        # unwind in ONE combined rollback (victims are always edge rows, so
+        # no CIL state is involved), then each victim re-places at its own
+        # arrival time with its device masked (``_replace_victims``).
+        recl = self.overload.reclamation if self.overload is not None else None
+        downgraded = np.zeros(n, dtype=bool)
+        pred_lat, pred_cost, pred_cold = d.latency_ms, d.cost, d.cold
+        moved_any = False
+        victims = np.zeros(0, dtype=np.int64)
+        if recl is not None:
+            tiers = np.asarray(tiers, dtype=np.int64).copy()
+            victims = select_victims(
+                recl, codes=codes, tier=tiers, latency_ms=d.latency_ms,
+                comp_ms=d.comp_ms, active=~shed, n_cloud=d.n_cloud,
+                n_targets=len(names))
+        vict = np.zeros(n, dtype=bool)
+        vict[victims] = True
+        rollback = shed | vict
+        if rollback.any():
+            self._rollback_shed(tasks, d, rollback)
+        if victims.size:
+            codes = codes.copy()
+            pred_lat = pred_lat.copy()
+            pred_cost = pred_cost.copy()
+            pred_cold = pred_cold.copy()
+            comp = d.comp_ms.astype(np.float64, copy=True)
+            moved_any = self._replace_victims(
+                tasks, d, victims, recl, codes, tiers, downgraded,
+                pred_lat, pred_cost, pred_cold, comp, arrivals)
+            # exactness: a victim push appended after the survivor replay
+            # escapes the max(horizon, t) drain-resets its in-order push
+            # was subject to, so rebuild the horizons with one event-ordered
+            # replay of the FINAL assignment — bit-identical to a fresh
+            # placement pass over it.
+            self._replay_final_pushes(d, shed, codes, comp, arrivals)
 
         # final per-row outcome columns; shed rows keep the zeroed defaults
         # (bill nothing, complete at arrival, zero attempts)
@@ -1502,11 +1689,16 @@ class PlacementRuntime:
         skip = shed | blocked
         live = np.nonzero(~skip)[0]
         eb = None
-        if live.size == n:
+        if live.size == n and not moved_any:
             eb = self._dispatch_rows(
                 tasks, d
                 if getattr(self.backend, "accepts_decision_batch", False)
                 else d.target_list())
+        elif live.size == n:
+            # a victim moved off its device: same full-batch dispatch, but
+            # through the revised target list (d's codes are stale)
+            eb = self._dispatch_rows(
+                tasks, [names[int(c)] for c in codes.tolist()])
         elif live.size:
             sub_tasks = [tasks[int(i)] for i in live]
             sub_targets = [names[int(codes[i])] for i in live]
@@ -1592,11 +1784,11 @@ class PlacementRuntime:
             tasks=tasks,
             target_codes=f_code,
             target_names=names,
-            predicted_latency_ms=d.latency_ms,
-            predicted_cost=d.cost,
+            predicted_latency_ms=pred_lat,
+            predicted_cost=pred_cost,
             actual_latency_ms=f_lat,
             actual_cost=f_cost,
-            predicted_cold=d.cold,
+            predicted_cold=pred_cold,
             actual_cold=f_cold,
             allowed_cost=d.allowed_cost,
             feasible=d.feasible,
@@ -1611,7 +1803,108 @@ class PlacementRuntime:
             failed=f_fail,
             attempts=f_att,
             tier=tiers,
+            downgraded=downgraded,
         )
+
+    def _replace_victims(self, tasks, d: DecisionBatch, victims: np.ndarray,
+                         recl: ReclamationPolicy, codes: np.ndarray,
+                         tiers: np.ndarray, downgraded: np.ndarray,
+                         pred_lat: np.ndarray, pred_cost: np.ndarray,
+                         pred_cold: np.ndarray, comp: np.ndarray,
+                         arrivals) -> bool:
+        """Re-place reclamation victims at their own arrival times, oldest
+        first (PREEMPT events on the virtual-clock heap — ordered after any
+        same-instant arrival), through the same masked ``failover_choice``
+        path failovers use. Accounting is observe-style, NOT the failover
+        debit: a victim executes exactly once, so its new placement banks
+        ``c_max − cost`` exactly as a fresh placement would — the combined
+        rollback already removed the old contribution, so surplus state ends
+        exactly re-debited. A victim with every alternative excluded is kept
+        in place (its original placement re-applied verbatim) and demoted
+        one SLO class unconditionally — the platform owes it nothing at its
+        old class; a moved victim is demoted only when the new placement
+        blows its old tier's deadline headroom. Returns True when any
+        victim actually moved (the round-0 fast path must then rebuild its
+        target list). Mutates ``codes`` / ``tiers`` / ``downgraded`` /
+        ``pred_*`` in place and appends to the manager's ``reclaim_log``."""
+        eng = self.engine
+        pol = eng.policy
+        names = d.names
+        code_of = {nm: c for c, nm in enumerate(names)}
+        health = self.health
+        ov = self.overload
+        nt = len(recl.tiers)
+        banks = hasattr(pol, "surplus") and hasattr(pol, "c_max")
+        heap = EventHeap()
+        for i in victims.tolist():
+            heap.push(float(arrivals[i]), PREEMPT, i)
+        moved_any = False
+        for ev in heap.drain():
+            i = ev.payload
+            t0 = ev.time_ms
+            src = names[int(codes[i])]
+            old_tier = int(tiers[i])
+            waits = {nm: q.wait_ms(t0) for nm, q in self.edge_queues.items()}
+            preds = eng.predictor.predict(tasks[i], t0, edge_waits=waits)
+            exclude = {src}
+            if health is not None:
+                for nm in preds:
+                    if nm not in exclude and health.would_fail_fast(nm, t0):
+                        exclude.add(nm)
+            choice = failover_choice(pol, preds, exclude, self.edge_names,
+                                     waits)
+            if choice is not None:
+                nm, pred = choice
+                if banks:
+                    pol.surplus += pol.c_max - pred.cost
+                eng.predictor.update_cil(nm, t0, pred)
+                if nm in self.edge_queues:
+                    self.edge_queues[nm].push(t0, pred.comp_ms)
+                codes[i] = code_of.get(nm, codes[i])
+                pred_lat[i] = pred.latency_ms
+                pred_cost[i] = pred.cost
+                pred_cold[i] = pred.cold
+                comp[i] = pred.comp_ms
+                moved = True
+                moved_any = True
+                demote = pred.latency_ms \
+                    > recl.deadline_of(old_tier) * recl.headroom
+            else:
+                if banks:
+                    pol.surplus += pol.c_max - float(d.cost[i])
+                if src in self.edge_queues:
+                    self.edge_queues[src].push(t0, float(d.comp_ms[i]))
+                nm = src
+                moved = False
+                demote = True
+            if demote:
+                tiers[i] = min(old_tier + 1, nt - 1)
+            downgraded[i] = tiers[i] != old_tier
+            ov.reclaim_log.append(
+                (t0, int(d.task_idx[i]), src, nm, old_tier, int(tiers[i]),
+                 moved, bool(downgraded[i])))
+        return moved_any
+
+    def _replay_final_pushes(self, d: DecisionBatch, shed: np.ndarray,
+                             codes: np.ndarray, comp: np.ndarray,
+                             arrivals) -> None:
+        """Reset the predicted edge horizons to the pre-placement snapshot
+        and replay the final assignment's edge pushes in arrival order —
+        the horizons a single fresh placement pass over the post-reclamation
+        assignment would have left. (The intermediate per-victim pushes in
+        ``_replace_victims`` only shape the waits later victims predict
+        against; this pass owns the state that crosses into the next chunk.)
+        """
+        if self._pre_horizons is None:
+            return
+        for name, q in self.edge_queues.items():
+            if name in self._pre_horizons:
+                q.horizon_ms = self._pre_horizons[name]
+        replay = np.nonzero(~shed & (codes >= d.n_cloud))[0]
+        for i in replay.tolist():
+            q = self.edge_queues.get(d.names[int(codes[i])])
+            if q is not None:
+                q.push(float(arrivals[i]), float(comp[i]))
 
     def _record_batch(self, tasks: list[TaskInput], d: DecisionBatch,
                       eb: ExecutionBatch) -> RecordBatch:

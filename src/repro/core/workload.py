@@ -56,6 +56,11 @@ class TaskChunk(Sequence):
     size: np.ndarray        # (n,) float64
     bytes: np.ndarray       # (n,) float64
     tier: np.ndarray | None = None  # (n,) int64 SLO class; None = all tier 0
+    # arrival-regime ground truth (``BurstyWorkload.chunks``): True where the
+    # MMPP phase walk was in its burst phase — what ``generate`` carries as
+    # ``meta["burst"]``, columnar so forecaster tests have per-task truth at
+    # any chunk size. None = untracked (Poisson sources, hand-built chunks).
+    burst: np.ndarray | None = None  # (n,) bool
 
     @classmethod
     def from_tasks(cls, tasks: Sequence[TaskInput]) -> "TaskChunk":
@@ -84,10 +89,13 @@ class TaskChunk(Sequence):
         if isinstance(i, slice):
             return TaskChunk(idx=self.idx[i], arrival_ms=self.arrival_ms[i],
                              size=self.size[i], bytes=self.bytes[i],
-                             tier=None if self.tier is None else self.tier[i])
+                             tier=None if self.tier is None else self.tier[i],
+                             burst=None if self.burst is None else self.burst[i])
         i = int(i)
         return TaskInput(idx=int(self.idx[i]), arrival_ms=float(self.arrival_ms[i]),
                          size=float(self.size[i]), bytes=float(self.bytes[i]),
+                         meta={"burst": bool(self.burst[i])}
+                         if self.burst is not None else {},
                          tier=int(self.tier[i]) if self.tier is not None else 0)
 
     def __iter__(self) -> Iterator[TaskInput]:
@@ -253,9 +261,11 @@ class BurstyWorkload:
 
     def chunks(self, n: int, chunk_size: int = 65536) -> Iterator[TaskChunk]:
         """Stream the workload as ``TaskChunk``s — the identical scalar phase
-        walk as ``generate`` (bit-identical arrivals/sizes; the per-task
-        ``meta['burst']`` flag is the one field a chunk does not carry),
-        retaining O(chunk) tasks at a time."""
+        walk as ``generate`` (bit-identical arrivals/sizes), retaining
+        O(chunk) tasks at a time. Each chunk carries the per-task regime
+        flag ``generate`` puts in ``meta['burst']`` as its columnar
+        ``burst`` array, so burst-forecaster tests have ground truth at any
+        chunk size."""
         walk = self._walk(n)
         done = 0
         while done < n:
@@ -263,8 +273,10 @@ class BurstyWorkload:
             arrivals = np.empty(m)
             sizes = np.empty(m)
             nbytes = np.empty(m)
+            burst = np.empty(m, dtype=bool)
             for j in range(m):
-                arrivals[j], sizes[j], nbytes[j], _ = next(walk)
+                arrivals[j], sizes[j], nbytes[j], burst[j] = next(walk)
             yield TaskChunk(idx=np.arange(done, done + m, dtype=np.int64),
-                            arrival_ms=arrivals, size=sizes, bytes=nbytes)
+                            arrival_ms=arrivals, size=sizes, bytes=nbytes,
+                            burst=burst)
             done += m

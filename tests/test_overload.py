@@ -1,0 +1,505 @@
+"""Overload survival: predictive pre-warming + fair-share reclamation (ISSUE 10).
+
+Covers:
+- policy construction validation: ``PrewarmPolicy`` / ``ReclamationPolicy``
+  knobs, the strictly-decreasing tier-deadline ordering (shared with
+  ``AdmissionPolicy``), and the NaN-proofed ``RetryPolicy`` bounds;
+- the burst forecaster: chunking-invariance of the scalar fold (the property
+  the cross-path schedule-identity contract rests on), MMPP burst detection
+  against ``TaskChunk.burst`` ground truth, trigger cooldown;
+- ``BurstyWorkload.chunks`` carrying the phase flag columnarly, matching
+  ``generate``'s per-task ``meta['burst']`` bit for bit;
+- the CIL prewarm encoding: warm exactly over [ready, keepalive_until];
+- accounting invariants: every prewarmed container billed exactly once at
+  spawn (keep-alive extensions unbilled), kept-in-place preemption rollback
+  leaving surplus / horizons / records exactly as the reclamation-off run;
+- schedule identity: fixed seed reproduces the identical prewarm / preempt /
+  downgrade schedule across runs and across serve / serve_async /
+  serve_stream;
+- the off/idle parity guarantee: overload armed but never firing is
+  bit-identical per record to the plain runtime on every serve path and
+  chunking — plus the hypothesis property over random chunkings;
+- ``select_victims`` fair-share semantics as a pure function;
+- ``downgraded`` as a first-class ``RecordBatch`` column.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:  # gated, not required: the container may not ship it
+    HAVE_HYPOTHESIS = False
+
+from repro.core.decision import DecisionEngine, MinCostPolicy, MinLatencyPolicy
+from repro.core.faults import (
+    AdmissionPolicy,
+    FaultError,
+    RetryPolicy,
+    SLOTier,
+)
+from repro.core.cil import ContainerInfoList
+from repro.core.fit import build_fleet_predictor, fit_app
+from repro.core.overload import (
+    BurstForecaster,
+    OverloadManager,
+    PrewarmPolicy,
+    ReclamationPolicy,
+    select_victims,
+)
+from repro.core.records import RecordBatch, SimulationResult, TaskRecord
+from repro.core.runtime import PlacementRuntime, TwinBackend
+from repro.core.workload import BurstyWorkload, TaskInput
+
+
+def _rec(i, completion_ms, downgraded=False):
+    return TaskRecord(task=TaskInput(idx=i, arrival_ms=float(i), size=1.0,
+                                     bytes=1.0),
+                      target="1792", predicted_latency_ms=1.0,
+                      predicted_cost=0.0, actual_latency_ms=1.0,
+                      actual_cost=0.0, predicted_cold=False,
+                      actual_cold=False, allowed_cost=0.0, feasible=True,
+                      completion_ms=completion_ms, downgraded=downgraded)
+
+CONFIGS = (1280, 1536, 1792)
+FLEET3 = {"edge0": 1.0, "edge1": 1.0, "edge2": 0.6}
+
+RECORD_COLS = ("actual_latency_ms", "actual_cost", "completion_ms",
+               "target_codes", "queue_wait_ms", "exec_ms", "predicted_cost",
+               "predicted_latency_ms", "attempts", "failed", "shed",
+               "downgraded", "tier")
+
+
+@pytest.fixture(scope="module")
+def fd_setup():
+    return fit_app("FD", seed=0, n_inputs=120, configs=CONFIGS)
+
+
+def _runtime(twin, models, fleet, policy=None, prewarm=None, reclamation=None,
+             seed=11):
+    pred = build_fleet_predictor(models, dict(fleet), configs=CONFIGS)
+    policy = policy or MinLatencyPolicy(c_max=2.97e-5, alpha=0.02)
+    eng = DecisionEngine(predictor=pred, policy=policy)
+    backend = TwinBackend(twin, seed=seed, edge_names=tuple(fleet),
+                          edge_speed=dict(fleet))
+    return PlacementRuntime(eng, backend, prewarm=prewarm,
+                            reclamation=reclamation)
+
+
+def _bursty_tasks(twin, n=400, seed=3, n_tiers=0):
+    wl = BurstyWorkload(rate_per_s=2.0, size_sampler=twin.sample_input,
+                        burst_multiplier=20.0, mean_quiet_s=20.0,
+                        mean_burst_s=5.0, seed=seed)
+    tasks = wl.generate(n)
+    if n_tiers:
+        for i, t in enumerate(tasks):
+            t.tier = i % n_tiers
+    return tasks
+
+
+def _assert_records_equal(a, b, cols=RECORD_COLS):
+    for col in cols:
+        assert np.array_equal(getattr(a.records, col),
+                              getattr(b.records, col)), col
+
+
+PRESSURE_TIERS = (SLOTier(3000.0, sheddable=False), SLOTier(2500.0),
+                  SLOTier(2000.0))
+
+
+def _pressure_runtime(twin, models, **kw):
+    """MinCost over the 3-device fleet under a 20x burst backlogs the edge
+    queues far past the tier-0 deadline — the reclamation trigger scenario."""
+    return _runtime(twin, models, FLEET3,
+                    policy=MinCostPolicy(deadline_ms=3000.0), **kw)
+
+
+# ---------------------------------------------------------- policy validation
+def test_prewarm_policy_validation():
+    for kw in (dict(count=0), dict(keepalive_ms=0.0),
+               dict(keepalive_ms=float("nan")), dict(spinup_ms=-1.0),
+               dict(alpha=0.0), dict(alpha=1.5), dict(baseline_alpha=-0.1),
+               dict(ratio=1.0), dict(ratio=float("inf")),
+               dict(exit_ratio=0.5), dict(exit_ratio=3.0, ratio=3.0),
+               dict(min_gaps=0), dict(cooldown_ms=-1.0)):
+        with pytest.raises(FaultError):
+            PrewarmPolicy(**kw)
+    assert PrewarmPolicy(targets=["1792"]).targets == ("1792",)
+
+
+def test_reclamation_policy_validation():
+    two = (SLOTier(100.0, sheddable=False), SLOTier(50.0))
+    with pytest.raises(FaultError, match="at least two"):
+        ReclamationPolicy(tiers=(SLOTier(100.0),), shares=(1.0,))
+    with pytest.raises(FaultError, match="one weight per tier"):
+        ReclamationPolicy(tiers=two, shares=(1.0,))
+    with pytest.raises(FaultError, match=r"shares\[1\]"):
+        ReclamationPolicy(tiers=two, shares=(1.0, 0.0))
+    with pytest.raises(FaultError, match="headroom"):
+        ReclamationPolicy(tiers=two, shares=(1.0, 1.0), headroom=0.0)
+    with pytest.raises(FaultError, match=r"tiers\[1\]\.deadline_ms"):
+        ReclamationPolicy(tiers=(SLOTier(50.0), SLOTier(100.0)),
+                          shares=(1.0, 1.0))
+    pol = ReclamationPolicy(tiers=two, shares=(3, 1))
+    assert pol.shares == (3.0, 1.0)
+    assert pol.deadline_of(0) == 100.0
+    assert pol.deadline_of(99) == 50.0  # clipped to the last class
+
+
+def test_admission_tier_ordering_validated():
+    """Satellite: AdmissionPolicy rejects non-decreasing deadline tables with
+    the offending tier indexed (lower classes must degrade first)."""
+    with pytest.raises(FaultError, match=r"tiers\[1\]\.deadline_ms"):
+        AdmissionPolicy(tiers=(SLOTier(50.0), SLOTier(100.0)))
+    with pytest.raises(FaultError, match=r"tiers\[2\]"):
+        AdmissionPolicy(tiers=(SLOTier(100.0), SLOTier(50.0), SLOTier(50.0)))
+    AdmissionPolicy(tiers=(SLOTier(100.0), SLOTier(50.0)))  # decreasing: ok
+
+
+def test_retry_policy_nan_rejected():
+    for kw in (dict(backoff_ms=float("nan")), dict(backoff_mult=float("nan")),
+               dict(timeout_ms=float("nan")), dict(backoff_ms=float("inf"))):
+        with pytest.raises(FaultError):
+            RetryPolicy(**kw)
+    assert RetryPolicy(timeout_ms=float("inf")).timeout_ms == float("inf")
+
+
+def test_overload_manager_requires_a_policy():
+    with pytest.raises(FaultError, match="needs a PrewarmPolicy"):
+        OverloadManager()
+
+
+# ------------------------------------------------------------ CIL encoding
+def test_cil_prewarm_window():
+    cil = ContainerInfoList(t_idl_ms=27 * 60 * 1000.0)
+    with pytest.raises(ValueError, match="keepalive"):
+        cil.prewarm("1792", 1000.0, 1000.0)
+    cil.prewarm("1792", 1000.0, 61000.0)
+    assert not cil.will_warm_start("1792", 999.0)     # still spinning up
+    assert cil.will_warm_start("1792", 1000.0)        # warm at ready
+    assert cil.will_warm_start("1792", 61000.0)       # warm through expiry
+    assert not cil.will_warm_start("1792", 61000.1)   # gone after
+    assert not cil.will_warm_start("1536", 30000.0)   # other configs unwarmed
+
+
+def test_predictor_prewarm_rejects_unknown_targets(fd_setup):
+    twin, models = fd_setup
+    pred = build_fleet_predictor(models, dict(FLEET3), configs=CONFIGS)
+    with pytest.raises(KeyError):
+        pred.prewarm("4096", 0.0, 1000.0)     # not a cloud config
+    with pytest.raises(KeyError):
+        pred.prewarm("edge0", 0.0, 1000.0)    # fleet devices have no CIL
+    pred.prewarm("1792", 0.0, 1000.0)
+    assert pred.cil.will_warm_start("1792", 500.0)
+
+
+# -------------------------------------------------------------- forecaster
+def _two_burst_arrivals():
+    """Deterministic quiet/burst/quiet/burst arrival times (ms)."""
+    t, out = 0.0, []
+    for gap in ([1000.0] * 30 + [20.0] * 60 + [1000.0] * 40 + [20.0] * 60):
+        t += gap
+        out.append(t)
+    return np.array(out)
+
+
+def test_forecaster_chunk_invariance():
+    arrivals = _two_burst_arrivals()
+    whole = BurstForecaster()
+    triggers_whole = whole.feed(arrivals)
+    assert len(triggers_whole) == 2  # one spawn per quiet->burst transition
+
+    def state(f):
+        return (f.last_t, f.fast, f.slow, f.n_gaps, f.in_burst,
+                f.last_spawn, f.n_triggers)
+
+    # one arrival at a time
+    single = BurstForecaster()
+    triggers_single = [t for a in arrivals for t in single.feed([a])]
+    assert triggers_single == triggers_whole
+    assert state(single) == state(whole)
+
+    # random chunk boundaries
+    rng = np.random.default_rng(0)
+    for _ in range(5):
+        cuts = np.sort(rng.choice(len(arrivals), size=7, replace=False))
+        chunked = BurstForecaster()
+        got = [t for part in np.split(arrivals, cuts)
+               for t in chunked.feed(part)]
+        assert got == triggers_whole
+        assert state(chunked) == state(whole)
+
+
+def test_forecaster_cooldown_rate_limits_triggers():
+    arrivals = _two_burst_arrivals()
+    # burst onsets are ~70 s apart; a 100 s cooldown swallows the second
+    lazy = BurstForecaster(cooldown_ms=100_000.0)
+    assert len(lazy.feed(arrivals)) == 1
+    assert lazy.n_triggers == 1
+
+
+def test_forecaster_detects_mmpp_bursts(fd_setup):
+    """Triggers fire inside ground-truth burst phases of the MMPP source
+    (``TaskChunk.burst`` is the phase flag at each arrival)."""
+    twin, _ = fd_setup
+    wl = BurstyWorkload(rate_per_s=2.0, size_sampler=twin.sample_input,
+                        burst_multiplier=20.0, seed=3)
+    arrivals, flags = [], {}
+    for chunk in wl.chunks(600, chunk_size=128):
+        arrivals.append(chunk.arrival_ms)
+        for t, b in zip(chunk.arrival_ms.tolist(), chunk.burst.tolist()):
+            flags[t] = b
+    fc = BurstForecaster()
+    triggers = [t for a in arrivals for t in fc.feed(a)]
+    assert len(triggers) >= 1
+    in_burst = [flags[t] for t in triggers]
+    assert sum(in_burst) >= len(in_burst) / 2  # detector lags a few arrivals
+
+
+def test_chunks_burst_column_matches_generate(fd_setup):
+    twin, _ = fd_setup
+    wl = BurstyWorkload(rate_per_s=2.0, size_sampler=twin.sample_input,
+                        burst_multiplier=20.0, seed=7)
+    tasks = wl.generate(300)
+    want = np.array([t.meta["burst"] for t in tasks])
+    assert want.any() and not want.all()
+    got = np.concatenate([c.burst for c in wl.chunks(300, chunk_size=64)])
+    assert np.array_equal(got, want)
+    # slicing and scalar materialization carry the flag
+    chunk = next(iter(wl.chunks(300, chunk_size=64)))
+    sub = chunk[10:20]
+    assert np.array_equal(sub.burst, chunk.burst[10:20])
+    assert sub[3].meta["burst"] == bool(chunk.burst[13])
+
+
+# ----------------------------------------------------- select_victims (pure)
+def test_select_victims_fair_share_semantics():
+    pol = ReclamationPolicy(tiers=PRESSURE_TIERS, shares=(2.0, 1.0, 1.0))
+    codes = np.array([1, 1, 1, 1, 1, 1])
+    tier = np.array([0, 2, 2, 1, 0, 2])
+    lat = np.array([100.0, 0.0, 0.0, 0.0, 3500.0, 0.0])
+    comp = np.array([50.0, 30.0, 30.0, 40.0, 50.0, 30.0])
+    active = np.ones(6, dtype=bool)
+    v = select_victims(pol, codes=codes, tier=tier, latency_ms=lat,
+                       comp_ms=comp, active=active, n_cloud=1, n_targets=2)
+    # tier-2 compute on the device is 90 ms against a fair share of
+    # 0.25 * 230 = 57.5 ms -> only ~32.5 ms reclaimable: the earliest tier-2
+    # row goes, the rest is protected; tier-1 (40 ms < its 57.5 ms share)
+    # is untouchable; row 5 sits behind the pressure point and never
+    # eligible; tier-0 rows are never victims.
+    assert v.tolist() == [1]
+    # no pressure (tier-0 within deadline) -> no victims
+    calm = select_victims(pol, codes=codes, tier=tier,
+                          latency_ms=np.full(6, 100.0), comp_ms=comp,
+                          active=active, n_cloud=1, n_targets=2)
+    assert calm.size == 0
+    # cloud rows (codes < n_cloud) are never scanned
+    cloud = select_victims(pol, codes=np.zeros(6, dtype=np.int64), tier=tier,
+                           latency_ms=lat, comp_ms=comp, active=active,
+                           n_cloud=1, n_targets=2)
+    assert cloud.size == 0
+
+
+# --------------------------------------------------- accounting invariants
+def test_prewarm_billed_exactly_once(fd_setup):
+    twin, models = fd_setup
+    rt = _runtime(twin, models, FLEET3, prewarm=PrewarmPolicy(count=3))
+    pol = rt.engine.policy
+    before = pol.surplus
+    rt._spawn_prewarm(5_000.0)
+    log = rt.overload.prewarm_log
+    assert len(log) == 3 * len(CONFIGS)
+    costs = [e[4] for e in log]
+    assert all(c > 0.0 for c in costs)
+    assert pol.surplus == pytest.approx(before - sum(costs), rel=1e-12)
+    cil = rt.engine.predictor.cil
+    ready = log[0][2]
+    for c in CONFIGS:
+        assert cil.count(str(c)) == 3
+        assert cil.will_warm_start(str(c), ready)
+    # keep-alive extensions ride the spawn-time retainer: unbilled
+    after_spawn = pol.surplus
+    rt.overload.forecaster.in_burst = True
+    rt._post_execute([_rec(0, completion_ms=10 ** 7)])
+    assert rt.overload.n_extensions == len(log)
+    assert pol.surplus == after_spawn
+    assert rt.overload.prewarm_log == log  # the spawn ledger is append-only
+    assert all(e.expires_ms == 10 ** 7 + rt.overload.prewarm.keepalive_ms
+               for e in rt.overload.active_prewarms)
+
+
+def test_prewarm_cuts_cold_starts(fd_setup):
+    twin, models = fd_setup
+    tasks = _bursty_tasks(twin)
+    off = _runtime(twin, models, FLEET3).serve(tasks)
+    rt = _runtime(twin, models, FLEET3, prewarm=PrewarmPolicy(count=4))
+    on = rt.serve(tasks)
+    ov = rt.overload
+    assert ov.forecaster.n_triggers >= 1
+    assert len(ov.prewarm_log) == ov.forecaster.n_triggers * 4 * len(CONFIGS)
+    assert int(on.records.actual_cold.sum()) < int(off.records.actual_cold.sum())
+
+
+def test_kept_in_place_rollback_exactness(fd_setup, monkeypatch):
+    """Every alternative masked -> every victim is forcibly kept in place:
+    the preemption rollback + verbatim re-application must leave surplus,
+    predicted horizons, and every physical record column exactly as the
+    reclamation-off run — only the SLO bookkeeping (tier / downgraded)
+    may move."""
+    twin, models = fd_setup
+    import repro.core.runtime as rt_mod
+    monkeypatch.setattr(rt_mod, "failover_choice", lambda *a, **k: None)
+    tasks = _bursty_tasks(twin, n_tiers=3)
+    recl = ReclamationPolicy(tiers=PRESSURE_TIERS, shares=(2.0, 1.0, 1.0))
+    # MinCost backlogs the fleet via its deadline fallback; MinLatency with a
+    # starved budget goes all-edge AND carries the Alg. 1 surplus bank, so
+    # the surplus leg of the invariant is exercised too.
+    for mk in (lambda: MinCostPolicy(deadline_ms=3000.0),
+               lambda: MinLatencyPolicy(c_max=1e-6, alpha=0.02)):
+        off = _runtime(twin, models, FLEET3, policy=mk())
+        r_off = off.serve(tasks)
+        on = _runtime(twin, models, FLEET3, policy=mk(), reclamation=recl)
+        r_on = on.serve(tasks)
+        log = on.overload.reclaim_log
+        assert len(log) > 0
+        assert all(e[2] == e[3] and not e[6] for e in log)  # kept: dst == src
+        # demoted one class, clipped at the bottom of the table
+        nt = len(PRESSURE_TIERS)
+        assert all(e[5] == min(e[4] + 1, nt - 1) for e in log)
+        assert all(e[7] == (e[5] != e[4]) for e in log)
+        assert any(e[7] for e in log)
+        assert r_on.n_downgraded == sum(e[7] for e in log)
+        # physical outcome bit-identical; only SLO class bookkeeping moved
+        phys = tuple(c for c in RECORD_COLS
+                     if c not in ("downgraded", "tier"))
+        _assert_records_equal(r_off, r_on, cols=phys)
+        if hasattr(on.engine.policy, "surplus"):
+            assert on.engine.policy.surplus == pytest.approx(
+                off.engine.policy.surplus, rel=1e-12)
+        for name in FLEET3:
+            assert on.edge_queues[name].horizon_ms == pytest.approx(
+                off.edge_queues[name].horizon_ms, rel=1e-12)
+
+
+# ------------------------------------------------------- schedule identity
+def test_prewarm_schedule_identity_across_paths(fd_setup):
+    twin, models = fd_setup
+    tasks = _bursty_tasks(twin)
+    pw = PrewarmPolicy(count=2)
+
+    def run(call):
+        rt = _runtime(twin, models, FLEET3, prewarm=pw)
+        res = call(rt)
+        return rt.overload.prewarm_log, res
+
+    log0, r_serve = run(lambda rt: rt.serve(tasks))
+    assert len(log0) > 0
+    log_a, r_async = run(lambda rt: rt.serve_async(tasks))
+    log_s, r_stream = run(
+        lambda rt: rt.serve_stream(tasks, chunk_size=len(tasks)))
+    # the spawn schedule is a pure fold over arrivals: identical across
+    # paths AND chunkings (triggers are arrival times, chunk-invariant)
+    assert log_a == log0 and log_s == log0
+    for cs in (1, 37):
+        log_c, _ = run(lambda rt: rt.serve_stream(tasks, chunk_size=cs))
+        assert log_c == log0
+    # records agree wherever chunk boundaries agree (PR 8's contract)
+    _assert_records_equal(r_serve, r_async)
+    _assert_records_equal(r_serve, r_stream)
+    # and a re-run reproduces everything bit for bit
+    log_r, r_repeat = run(lambda rt: rt.serve(tasks))
+    assert log_r == log0
+    _assert_records_equal(r_serve, r_repeat)
+
+
+def test_reclaim_schedule_identity_across_paths(fd_setup):
+    twin, models = fd_setup
+    tasks = _bursty_tasks(twin, n_tiers=3)
+    recl = ReclamationPolicy(tiers=PRESSURE_TIERS, shares=(2.0, 1.0, 1.0))
+
+    def run(call):
+        rt = _pressure_runtime(twin, models, reclamation=recl)
+        res = call(rt)
+        return rt.overload.reclaim_log, res
+
+    log0, r_serve = run(lambda rt: rt.serve(tasks))
+    assert len(log0) > 0
+    assert any(e[6] for e in log0)  # some victims actually moved
+    assert r_serve.n_downgraded == sum(e[7] for e in log0)
+    assert np.array_equal(np.nonzero(r_serve.records.downgraded)[0],
+                          np.unique([e[1] for e in log0 if e[7]]))
+    log_a, r_async = run(lambda rt: rt.serve_async(tasks))
+    log_s, r_stream = run(
+        lambda rt: rt.serve_stream(tasks, chunk_size=len(tasks)))
+    log_r, r_repeat = run(lambda rt: rt.serve(tasks))
+    assert log_a == log0 and log_s == log0 and log_r == log0
+    _assert_records_equal(r_serve, r_async)
+    _assert_records_equal(r_serve, r_stream)
+    _assert_records_equal(r_serve, r_repeat)
+
+
+# ------------------------------------------------------- off / idle parity
+IDLE_PREWARM = PrewarmPolicy(min_gaps=10 ** 9)  # forecaster never arms
+IDLE_RECLAIM = ReclamationPolicy(                # pressure test never fires
+    tiers=(SLOTier(1e15, sheddable=False), SLOTier(1e12)), shares=(1.0, 1.0))
+
+
+@pytest.mark.parametrize("policy_cls", ["minlat", "mincost"])
+def test_armed_but_idle_bit_parity_all_paths(fd_setup, policy_cls):
+    """Overload configured but never firing must be bit-identical per record
+    to the plain runtime on every serve path — the policies-off guarantee
+    plus the armed-but-quiet guarantee in one."""
+    twin, models = fd_setup
+
+    def pol():
+        if policy_cls == "minlat":
+            return MinLatencyPolicy(c_max=2.97e-5, alpha=0.02)
+        return MinCostPolicy(deadline_ms=4000.0)
+
+    tasks = _bursty_tasks(twin, n=150, n_tiers=2)
+    plain = _runtime(twin, models, FLEET3, policy=pol()).serve(tasks)
+    armed = _runtime(twin, models, FLEET3, policy=pol(),
+                     prewarm=IDLE_PREWARM, reclamation=IDLE_RECLAIM)
+    _assert_records_equal(plain, armed.serve(tasks))
+    assert armed.overload.prewarm_log == []
+    assert armed.overload.reclaim_log == []
+    _assert_records_equal(plain, _runtime(
+        twin, models, FLEET3, policy=pol(), prewarm=IDLE_PREWARM,
+        reclamation=IDLE_RECLAIM).serve_async(tasks))
+    for cs in (1, 37, 4096):
+        _assert_records_equal(plain, _runtime(
+            twin, models, FLEET3, policy=pol(), prewarm=IDLE_PREWARM,
+            reclamation=IDLE_RECLAIM).serve_stream(tasks, chunk_size=cs))
+
+
+if HAVE_HYPOTHESIS:
+    @settings(max_examples=10, deadline=None)
+    @given(seed=st.integers(0, 50), chunk=st.integers(1, 60))
+    def test_idle_parity_property(fd_setup, seed, chunk):
+        twin, models = fd_setup
+        tasks = twin.workload(60, seed=seed)
+        plain = _runtime(twin, models, FLEET3, seed=seed).serve(tasks)
+        armed = _runtime(twin, models, FLEET3, seed=seed,
+                         prewarm=IDLE_PREWARM, reclamation=IDLE_RECLAIM
+                         ).serve_stream(tasks, chunk_size=chunk)
+        _assert_records_equal(plain, armed)
+else:
+    @pytest.mark.skip(reason="hypothesis not installed")
+    def test_idle_parity_property():
+        pass
+
+
+# ----------------------------------------------------------- record column
+def test_downgraded_is_first_class_on_records():
+    recs = [_rec(i, completion_ms=float(i) + 1.0, downgraded=(i % 2 == 1))
+            for i in range(6)]
+    rb = RecordBatch.from_records(recs)
+    assert rb.downgraded.tolist() == [False, True] * 3
+    assert rb[1].downgraded and not rb[0].downgraded
+    assert rb.take(np.array([1, 3, 5])).downgraded.all()
+    res = SimulationResult(records=rb)
+    assert res.n_downgraded == 3
+    assert res.pct_downgraded == pytest.approx(50.0)
